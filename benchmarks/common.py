@@ -1,0 +1,183 @@
+"""Shared benchmark harness: builds the Twitch-/Amazon-stand-in systems
+(train DeepFM on synthetic interactions, extract base/query vectors, build
+the SL2G graph, compute exhaustive ground truth) and provides the
+recall-vs-cost sweep used by every figure reproduction.
+
+Scale note (documented in EXPERIMENTS.md): the container is offline and
+single-core, so Table-1 scales (740k/3.8M items) are stood in for by
+TWITCH_BENCH / AMAZON_BENCH (20k/40k items) from configs/guitar_deepfm.py.
+All *relative* claims (GUITAR vs SL2G evaluation counts, alpha behaviour,
+angle-vs-projection, BEGIN composition) are scale-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import pickle
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.guitar_deepfm import (AMAZON_BENCH, TWITCH_BENCH,
+                                         GuitarExperiment, measure_config)
+from repro.core import (Measure, SearchConfig, brute_force_topk,
+                        deepfm_measure, deepfm_numpy_fns, recall,
+                        search_measure)
+from repro.data import make_interactions
+from repro.graph import GraphIndex, build_l2_graph
+from repro.models import deepfm as deepfm_lib
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "bench_cache")
+
+
+@dataclasses.dataclass
+class BenchSystem:
+    name: str
+    params: dict
+    cfg: deepfm_lib.DeepFMConfig
+    base: np.ndarray
+    queries: np.ndarray
+    graph: GraphIndex
+    true_ids: Dict[int, np.ndarray]   # k -> (Q, k) ground truth
+    # NOTE: the Measure (jit closure) is rebuilt via rebuild_measure() —
+    # closures don't pickle into the bench cache.
+
+
+def build_system(exp: GuitarExperiment, train_steps: int = 60,
+                 ks=(1, 10, 50, 100), seed: int = 0,
+                 cache: bool = True) -> BenchSystem:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    cpath = os.path.join(CACHE_DIR, f"{exp.name}.pkl")
+    if cache and os.path.exists(cpath):
+        with open(cpath, "rb") as f:
+            return pickle.load(f)
+
+    cfg = measure_config(n_users=exp.n_queries, n_items=exp.n_items)
+    params, _ = deepfm_lib.init_model(jax.random.PRNGKey(seed), cfg)
+    data = make_interactions(exp.n_queries, exp.n_items,
+                             n_inter=20 * exp.n_items, seed=seed)
+    params = dict(params)
+    params["users"] = jnp.asarray(data["user_init"][:, :cfg.vec_dim])
+    params["items"] = jnp.asarray(data["item_init"][:, :cfg.vec_dim])
+
+    def loss_fn(p, b):
+        return deepfm_lib.interaction_loss(p, b["u"], b["i"], b["y"], cfg)
+
+    def batch_fn(step):
+        r = np.random.default_rng(step)
+        idx = r.integers(0, data["user_ids"].shape[0], 1024)
+        return {"u": jnp.asarray(data["user_ids"][idx]),
+                "i": jnp.asarray(data["item_ids"][idx]),
+                "y": jnp.asarray(data["labels"][idx])}
+
+    tr = Trainer(loss_fn, params, OptimizerConfig(lr=3e-3, total_steps=train_steps * 2),
+                 TrainerConfig(total_steps=train_steps, ckpt_every=10**9))
+    tr.run(batch_fn)
+    params = {k: np.asarray(v) if not isinstance(v, dict) else
+              jax.tree_util.tree_map(np.asarray, v)
+              for k, v in tr.params.items()}
+
+    base = np.asarray(params["items"], np.float32)
+    queries = np.asarray(params["users"], np.float32)[: exp.n_test_queries]
+    measure = deepfm_measure(params, cfg)
+    graph = build_l2_graph(base, m=exp.m, k_construction=exp.k_construction,
+                           seed=seed)
+    kmax = max(ks)
+    ids, _ = brute_force_topk(measure, jnp.asarray(base), jnp.asarray(queries),
+                              kmax)
+    ids = np.asarray(ids)
+    true_ids = {k: ids[:, :k] for k in ks}
+    sys = BenchSystem(exp.name, params, cfg, base, queries, graph, true_ids)
+    if cache:
+        with open(cpath, "wb") as f:
+            pickle.dump(sys, f)
+    return sys
+
+
+def rebuild_measure(sys: BenchSystem) -> Measure:
+    """Measure objects don't survive pickling of jitted closures cleanly —
+    rebuild from params."""
+    return deepfm_measure(sys.params, sys.cfg)
+
+
+@dataclasses.dataclass
+class SweepPoint:
+    recall: float
+    qps: float
+    total_evals: float     # #NN + 2*#Grad per query (paper's 'Total')
+    n_eval: float
+    n_grad: float
+    ef: int
+    params: dict
+
+
+def run_sweep(sys: BenchSystem, mode: str, k: int, efs=None,
+              alpha: float = 1.01, budget: int = 8, rank_by: str = "angle",
+              graph: Optional[GraphIndex] = None,
+              time_queries: bool = True) -> List[SweepPoint]:
+    """Sweep ef (the paper's k_search) -> (recall, QPS, Total) points."""
+    graph = graph or sys.graph
+    measure = rebuild_measure(sys)
+    efs = efs or [max(k, e) for e in (8, 16, 32, 64, 128, 256)]
+    Q = sys.queries.shape[0]
+    base_j = jnp.asarray(graph.base)
+    nbrs_j = jnp.asarray(graph.neighbors)
+    queries_j = jnp.asarray(sys.queries)
+    entries = jnp.full((Q,), graph.entry, jnp.int32)
+    out = []
+    for ef in efs:
+        cfg = SearchConfig(k=k, ef=ef, budget=budget, alpha=alpha, mode=mode,
+                           rank_by=rank_by)
+        res = search_measure(measure, base_j, nbrs_j, queries_j, entries, cfg)
+        jax.block_until_ready(res.ids)
+        if time_queries:
+            t0 = time.perf_counter()
+            res = search_measure(measure, base_j, nbrs_j, queries_j, entries, cfg)
+            jax.block_until_ready(res.ids)
+            dt = time.perf_counter() - t0
+            qps = Q / dt
+        else:
+            qps = 0.0
+        r = recall(res.ids, jnp.asarray(sys.true_ids[k]))
+        total = float(res.n_eval.mean() + 2.0 * res.n_grad.mean())
+        out.append(SweepPoint(r, qps, total, float(res.n_eval.mean()),
+                              float(res.n_grad.mean()), ef,
+                              {"alpha": alpha, "mode": mode, "rank_by": rank_by}))
+    return out
+
+
+def frontier(points: List[SweepPoint], by: str = "total_evals"
+             ) -> List[SweepPoint]:
+    """Pareto frontier: max recall per cost bucket (paper's bucketing)."""
+    pts = sorted(points, key=lambda p: getattr(p, by))
+    out, best_r = [], -1.0
+    for p in pts:
+        if p.recall > best_r:
+            out.append(p)
+            best_r = p.recall
+    return out
+
+
+def speedup_at_recall(pts_a: List[SweepPoint], pts_b: List[SweepPoint],
+                      level: float, by: str = "total_evals") -> Optional[float]:
+    """cost_b / cost_a at the first point reaching `level` recall
+    (>1 means a is cheaper)."""
+    def cost_at(pts):
+        for p in sorted(pts, key=lambda p: getattr(p, by)):
+            if p.recall >= level:
+                return getattr(p, by)
+        return None
+    ca, cb = cost_at(pts_a), cost_at(pts_b)
+    if ca is None or cb is None:
+        return None
+    return cb / ca
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,44 @@
+"""Fig. 4 reproduction: Recall vs cost for top-1/10/50/100, GUITAR vs SL2G,
+on the Twitch- and Amazon-stand-in datasets.
+
+The paper reports QPS on an i7-5960X; wall-clock on this container is
+dominated by the CPU backend, so the primary axis here is the paper's own
+hardware-independent cost model (Total = #NN + 2·#Grad per query — Table 2's
+accounting, which the paper shows QPS is inversely proportional to). CPU QPS
+is reported alongside for reference.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (build_system, csv_row, frontier, run_sweep,
+                               speedup_at_recall, TWITCH_BENCH, AMAZON_BENCH)
+
+
+def run(datasets=("twitch",), ks=(1, 10, 100), quick: bool = False):
+    rows = []
+    exps = {"twitch": TWITCH_BENCH, "amazon": AMAZON_BENCH}
+    for ds in datasets:
+        sys = build_system(exps[ds])
+        for k in ks:
+            efs = [max(k, e) for e in ((16, 64) if quick else (8, 16, 32, 64, 128, 256))]
+            sl2g = frontier(run_sweep(sys, "sl2g", k, efs=efs))
+            guitar = frontier(run_sweep(sys, "guitar", k, efs=efs))
+            for p in sl2g:
+                rows.append(csv_row(
+                    f"fig4/{ds}/top{k}/sl2g/ef{p.ef}", 1e6 / max(p.qps, 1e-9),
+                    f"recall={p.recall:.3f};total={p.total_evals:.0f}"))
+            for p in guitar:
+                rows.append(csv_row(
+                    f"fig4/{ds}/top{k}/guitar/ef{p.ef}", 1e6 / max(p.qps, 1e-9),
+                    f"recall={p.recall:.3f};total={p.total_evals:.0f}"))
+            for level in (0.8, 0.9):
+                s = speedup_at_recall(guitar, sl2g, level)
+                if s:
+                    rows.append(csv_row(
+                        f"fig4/{ds}/top{k}/speedup@{level:.0%}", 0.0,
+                        f"guitar_total_advantage={s:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,27 @@
+"""Fig. 5 reproduction: tolerance factor alpha in {1.0, 1.01, 1.1, 1.5} for
+the separation-angle strategy (top-1 and top-100)."""
+from __future__ import annotations
+
+from benchmarks.common import build_system, csv_row, frontier, run_sweep, TWITCH_BENCH
+
+
+def run(quick: bool = False):
+    sys = build_system(TWITCH_BENCH)
+    rows = []
+    efs = (16, 64) if quick else (8, 16, 32, 64, 128, 256)
+    for k in (1, 100):
+        for alpha in (1.0, 1.01, 1.1, 1.5):
+            pts = frontier(run_sweep(sys, "guitar", k,
+                                     efs=[max(k, e) for e in efs],
+                                     alpha=alpha))
+            best = max(pts, key=lambda p: p.recall)
+            rows.append(csv_row(
+                f"fig5/twitch/top{k}/alpha{alpha}", 1e6 / max(best.qps, 1e-9),
+                f"best_recall={best.recall:.3f};total={best.total_evals:.0f};"
+                f"evals={best.n_eval:.0f};grads={best.n_grad:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,32 @@
+"""Fig. 6 reproduction: projection-based ranking/pruning (Eq. 4) relative to
+the separation-angle strategy (alpha=1.01 baseline)."""
+from __future__ import annotations
+
+from benchmarks.common import build_system, csv_row, frontier, run_sweep, TWITCH_BENCH
+
+
+def run(quick: bool = False):
+    sys = build_system(TWITCH_BENCH)
+    rows = []
+    efs = (16, 64) if quick else (8, 16, 32, 64, 128, 256)
+    for k in (1, 100):
+        angle = frontier(run_sweep(sys, "guitar", k,
+                                   efs=[max(k, e) for e in efs], alpha=1.01,
+                                   rank_by="angle"))
+        proj = frontier(run_sweep(sys, "guitar", k,
+                                  efs=[max(k, e) for e in efs], alpha=2.0,
+                                  rank_by="projection"))
+        for lvl in (0.5, 0.8, 0.9):
+            a = next((p for p in angle if p.recall >= lvl), None)
+            p_ = next((p for p in proj if p.recall >= lvl), None)
+            if a and p_:
+                rel = a.total_evals / p_.total_evals
+                rows.append(csv_row(
+                    f"fig6/twitch/top{k}/rel_qps@{lvl:.0%}", 0.0,
+                    f"projection_over_angle={rel:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,41 @@
+"""Fig. 7 reproduction: SL2G vs GUITAR vs BEGIN vs GUITAR-BEGIN (the gradient
+pruning composed with the f-aware bipartite-derived index)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (build_system, csv_row, frontier, rebuild_measure,
+                               run_sweep, TWITCH_BENCH)
+from repro.core.begin import build_begin_graph
+
+
+def run(quick: bool = False):
+    sys = build_system(TWITCH_BENCH)
+    measure = rebuild_measure(sys)
+    # BEGIN index: spend offline f evaluations on training queries
+    train_q = np.asarray(sys.params["users"], np.float32)[
+        sys.queries.shape[0]: sys.queries.shape[0] + (128 if quick else 512)]
+    begin_graph = build_begin_graph(measure, sys.base, train_q,
+                                    m=2 * sys.graph.max_degree // 3, top_l=16)
+    rows = []
+    efs = (16, 64) if quick else (8, 16, 32, 64, 128, 256)
+    for k in (1, 100):
+        efs_k = [max(k, e) for e in efs]
+        variants = {
+            "sl2g": run_sweep(sys, "sl2g", k, efs=efs_k),
+            "guitar": run_sweep(sys, "guitar", k, efs=efs_k),
+            "begin": run_sweep(sys, "sl2g", k, efs=efs_k, graph=begin_graph),
+            "guitar-begin": run_sweep(sys, "guitar", k, efs=efs_k,
+                                      graph=begin_graph),
+        }
+        for name, pts in variants.items():
+            best = max(frontier(pts), key=lambda p: p.recall)
+            rows.append(csv_row(
+                f"fig7/twitch/top{k}/{name}", 1e6 / max(best.qps, 1e-9),
+                f"best_recall={best.recall:.3f};total={best.total_evals:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,86 @@
+"""§Roofline: derive the three roofline terms per (arch x shape x mesh) from
+the dry-run artifacts (reports/dryrun/*/*.json).
+
+    compute term    = FLOPs_per_device / peak_FLOPs          (197 TF/s bf16)
+    memory term     = bytes_per_device / HBM_bw              (819 GB/s)
+    collective term = collective_bytes_per_device / link_bw  (~50 GB/s/link)
+
+FLOPs/bytes/collective-bytes come from the trip-count-weighted HLO analysis
+(launch/hlo_analysis.py) — NOT from compiled.cost_analysis(), which counts
+scan bodies once. MODEL_FLOPS is the analytic 6·N·D / 6·N_active·D (or the
+per-family equivalent) recorded by the step builders.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # TPU v5e bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+
+def load_reports(dryrun_dir: str = "reports/dryrun", mesh: str = "single"
+                 ) -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, mesh, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def roofline_row(rep: dict) -> dict:
+    n_dev = rep["n_devices"]
+    hlo = rep["hlo_analysis"]
+    flops_dev = hlo["flops"]
+    # bf16-equivalent bytes: strips the XLA:CPU f32-upcast artifact (TPU runs
+    # the activation path natively in bf16); falls back for older reports
+    bytes_dev = hlo.get("bytes_bf16eq", hlo["bytes_accessed"])
+    coll_dev = hlo["total_collective_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_flops = rep["static_meta"].get("model_flops", 0.0)
+    model_flops_dev = model_flops / n_dev
+    useful = model_flops_dev / flops_dev if flops_dev else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful model flops per second at the bound vs peak
+    mfu_bound = (model_flops_dev / bound) / PEAK_FLOPS if bound > 0 else 0.0
+    return {
+        "arch": rep["arch"], "shape": rep["shape"], "mesh": rep["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": model_flops, "hlo_flops_dev": flops_dev,
+        "useful_flops_ratio": useful, "roofline_fraction": mfu_bound,
+        "temp_gib": rep["memory_analysis"]["temp_bytes"] / 2**30,
+        "args_gib": rep["memory_analysis"]["argument_bytes"] / 2**30,
+        "collective_breakdown": hlo["collective_bytes"],
+    }
+
+
+def run(dryrun_dir: str = "reports/dryrun", mesh: str = "single"):
+    rows = []
+    table = []
+    for rep in load_reports(dryrun_dir, mesh):
+        r = roofline_row(rep)
+        table.append(r)
+        rows.append(
+            f"roofline/{mesh}/{r['arch']}:{r['shape']},0.00,"
+            f"compute={r['t_compute_s']:.3e}s;memory={r['t_memory_s']:.3e}s;"
+            f"collective={r['t_collective_s']:.3e}s;dominant={r['dominant']};"
+            f"useful={r['useful_flops_ratio']:.2f};"
+            f"roofline_frac={r['roofline_fraction']:.3f}")
+    out_path = os.path.join(dryrun_dir, f"roofline_{mesh}.json")
+    if table:
+        with open(out_path, "w") as f:
+            json.dump(table, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

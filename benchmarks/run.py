@@ -1,0 +1,55 @@
+"""Benchmark orchestrator — one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (spec format). Default runs the
+quick profile (single dataset, reduced ef grid) so `python -m benchmarks.run`
+finishes on the single-core container; --full sweeps everything.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig4,fig5,table2,fig6,fig7,roofline,kernels")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (fig4_recall_qps, fig5_alpha, fig6_projection,
+                            fig7_begin, kernels_micro, roofline,
+                            table2_breakdown)
+
+    jobs = [
+        ("fig4", lambda: fig4_recall_qps.run(
+            datasets=("twitch",) if quick else ("twitch", "amazon"),
+            ks=(1, 10) if quick else (1, 10, 50, 100), quick=quick)),
+        ("fig5", lambda: fig5_alpha.run(quick=quick)),
+        ("table2", lambda: table2_breakdown.run(quick=quick)),
+        ("fig6", lambda: fig6_projection.run(quick=quick)),
+        ("fig7", lambda: fig7_begin.run(quick=quick)),
+        ("kernels", lambda: kernels_micro.run(quick=quick)),
+        ("roofline", lambda: roofline.run(mesh="single") + roofline.run(mesh="multi")),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in jobs:
+        if only and name not in only:
+            continue
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.00,ERROR={e!r}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

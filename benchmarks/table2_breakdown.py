@@ -1,0 +1,63 @@
+"""Table 2 reproduction: computation breakdown (#NN, #Grad, Total, relative
+throughput) at matched top-100 recall levels on Twitch, for SL2G and
+GUITAR-{1.0, 1.01, 1.1, 1.5}. Uses the paper-faithful dynamic-set searcher
+(core/faithful.py) so the counters mean exactly what the paper's do."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_system, csv_row, TWITCH_BENCH
+from repro.core import deepfm_numpy_fns, faithful_search_batch, recall
+import jax.numpy as jnp
+
+
+def _counts_at_recall(sys, mode, alpha, target_recalls, k=100,
+                      efs=(100, 128, 192, 256, 384, 512)):
+    """Walk ef upward; record counters at the first ef reaching each level."""
+    score_np, grad_np = deepfm_numpy_fns(sys.params, sys.cfg)
+    out = {}
+    queries = sys.queries[:64]           # faithful searcher is host-side
+    true = jnp.asarray(sys.true_ids[k][:64])
+    for ef in efs:
+        ids, _, st = faithful_search_batch(
+            score_np, grad_np, sys.graph.base, sys.graph.neighbors, queries,
+            sys.graph.entry, k=k, ef=ef, mode=mode, alpha=alpha)
+        r = recall(jnp.asarray(ids), true)
+        q = queries.shape[0]
+        for lvl in target_recalls:
+            if lvl not in out and r >= lvl:
+                out[lvl] = dict(nn=st.n_eval / q, grad=st.n_grad / q,
+                                total=st.total / q, recall=r, ef=ef)
+        if len(out) == len(target_recalls):
+            break
+    return out
+
+
+def run(quick: bool = False):
+    sys = build_system(TWITCH_BENCH)
+    rows = []
+    levels = (0.85, 0.90) if quick else (0.85, 0.90, 0.95)
+    methods = [("sl2g", None)] + [("guitar", a) for a in
+                                  ((1.01,) if quick else (1.0, 1.01, 1.1, 1.5))]
+    table = {}
+    for mode, alpha in methods:
+        name = "SL2G" if mode == "sl2g" else f"GUITAR-{alpha}"
+        got = _counts_at_recall(sys, mode, alpha or 1.01, levels)
+        table[name] = got
+        for lvl, row in got.items():
+            rows.append(csv_row(
+                f"table2/twitch/R{int(lvl*100)}/{name}", 0.0,
+                f"NN={row['nn']:.1f};Grad={row['grad']:.1f};"
+                f"Total={row['total']:.1f};recall={row['recall']:.3f}"))
+    # headline check: GUITAR-1.01 total < SL2G total at each level
+    for lvl in levels:
+        if lvl in table.get("SL2G", {}) and lvl in table.get("GUITAR-1.01", {}):
+            ratio = table["SL2G"][lvl]["total"] / table["GUITAR-1.01"][lvl]["total"]
+            rows.append(csv_row(f"table2/twitch/R{int(lvl*100)}/advantage", 0.0,
+                                f"sl2g_over_guitar={ratio:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

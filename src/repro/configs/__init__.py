@@ -1,0 +1,6 @@
+"""Architecture config registry. Import side effect registers all archs."""
+from repro.configs.base import ArchDef, ShapeSpec, get_arch, list_archs, register  # noqa: F401
+from repro.configs import (  # noqa: F401
+    bert4rec, bst, command_r_plus_104b, dcn_v2, deepseek_v3_671b, dlrm_rm2,
+    gin_tu, granite_moe_3b_a800m, guitar_deepfm, starcoder2_3b, yi_9b,
+)

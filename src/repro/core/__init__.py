@@ -1,0 +1,11 @@
+"""GUITAR core: measures, graph searchers (SL2G / GUITAR / BEGIN), and the
+corpus-sharded distributed search."""
+from repro.core.measures import (  # noqa: F401
+    Measure, deepfm_measure, deepfm_numpy_fns, inner_product_measure,
+    l2_measure, mlp_measure,
+)
+from repro.core.search import (  # noqa: F401
+    SearchConfig, SearchResult, brute_force_topk, recall, search,
+    search_measure,
+)
+from repro.core.faithful import FaithfulStats, faithful_search, faithful_search_batch  # noqa: F401

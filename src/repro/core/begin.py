@@ -1,0 +1,61 @@
+"""BEGIN-style bipartite index [Tan, Zhao, Li; VLDB'21] — adapted.
+
+BEGIN spends offline neural-measure evaluations to build a *query-aware*
+graph: sample training queries, find each query's top-L items under f, and
+connect items through shared queries. Searching then follows item→query→item
+two-hop paths. To reuse the (single-adjacency) searchers — and to let the
+GUITAR pruning run unchanged on top (the paper's Fig. 7 experiment) — we
+materialize the two-hop structure into an item-item adjacency:
+
+    neighbors(i) = top items of the training queries that ranked i highly,
+                   capped at m by co-rank frequency.
+
+This keeps BEGIN's essential trade (expensive f-aware indexing → better
+search graph) while staying drop-in compatible with both searchers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.measures import Measure
+from repro.core.search import brute_force_topk
+from repro.graph.build import GraphIndex, medoid
+
+
+def build_begin_graph(measure: Measure, base: np.ndarray,
+                      train_queries: np.ndarray, m: int = 48,
+                      top_l: int = 16, seed: int = 0) -> GraphIndex:
+    """base: (N, D); train_queries: (T, Dq). O(T·N) measure evaluations
+    offline (the BEGIN cost the paper notes)."""
+    import jax.numpy as jnp
+
+    base = np.asarray(base, np.float32)
+    n = base.shape[0]
+    top_ids, _ = brute_force_topk(measure, jnp.asarray(base),
+                                  jnp.asarray(train_queries), top_l)
+    top_ids = np.asarray(top_ids)                     # (T, top_l)
+
+    # item -> co-ranked items with counts
+    from collections import defaultdict
+    co: list[defaultdict] = [defaultdict(int) for _ in range(n)]
+    for row in top_ids:
+        for i in row:
+            for j in row:
+                if i != j:
+                    co[int(i)][int(j)] += 1
+
+    neighbors = np.full((n, m), -1, np.int32)
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        if co[i]:
+            items = sorted(co[i].items(), key=lambda kv: -kv[1])[:m]
+            ids = [j for j, _ in items]
+        else:
+            ids = []
+        # backfill isolated items with random links (keeps graph connected-ish)
+        while len(ids) < min(m, 4):
+            r = int(rng.integers(0, n))
+            if r != i and r not in ids:
+                ids.append(r)
+        neighbors[i, : len(ids)] = ids
+    return GraphIndex(neighbors=neighbors, entry=medoid(base), base=base)

@@ -1,0 +1,127 @@
+"""Matching-measure abstraction for fast neural ranking.
+
+A measure is ``(score_fn, params)`` where ``score_fn(params, x, q) -> scalar``
+for a single base vector ``x`` (the ANN corpus lives in x-space) and a single
+query vector ``q``. No metric/convexity/symmetry assumptions (paper Eq. 1).
+The searcher batches via vmap and differentiates via jax.grad — any measure
+expressible in JAX works, from the paper's 40-dim DeepFM to a BST
+cross-encoder.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import deepfm as deepfm_lib
+from repro.models import layers as L
+
+
+ScoreFn = Callable[[Any, jax.Array, jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Measure:
+    """score_fn is static (hashable); params is a pytree traced by jit."""
+    name: str
+    score_fn: ScoreFn
+    params: Any
+
+    def score(self, x: jax.Array, q: jax.Array) -> jax.Array:
+        return self.score_fn(self.params, x, q)
+
+    def score_batch(self, xs: jax.Array, q: jax.Array) -> jax.Array:
+        return jax.vmap(lambda x: self.score_fn(self.params, x, q))(xs)
+
+    def grad_x(self, x: jax.Array, q: jax.Array) -> jax.Array:
+        """-dL/dx = df/dx for L = 1 - f (paper Eq. 2)."""
+        return jax.grad(lambda xx: self.score_fn(self.params, xx, q))(x)
+
+
+# ---------------------------------------------------------------------------
+# Concrete measures
+# ---------------------------------------------------------------------------
+
+def deepfm_measure(params: dict, cfg: deepfm_lib.DeepFMConfig) -> Measure:
+    """The paper's measure. ``params`` must contain the 'mlp' subtree."""
+    mlp_params = {"mlp": params["mlp"]}
+    cfg_static = cfg
+
+    def fn(p, x, q):
+        return deepfm_lib.score(p, x, q, cfg_static)
+
+    return Measure("deepfm", fn, mlp_params)
+
+
+def mlp_measure(key: jax.Array, d_x: int, d_q: int,
+                hidden=(128, 128), name: str = "mlp") -> Measure:
+    """Generic MLP measure f(x,q) = sigmoid(MLP([x, q])) — the 'heavier f'
+    regime where gradient pruning pays off most."""
+    params, _ = L.init_mlp(key, [d_x + d_q, *hidden, 1], jnp.float32)
+
+    def fn(p, x, q):
+        h = jnp.concatenate([x, q], axis=-1)
+        return jax.nn.sigmoid(L.mlp_apply(p, h, act=jax.nn.relu)[..., 0])
+
+    return Measure(name, fn, params)
+
+
+def inner_product_measure() -> Measure:
+    """MIPS as a degenerate matching function (sanity baseline)."""
+    def fn(p, x, q):
+        return jnp.dot(x, q)
+    return Measure("ip", fn, {})
+
+
+def l2_measure() -> Measure:
+    def fn(p, x, q):
+        return -jnp.sum(jnp.square(x - q), axis=-1)
+    return Measure("l2", fn, {})
+
+
+# ---------------------------------------------------------------------------
+# Numpy twins (for the faithful dynamic-set reference searcher)
+# ---------------------------------------------------------------------------
+
+def deepfm_numpy_fns(params: dict, cfg: deepfm_lib.DeepFMConfig):
+    """Returns (score_np, grad_np) closures operating on numpy arrays.
+    Hand-written forward+backward of the DeepFM measure — keeps the faithful
+    searcher free of per-call JAX dispatch overhead."""
+    Ws = [np.asarray(w, np.float32) for w in params["mlp"]["w"]]
+    bs = [np.asarray(b, np.float32) for b in params["mlp"]["b"]]
+    fd = cfg.fm_dim
+
+    def _forward(x, q):
+        h = np.concatenate([q[fd:], x[fd:]])
+        acts = [h]
+        for i, (W, b) in enumerate(zip(Ws, bs)):
+            h = h @ W + b
+            if i < len(Ws) - 1:
+                h = np.maximum(h, 0.0)
+            acts.append(h)
+        logit = float(np.dot(x[:fd], q[:fd]) + h[0])
+        return 1.0 / (1.0 + np.exp(-logit)), acts
+
+    def score_np(x, q):
+        return _forward(x, q)[0]
+
+    def grad_np(x, q):
+        f, acts = _forward(x, q)
+        # d sigmoid
+        g_logit = f * (1.0 - f)
+        # backprop through MLP wrt its input
+        g = np.array([g_logit], np.float32)
+        for i in range(len(Ws) - 1, -1, -1):
+            g = Ws[i] @ g
+            if i > 0:
+                g = g * (acts[i] > 0)
+        dd = cfg.deep_dim
+        gx = np.zeros_like(x)
+        gx[:fd] = g_logit * q[:fd]
+        gx[fd:] = g[dd:]          # deep input is [q_deep, x_deep]
+        return f, gx
+
+    return score_np, grad_np

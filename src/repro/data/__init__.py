@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    make_graph, make_interactions, make_recsys_batch, make_token_batch,
+)
+from repro.data.pipeline import BatchIterator, host_shard  # noqa: F401
+from repro.data.sampler import NeighborSampler  # noqa: F401

@@ -1,0 +1,72 @@
+"""Straggler detection & mitigation policy.
+
+On a real multi-pod job the fleet controller feeds per-host step times; here
+the monitor consumes whatever step durations the trainer reports (and the
+tests inject synthetic distributions). Policy (standard practice, cf.
+backup-workers in large-scale SGD):
+
+  - EMA of median step time; a host is a *straggler* when its step time
+    exceeds ``threshold``x the median for ``patience`` consecutive steps;
+  - mitigation ladder: (1) flag for the data pipeline to rebalance shards
+    away from the slow host, (2) recommend hot-spare swap (the launcher
+    replaces the host and restores from the latest checkpoint — restart
+    path exercised in tests), (3) if >5% of hosts are slow, recommend a
+    global re-shard (elastic down-size) instead of whack-a-mole.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict, deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerAction:
+    kind: str            # none | rebalance | swap | reshard
+    hosts: List[int]
+    reason: str = ""
+
+
+class StragglerMonitor:
+    def __init__(self, n_hosts: int, threshold: float = 1.5,
+                 patience: int = 3, window: int = 32,
+                 reshard_frac: float = 0.05):
+        self.n_hosts = n_hosts
+        self.threshold = threshold
+        self.patience = patience
+        self.reshard_frac = reshard_frac
+        self.times: Dict[int, deque] = defaultdict(lambda: deque(maxlen=window))
+        self.slow_streak: Dict[int, int] = defaultdict(int)
+        self.flagged: set[int] = set()
+
+    def record_step(self, host_times: Dict[int, float]) -> StragglerAction:
+        med = float(np.median(list(host_times.values())))
+        newly_slow = []
+        for h, t in host_times.items():
+            self.times[h].append(t)
+            if t > self.threshold * med:
+                self.slow_streak[h] += 1
+            else:
+                self.slow_streak[h] = 0
+                self.flagged.discard(h)
+            if self.slow_streak[h] >= self.patience and h not in self.flagged:
+                self.flagged.add(h)
+                newly_slow.append(h)
+
+        if len(self.flagged) > max(1.0, self.reshard_frac * self.n_hosts):
+            return StragglerAction("reshard", sorted(self.flagged),
+                                   f"{len(self.flagged)} hosts slow — global re-shard")
+        # escalate flagged hosts that stayed slow past 2x patience: swap
+        persistent = [h for h in sorted(self.flagged)
+                      if self.slow_streak[h] >= 2 * self.patience]
+        if persistent:
+            return StragglerAction("swap", persistent, "persistent straggler")
+        if newly_slow:
+            return StragglerAction("rebalance", newly_slow,
+                                   f">{self.threshold}x median for {self.patience} steps")
+        return StragglerAction("none", [])
+
+    def healthy_hosts(self) -> List[int]:
+        return [h for h in range(self.n_hosts) if h not in self.flagged]

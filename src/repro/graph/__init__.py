@@ -1,0 +1,4 @@
+from repro.graph.build import (  # noqa: F401
+    GraphIndex, brute_force_knn, build_l2_graph, medoid, nn_descent,
+    occlusion_prune,
+)

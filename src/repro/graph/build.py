@@ -1,0 +1,192 @@
+"""ℓ2 proximity-graph construction (SL2G indexing step).
+
+The index is query-independent (pure ℓ2 over base vectors) — the paper's
+point is that indexing stays cheap while *search* uses the neural measure.
+
+Pipeline: kNN candidates (blocked exact for small N, NN-descent for large N)
+→ occlusion pruning (the HNSW/NSG diversification heuristic) → symmetrize →
+padded int32 neighbor table (N, M) with -1 padding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class GraphIndex:
+    neighbors: np.ndarray        # (N, M) int32, -1 padded
+    entry: int                   # medoid entry point
+    base: np.ndarray             # (N, D) float32 base vectors
+
+    @property
+    def n(self) -> int:
+        return self.base.shape[0]
+
+    @property
+    def max_degree(self) -> int:
+        return self.neighbors.shape[1]
+
+    @property
+    def avg_degree(self) -> float:
+        return float((self.neighbors >= 0).sum(1).mean())
+
+
+def medoid(base: np.ndarray) -> int:
+    mean = base.mean(axis=0)
+    return int(np.argmin(((base - mean) ** 2).sum(axis=1)))
+
+
+def brute_force_knn(base: np.ndarray, k: int, block: int = 2048,
+                    queries: Optional[np.ndarray] = None) -> np.ndarray:
+    """Exact kNN by blocked distance computation (jit'd blocks).
+
+    Returns (Nq, k) int32 neighbor ids, self excluded when queries is None."""
+    self_mode = queries is None
+    queries = base if self_mode else queries
+    base_j = jnp.asarray(base, jnp.float32)
+    base_sq = jnp.sum(base_j * base_j, axis=1)
+
+    @jax.jit
+    def block_topk(qb, row0):
+        d = (jnp.sum(qb * qb, axis=1, keepdims=True)
+             - 2.0 * qb @ base_j.T + base_sq[None, :])
+        if self_mode:
+            rows = row0 + jnp.arange(qb.shape[0])
+            cols = jnp.arange(base_j.shape[0])
+            d = jnp.where(cols[None, :] == rows[:, None], jnp.inf, d)
+        _, idx = jax.lax.top_k(-d, k)
+        return idx
+
+    out = np.empty((queries.shape[0], k), np.int32)
+    for s in range(0, queries.shape[0], block):
+        e = min(s + block, queries.shape[0])
+        qb = jnp.asarray(queries[s:e], jnp.float32)
+        out[s:e] = np.asarray(block_topk(qb, s))
+    return out
+
+
+def nn_descent(base: np.ndarray, k: int, n_iters: int = 8,
+               sample: int = 10, seed: int = 0) -> np.ndarray:
+    """NN-descent (Dong et al.) approximate kNN for large N — numpy host-side.
+    Good enough for index construction; exactness is not required (the graph
+    only needs to be navigable)."""
+    rng = np.random.default_rng(seed)
+    n = base.shape[0]
+    # init with random neighbors
+    nbrs = rng.integers(0, n, size=(n, k)).astype(np.int32)
+    for i in range(n):
+        while True:
+            bad = nbrs[i] == i
+            if not bad.any():
+                break
+            nbrs[i][bad] = rng.integers(0, n, size=bad.sum())
+    d = np.linalg.norm(base[:, None, :] - base[nbrs], axis=2) if n * k * base.shape[1] < 5e7 \
+        else _row_dists(base, nbrs)
+
+    for _ in range(n_iters):
+        improved = 0
+        # sample candidate pairs through common neighbors (forward + reverse)
+        rev = [[] for _ in range(n)]
+        for i in range(n):
+            for j in nbrs[i][:sample]:
+                rev[j].append(i)
+        for i in range(n):
+            cand = set()
+            pool = list(nbrs[i][:sample]) + rev[i][:sample]
+            for j in pool:
+                cand.update(nbrs[j][:sample])
+                cand.update(rev[j][:sample])
+            cand.discard(i)
+            cand = np.fromiter((c for c in cand if c not in set(nbrs[i])),
+                               np.int32, -1) if cand else np.empty(0, np.int32)
+            if cand.size == 0:
+                continue
+            cd = np.linalg.norm(base[cand] - base[i], axis=1)
+            all_ids = np.concatenate([nbrs[i], cand])
+            all_d = np.concatenate([d[i], cd])
+            order = np.argsort(all_d)[:k]
+            newn = all_ids[order]
+            improved += int((newn != nbrs[i]).sum())
+            nbrs[i], d[i] = newn.astype(np.int32), all_d[order]
+        if improved < max(1, n // 1000):
+            break
+    return nbrs
+
+
+def _row_dists(base: np.ndarray, nbrs: np.ndarray) -> np.ndarray:
+    out = np.empty(nbrs.shape, np.float32)
+    for s in range(0, base.shape[0], 4096):
+        e = min(s + 4096, base.shape[0])
+        out[s:e] = np.linalg.norm(base[s:e, None, :] - base[nbrs[s:e]], axis=2)
+    return out
+
+
+def occlusion_prune(base: np.ndarray, knn: np.ndarray, m: int) -> np.ndarray:
+    """HNSW 'select neighbors heuristic': keep candidate c only if it is
+    closer to the node than to every already-kept neighbor (diversification).
+    Returns (N, m) int32, -1 padded."""
+    n = base.shape[0]
+    out = np.full((n, m), -1, np.int32)
+    for i in range(n):
+        cand = knn[i]
+        cd = np.linalg.norm(base[cand] - base[i], axis=1)
+        order = np.argsort(cd)
+        kept: list[int] = []
+        for oi in order:
+            c = int(cand[oi])
+            if c < 0 or c == i:
+                continue
+            ok = True
+            for kc in kept:
+                if np.linalg.norm(base[c] - base[kc]) < cd[oi]:
+                    ok = False
+                    break
+            if ok:
+                kept.append(c)
+                if len(kept) == m:
+                    break
+        # backfill with nearest unkept to reach m (keeps degree high)
+        if len(kept) < m:
+            for oi in order:
+                c = int(cand[oi])
+                if c >= 0 and c != i and c not in kept:
+                    kept.append(c)
+                    if len(kept) == m:
+                        break
+        out[i, : len(kept)] = kept
+    return out
+
+
+def symmetrize(neighbors: np.ndarray, m_max: int) -> np.ndarray:
+    """Add reverse edges up to m_max per node (improves navigability)."""
+    n, m = neighbors.shape
+    adj = [list(row[row >= 0]) for row in neighbors]
+    for i in range(n):
+        for j in neighbors[i]:
+            if j >= 0 and len(adj[j]) < m_max and i not in adj[j]:
+                adj[j].append(i)
+    out = np.full((n, m_max), -1, np.int32)
+    for i in range(n):
+        row = adj[i][:m_max]
+        out[i, : len(row)] = row
+    return out
+
+
+def build_l2_graph(base: np.ndarray, m: int = 24, k_construction: int = 100,
+                   exact_threshold: int = 60_000, seed: int = 0) -> GraphIndex:
+    """SL2G index build: ℓ2 kNN → occlusion prune to M → symmetrize to 2M."""
+    base = np.asarray(base, np.float32)
+    n = base.shape[0]
+    kc = min(k_construction, n - 1)
+    if n <= exact_threshold:
+        knn = brute_force_knn(base, kc)
+    else:
+        knn = nn_descent(base, kc, seed=seed)
+    pruned = occlusion_prune(base, knn, m)
+    sym = symmetrize(pruned, 2 * m)
+    return GraphIndex(neighbors=sym, entry=medoid(base), base=base)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships as a subpackage: kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper with interpret/fallback switches), ref.py
+(pure-jnp oracle used by the allclose test sweeps).
+
+  deepfm_score   fused candidate-batch DeepFM measure evaluation (the GUITAR
+                 search inner loop — FM dot + 2-layer MLP in one VMEM pass)
+  neighbor_rank  fused gradient ranking: diffs, norms, separation angle /
+                 projection, adaptive α·θ mask (Eq. 3/4) per frontier
+  embedding_bag  FBGEMM-TBE-style gather + segment-sum bag lookup (recsys)
+  decode_attn    flash-decode GQA attention over a KV cache (LM serving)
+  flash_attn     causal flash-attention forward (FA-2 schedule) — the §Perf
+                 cell-A lever for the LM train/prefill memory term
+"""

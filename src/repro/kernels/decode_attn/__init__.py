@@ -1,0 +1,1 @@
+from repro.kernels.decode_attn.ops import decode_attention  # noqa: F401

@@ -1,0 +1,86 @@
+"""Flash-decode GQA attention Pallas kernel.
+
+One decode position against a long KV cache: grid (batch, kv_head, T-chunks),
+with the classic online-softmax accumulation (running max m, normalizer l,
+weighted accumulator) held in VMEM scratch across the T-chunk grid dimension.
+The G = H/KV query heads of a kv-head ride together as the matmul M-dim, so
+the MXU sees (G, hd) x (hd, Tc) tiles — this is the split-K pattern that
+makes the 500k-token long-context decode shape stream at HBM bandwidth.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
+            block_t: int, scale: float):
+    t = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                   # (G, hd)
+    k = k_ref[0, :, 0, :]             # (Tc, hd)
+    v = v_ref[0, :, 0, :]             # (Tc, hd)
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    pos = t * block_t + jnp.arange(block_t)
+    logits = jnp.where((pos < len_ref[0])[None, :], logits, -jnp.inf)
+
+    m_prev = m_ref[...]               # (G, 1)
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard the all-masked chunk (exp(-inf - -inf)); keep zeros instead
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(jnp.isfinite(logits), p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    corr = jnp.where(jnp.isfinite(m_prev), corr, 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == nt - 1)
+    def _finish():
+        out_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                         ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            length: jax.Array, *, block_t: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, KV, G, hd); k/v: (B, T, KV, hd); length: (1,) int32 in SMEM."""
+    B, KV, G, hd = q.shape
+    T = k.shape[1]
+    grid = (B, KV, T // block_t)
+    scale = 1.0 / math.sqrt(hd)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_t=block_t, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,   # length
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), lambda b, h, t, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_t, 1, hd), lambda b, h, t, L: (b, t, h, 0)),
+                pl.BlockSpec((1, block_t, 1, hd), lambda b, h, t, L: (b, t, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, t, L: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        interpret=interpret,
+    )(length, q, k, v)

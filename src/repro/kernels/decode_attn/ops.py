@@ -1,0 +1,32 @@
+"""Public flash-decode wrapper: layout shuffle, padding, fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.kernel import decode_attention_pallas
+from repro.kernels.decode_attn.ref import decode_attention_ref
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length, block_t: int = 512, use_pallas: bool = True,
+                     interpret: bool | None = None) -> jax.Array:
+    """q: (B, H, hd); k/v: (B, T, KV, hd) cache; length: int — valid prefix.
+    Returns (B, H, hd) float32."""
+    length = jnp.asarray(length, jnp.int32).reshape((1,))
+    if not use_pallas:
+        return decode_attention_ref(q, k, v, length[0])
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    block_t = min(block_t, T)
+    pad_t = (-T) % block_t
+    if pad_t:  # padded tail is masked by `length`
+        k = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    qg = q.reshape(B, KV, G, hd)
+    out = decode_attention_pallas(qg, k, v, length, block_t=block_t,
+                                  interpret=interpret)
+    return out.reshape(B, H, hd)

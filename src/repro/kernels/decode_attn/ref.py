@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash-decode GQA attention over a KV cache."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         length: jax.Array) -> jax.Array:
+    """q: (B, H, hd) single-position queries; k/v: (B, T, KV, hd) cache;
+    length: scalar int32 — valid cache entries (positions < length).
+    Returns (B, H, hd) float32."""
+    B, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("bkgh,btkh->bkgt", qg, kf) / math.sqrt(hd)
+    mask = jnp.arange(T)[None, None, None, :] < length
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, hd)

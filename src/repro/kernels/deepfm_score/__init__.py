@@ -1,0 +1,1 @@
+from repro.kernels.deepfm_score.ops import deepfm_score  # noqa: F401

@@ -1,0 +1,66 @@
+"""Fused DeepFM candidate-scoring Pallas kernel.
+
+The GUITAR search inner loop evaluates f(x, q) over a (candidates,) batch per
+step. On TPU this wants to be ONE VMEM-resident fusion: load a tile of
+candidate/query rows, compute the FM dot on the VPU, run the two small MLP
+matmuls back-to-back on the MXU without spilling the 64-wide hidden
+activations to HBM, and write a single score lane back.
+
+Tiling: grid over row blocks (BLOCK_N rows). Feature dims are padded to
+lane-friendly sizes by ops.py (deep-in = 64, hidden = 64 — the MXU pads to
+128 lanes internally; acceptable at these measure sizes, and the win is the
+fusion, not the matmul shape).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cand_ref, query_ref, w0_ref, b0_ref, w1_ref, b1_ref, w2_ref,
+            b2_ref, out_ref, *, fm_dim: int, deep_dim: int):
+    cand = cand_ref[...]                       # (BN, D)
+    query = query_ref[...]                     # (BN, D)
+    fm = jnp.sum(cand[:, :fm_dim] * query[:, :fm_dim], axis=-1)  # (BN,)
+    deep_in = jnp.concatenate(
+        [query[:, fm_dim: fm_dim + deep_dim], cand[:, fm_dim: fm_dim + deep_dim]],
+        axis=-1)                               # (BN, 2*deep_dim)
+    h = jnp.maximum(
+        jnp.dot(deep_in, w0_ref[...], preferred_element_type=jnp.float32)
+        + b0_ref[...][None, :], 0.0)
+    h = jnp.maximum(
+        jnp.dot(h, w1_ref[...], preferred_element_type=jnp.float32)
+        + b1_ref[...][None, :], 0.0)
+    logit = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)[:, 0]
+    logit = logit + b2_ref[...][0] + fm
+    out_ref[...] = jax.nn.sigmoid(logit)
+
+
+@functools.partial(jax.jit, static_argnames=("fm_dim", "deep_dim", "block_n",
+                                             "interpret"))
+def deepfm_score_pallas(cand: jax.Array, query: jax.Array, w0, b0, w1, b1,
+                        w2, b2, *, fm_dim: int = 8, deep_dim: int = 32,
+                        block_n: int = 256, interpret: bool = False
+                        ) -> jax.Array:
+    """cand/query: (N, D) with N % block_n == 0 (ops.py pads)."""
+    N, D = cand.shape
+    H = w0.shape[1]
+    grid = (N // block_n,)
+    row_spec = pl.BlockSpec((block_n, D), lambda i: (i, 0))
+    full = lambda *s: pl.BlockSpec(s, lambda i: tuple(0 for _ in s))
+    return pl.pallas_call(
+        functools.partial(_kernel, fm_dim=fm_dim, deep_dim=deep_dim),
+        grid=grid,
+        in_specs=[
+            row_spec, row_spec,
+            full(*w0.shape), full(*b0.shape),
+            full(*w1.shape), full(*b1.shape),
+            full(*w2.shape), full(*b2.shape),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(cand, query, w0, b0, w1, b1, w2, b2)

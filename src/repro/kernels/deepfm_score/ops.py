@@ -1,0 +1,39 @@
+"""Public wrapper for the fused DeepFM scorer: padding, interpret switch,
+and a pure-jnp fallback for non-TPU backends."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.deepfm_score.kernel import deepfm_score_pallas
+from repro.kernels.deepfm_score.ref import deepfm_score_ref
+
+
+def deepfm_score(cand: jax.Array, query: jax.Array, mlp_params: dict,
+                 fm_dim: int = 8, block_n: int = 256,
+                 use_pallas: bool = True, interpret: bool | None = None
+                 ) -> jax.Array:
+    """cand: (N, D) candidates; query: (N, D) or (D,) user vector(s);
+    mlp_params: {'w': [w0, w1, w2], 'b': [b0, b1, b2]} (the measure MLP).
+    Returns (N,) float32 scores."""
+    if query.ndim == 1:
+        query = jnp.broadcast_to(query[None, :], cand.shape)
+    w = [jnp.asarray(x, jnp.float32) for x in mlp_params["w"]]
+    b = [jnp.asarray(x, jnp.float32) for x in mlp_params["b"]]
+    deep_dim = cand.shape[1] - fm_dim
+    if not use_pallas:
+        return deepfm_score_ref(cand, query, w[0], b[0], w[1], b[1], w[2],
+                                b[2], fm_dim)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    N = cand.shape[0]
+    pad = (-N) % block_n
+    if pad:
+        cand = jnp.pad(cand, ((0, pad), (0, 0)))
+        query = jnp.pad(query, ((0, pad), (0, 0)))
+    out = deepfm_score_pallas(
+        cand.astype(jnp.float32), query.astype(jnp.float32),
+        w[0], b[0], w[1], b[1], w[2], b[2],
+        fm_dim=fm_dim, deep_dim=deep_dim, block_n=block_n,
+        interpret=interpret)
+    return out[:N]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused DeepFM scoring kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def deepfm_score_ref(cand: jax.Array, query: jax.Array, w0, b0, w1, b1, w2, b2,
+                     fm_dim: int = 8) -> jax.Array:
+    """cand: (N, D) candidate (item) vectors; query: (N, D) user vectors
+    (pre-broadcast); D = fm_dim + deep_dim. Returns (N,) sigmoid scores.
+
+    f = sigmoid(<x_fm, q_fm> + MLP([q_deep, x_deep]))"""
+    fm = jnp.sum(cand[:, :fm_dim] * query[:, :fm_dim], axis=-1)
+    deep_in = jnp.concatenate([query[:, fm_dim:], cand[:, fm_dim:]], axis=-1)
+    h = jax.nn.relu(deep_in @ w0 + b0)
+    h = jax.nn.relu(h @ w1 + b1)
+    logit = (h @ w2)[:, 0] + b2[0] + fm
+    return jax.nn.sigmoid(logit.astype(jnp.float32))

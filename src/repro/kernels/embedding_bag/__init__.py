@@ -1,0 +1,1 @@
+from repro.kernels.embedding_bag.ops import embedding_bag  # noqa: F401

@@ -1,0 +1,31 @@
+"""Public EmbeddingBag wrapper: pad bags, interpret switch, jnp fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array,
+                  weights: jax.Array | None = None, block_b: int = 8,
+                  use_pallas: bool = True, interpret: bool | None = None
+                  ) -> jax.Array:
+    """table: (R, d); indices: (B, L) with -1 padding; optional weights (B, L).
+    Returns (B, d) bag sums."""
+    if not use_pallas:
+        return embedding_bag_ref(table, indices, weights)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Lb = indices.shape
+    if weights is None:
+        weights = jnp.ones((B, Lb), table.dtype)
+    pad = (-B) % block_b
+    if pad:
+        indices = jnp.pad(indices, ((0, pad), (0, 0)), constant_values=-1)
+        weights = jnp.pad(weights, ((0, pad), (0, 0)))
+    out = embedding_bag_pallas(table, indices.astype(jnp.int32),
+                               weights.astype(table.dtype),
+                               block_b=block_b, interpret=interpret)
+    return out[:B]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the EmbeddingBag kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, indices: jax.Array,
+                      weights: jax.Array | None = None) -> jax.Array:
+    """table: (R, d); indices: (B, L) int32 rows, -1 = padding;
+    weights: optional (B, L). Returns (B, d) per-bag weighted sums."""
+    mask = (indices >= 0)
+    safe = jnp.maximum(indices, 0)
+    rows = jnp.take(table, safe, axis=0)                 # (B, L, d)
+    w = mask.astype(table.dtype)
+    if weights is not None:
+        w = w * weights.astype(table.dtype)
+    return jnp.sum(rows * w[..., None], axis=1)

@@ -1,0 +1,1 @@
+from repro.kernels.flash_attn.ops import flash_attention  # noqa: F401

@@ -1,0 +1,89 @@
+"""Causal flash-attention forward Pallas kernel (FlashAttention-2 schedule,
+TPU-adapted).
+
+Identified by §Perf cell A as the next lever for the LM memory term: the
+XLA chunked-attention path still round-trips (B, H, chunk, T) logit tiles
+through HBM; this kernel keeps the running softmax state and the (Bq, Bk)
+score tile in VMEM, so attention traffic drops to the q/k/v/o tensors.
+
+Grid: (batch·heads, q_blocks, k_blocks) with k innermost; the causal upper
+triangle is skipped per-tile via pl.when (no masked-out compute, the
+FA-2 trick). Scratch: running max m, normalizer l, and the (Bq, hd) output
+accumulator in VMEM across the k dimension.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_q: int, block_k: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip tiles strictly above the diagonal band
+    @pl.when(ki * block_k <= qi * block_q + block_q - 1)
+    def _compute():
+        q = q_ref[0]                    # (Bq, hd)
+        k = k_ref[0]                    # (Bk, hd)
+        v = v_ref[0]                    # (Bk, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qpos = qi * block_q + jnp.arange(block_q)
+        kpos = ki * block_k + jnp.arange(block_k)
+        s = jnp.where(kpos[None, :] <= qpos[:, None], s, -jnp.inf)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           block_q: int = 256, block_k: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """q/k/v: (BH, S, hd) — batch and heads pre-flattened. Causal."""
+    BH, S, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    grid = (BH, S // block_q, S // block_k)
+    spec_q = pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0))
+    spec_k = pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                          scale=scale),
+        grid=grid,
+        in_specs=[spec_q, spec_k, spec_k],
+        out_specs=spec_q,
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

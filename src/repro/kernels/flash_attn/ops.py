@@ -1,0 +1,37 @@
+"""Public flash-attention wrapper: layout flatten, padding, fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+from repro.kernels.flash_attn.ref import flash_attention_ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    block_q: int = 256, block_k: int = 256,
+                    use_pallas: bool = True,
+                    interpret: bool | None = None) -> jax.Array:
+    """Causal attention, q/k/v: (B, S, H, hd) with equal head counts
+    (expand GQA kv heads first). Returns (B, S, H, hd) float32."""
+    if not use_pallas:
+        return flash_attention_ref(q, k, v)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, H, hd = q.shape
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    pad = (-S) % max(bq, bk)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    if pad:
+        # pad keys at the END: causal masking keeps them unattended; padded
+        # query rows produce garbage that is sliced off
+        qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0)))
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
+    out = flash_attention_pallas(qf, kf, vf, block_q=bq, block_k=bk,
+                                 interpret=interpret)
+    out = out[:, :S, :]
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

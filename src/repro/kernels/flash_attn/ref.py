@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for causal flash attention (forward)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q/k/v: (B, S, H, hd) same head count. Returns (B, S, H, hd) f32."""
+    B, S, H, hd = q.shape
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))

@@ -1,0 +1,1 @@
+from repro.kernels.neighbor_rank.ops import neighbor_rank  # noqa: F401

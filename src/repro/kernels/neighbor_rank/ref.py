@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused gradient-ranking kernel (paper Eq. 3/4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def neighbor_rank_ref(x, grad, nvecs, valid, alpha: float = 1.01,
+                      rank_by: str = "angle"):
+    """x: (Q, D) frontier; grad: (Q, D) = ∂f/∂x; nvecs: (Q, B, D) neighbor
+    vectors; valid: (Q, B) bool.
+
+    Returns (key (Q, B) f32 — smaller is better, +inf for invalid;
+             in_range (Q, B) bool — the adaptive α·θ mask)."""
+    eps = 1e-12
+    diffs = nvecs - x[:, None, :]
+    dot = jnp.einsum("qbd,qd->qb", diffs, grad)
+    dnorm = jnp.linalg.norm(diffs, axis=-1) + eps
+    gnorm = jnp.linalg.norm(grad, axis=-1, keepdims=True) + eps
+    if rank_by == "angle":
+        cosv = jnp.clip(dot / (dnorm * gnorm), -1.0, 1.0)
+        key = jnp.where(valid, jnp.arccos(cosv), jnp.inf)
+        theta = jnp.min(key, axis=1, keepdims=True)
+        in_range = valid & (key <= alpha * theta + eps)
+    else:
+        proj = dot / gnorm
+        pk = jnp.where(valid, proj, -jnp.inf)
+        theta = jnp.max(pk, axis=1, keepdims=True)
+        bound = jnp.where(theta >= 0, theta / alpha, theta * alpha)
+        in_range = valid & (pk >= bound - eps)
+        key = jnp.where(valid, -proj, jnp.inf)
+    return key.astype(jnp.float32), in_range

@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production meshes and dump memory/cost/collective analyses.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, an unpartitionable op, or an absurd
+collective shows up here as a compile failure or a pathological report.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+Outputs one JSON per cell under reports/dryrun/<mesh>/.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_arch, list_archs
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_job
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             save_hlo: bool = False, variant: str = "base") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    if variant != "base":
+        mesh_name = f"{mesh_name}_{variant}"
+    t0 = time.time()
+    job = build_job(arch, shape, mesh, variant=variant)
+    with mesh:
+        jitted = jax.jit(job.step_fn, in_shardings=job.in_shardings,
+                         out_shardings=job.out_shardings,
+                         donate_argnums=job.donate)
+        lowered = jitted.lower(*job.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    hlo = analyze_hlo(text)
+
+    n_dev = mesh.devices.size
+    report = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "n_devices": int(n_dev),
+        "mesh_shape": {k: int(v) for k, v in mesh.shape.items()},
+        "lower_sec": round(t_lower, 2), "compile_sec": round(t_compile, 2),
+        "memory_analysis": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        "cost_analysis": {
+            "flops_body_once": float(cost.get("flops", -1.0)),
+            "bytes_body_once": float(cost.get("bytes accessed", -1.0)),
+        },
+        "hlo_analysis": hlo.to_dict(),   # per-device, trip-count weighted
+        "static_meta": job.static_meta,
+    }
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    path = os.path.join(out_dir, mesh_name, f"{arch}__{shape}.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    if save_hlo:
+        with open(path.replace(".json", ".hlo.txt"), "w") as f:
+            f.write(text)
+    print(f"[dryrun] {mesh_name:6s} {arch}:{shape}  "
+          f"lower={t_lower:.1f}s compile={t_compile:.1f}s  "
+          f"flops/dev={hlo.flops:.3e} coll/dev={hlo.total_collective_bytes:.3e}B  "
+          f"temp={report['memory_analysis']['temp_bytes']/2**30:.2f}GiB "
+          f"args={report['memory_analysis']['argument_bytes']/2**30:.2f}GiB")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--continue-on-error", action="store_true")
+    ap.add_argument("--variant", default="base",
+                    help="perf variant: microbatchN | bf16 | shardnodes | "
+                         "repltable | combinations like bf16+shardnodes")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in get_arch(a).shapes:
+                cells.append((a, s.name))
+    elif args.arch == "guitar-serve":
+        cells = [("guitar-serve", args.shape or "guitar")]
+    else:
+        assert args.arch, "--arch required unless --all"
+        arch = get_arch(args.arch)
+        shapes = [args.shape] if args.shape else [s.name for s in arch.shapes]
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for multi in meshes:
+        for a, s in cells:
+            try:
+                run_cell(a, s, multi, args.out, save_hlo=args.save_hlo,
+                         variant=args.variant)
+            except Exception as e:  # noqa: BLE001
+                failures.append((a, s, multi, repr(e)))
+                print(f"[dryrun] FAIL {a}:{s} multi={multi}: {e}")
+                if not args.continue_on_error:
+                    traceback.print_exc()
+                    raise
+    if failures:
+        print(f"[dryrun] {len(failures)} failures")
+        raise SystemExit(1)
+    print(f"[dryrun] all {len(cells) * len(meshes)} cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

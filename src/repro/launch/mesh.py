@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first jax use.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over however many devices the test host has."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def batch_axis_size(mesh) -> int:
+    size = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            size *= mesh.shape[a]
+    return size

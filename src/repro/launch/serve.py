@@ -1,0 +1,69 @@
+"""Serving launcher: stand up a GUITAR ranking service (measure + index) and
+run batched queries against it. ``--mode`` selects the searcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --items 10000 --queries 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (SearchConfig, brute_force_topk, mlp_measure, recall,
+                        search_measure)
+from repro.graph import build_l2_graph
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--items", type=int, default=10000)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--queries", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--mode", choices=["guitar", "sl2g"], default="guitar")
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--ef", type=int, default=64)
+    ap.add_argument("--alpha", type=float, default=1.01)
+    ap.add_argument("--budget", type=int, default=8)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(args.items, args.dim)).astype(np.float32)
+    measure = mlp_measure(jax.random.PRNGKey(0), args.dim, args.dim,
+                          hidden=(64, 64))
+    t0 = time.time()
+    graph = build_l2_graph(base, m=16, k_construction=48)
+    print(f"[serve] index: {args.items} items, degree {graph.avg_degree:.1f}, "
+          f"built in {time.time() - t0:.1f}s")
+
+    cfg = SearchConfig(k=args.k, ef=args.ef, mode=args.mode,
+                       budget=args.budget, alpha=args.alpha)
+    base_j = jnp.asarray(base)
+    nbrs_j = jnp.asarray(graph.neighbors)
+    served = 0
+    t_total = 0.0
+    first_recall = None
+    for s in range(0, args.queries, args.batch):
+        q = rng.normal(size=(args.batch, args.dim)).astype(np.float32)
+        qj = jnp.asarray(q)
+        entries = jnp.full((args.batch,), graph.entry, jnp.int32)
+        t0 = time.perf_counter()
+        res = search_measure(measure, base_j, nbrs_j, qj, entries, cfg)
+        jax.block_until_ready(res.ids)
+        dt = time.perf_counter() - t0
+        if s:  # skip the compile batch in throughput accounting
+            t_total += dt
+            served += args.batch
+        if s == 0:
+            true_ids, _ = brute_force_topk(measure, base_j, qj[:16], args.k)
+            first_recall = recall(res.ids[:16], true_ids)
+    qps = served / t_total if t_total else 0.0
+    print(f"[serve] mode={args.mode} recall@{args.k}={first_recall:.3f} "
+          f"steady-state {qps:.0f} QPS (CPU backend)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,626 @@
+"""Lowering-job builders: one (step_fn, abstract args, shardings) bundle per
+(architecture x input shape x mesh) cell of the dry-run matrix.
+
+Everything is abstract (ShapeDtypeStruct) — no parameter materialization; a
+671B config costs nothing to describe. The same builders back the real
+launchers (train.py / serve.py), which materialize params instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchDef, ShapeSpec, get_arch
+from repro.launch.mesh import batch_axis_size
+from repro.models import deepseek as ds_lib
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer as tf_lib
+from repro.sharding import (ShardingRules, mesh_rules, shardings_for_tree,
+                            zero1_spec_tree)
+from repro.train.optimizer import AdamWState, OptimizerConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class LoweringJob:
+    name: str
+    arch: str
+    shape: str
+    step_fn: Callable
+    args: Tuple[Any, ...]           # ShapeDtypeStructs (pytrees)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    static_meta: dict               # model flops etc. for the roofline
+    donate: Tuple[int, ...] = ()    # donated arg indices (state aliasing)
+
+
+def _pad_count(n: int, m: int = 512) -> int:
+    """Pad a sharded leading dim so it divides both production meshes
+    (single 16x16 and multi 2x16x16 -> lcm-safe at 512)."""
+    return ((n + m - 1) // m) * m
+
+
+def _abstract_init(init_fn, cfg):
+    """(params_sds, axes) without materializing anything."""
+    box = {}
+
+    def f(key):
+        p, ax = init_fn(key, cfg)
+        box["ax"] = ax
+        return p
+
+    params = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return params, box["ax"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _opt_shardings(params_sds, axes, mesh, rules, opt_cfg):
+    opt_sds = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_sds)
+    mspec = zero1_spec_tree(params_sds, axes, mesh, rules)
+    msh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), mspec,
+                                 is_leaf=lambda x: isinstance(x, P))
+    return opt_sds, AdamWState(step=_repl(mesh), m=msh, v=msh)
+
+
+def _batch_spec(mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _lm_modules(arch: ArchDef):
+    if arch.name.startswith("deepseek"):
+        return ds_lib
+    return tf_lib
+
+
+def _lm_opt_cfg(arch: ArchDef) -> OptimizerConfig:
+    # 671B fp32 moments exceed one pod's HBM — bf16 moments for deepseek
+    mdt = jnp.bfloat16 if arch.name.startswith("deepseek") else jnp.float32
+    return OptimizerConfig(lr=3e-4, moment_dtype=mdt)
+
+
+def _lm_model_flops(cfg, tokens: int, decode: bool = False,
+                    kv_len: int = 0) -> float:
+    """6·N_active·D for train, 2·N_active·D per decoded token (+attention)."""
+    if isinstance(cfg, ds_lib.DeepSeekConfig):
+        d = cfg.d_model
+        attn = (d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.n_heads *
+                (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+                + d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+                + cfg.kv_lora_rank * cfg.n_heads *
+                (cfg.qk_nope_head_dim + cfg.v_head_dim)
+                + cfg.n_heads * cfg.v_head_dim * d)
+        dense_ffn = 3 * d * cfg.dense_d_ff
+        moe_ffn = 3 * d * cfg.moe_d_ff * (cfg.moe_top_k + cfg.n_shared_experts)
+        n_active = (cfg.n_dense_layers * (attn + dense_ffn)
+                    + (cfg.n_layers - cfg.n_dense_layers) * (attn + moe_ffn)
+                    + 2 * cfg.vocab_size * d)
+    else:
+        d, hd = cfg.d_model, cfg.head_dim
+        attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd + cfg.n_heads * hd * d
+        if cfg.is_moe:
+            ffn = 3 * d * cfg.moe_d_ff * cfg.moe_top_k
+        elif cfg.mlp_type == "swiglu":
+            ffn = 3 * d * cfg.d_ff
+        else:
+            ffn = 2 * d * cfg.d_ff
+        n_active = cfg.n_layers * (attn + ffn) + 2 * cfg.vocab_size * d
+    factor = 2 if decode else 6
+    flops = factor * n_active * tokens
+    if decode and kv_len:
+        # attention reads: 2·2·L·kv·heads... dominated by score+value matmuls
+        if isinstance(cfg, ds_lib.DeepSeekConfig):
+            per_tok = (2 * cfg.n_layers * cfg.n_heads * kv_len *
+                       (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * 2)
+        else:
+            per_tok = 2 * cfg.n_layers * cfg.n_heads * kv_len * cfg.head_dim * 2
+        flops += per_tok * tokens
+    return float(flops)
+
+
+def build_lm_job(arch: ArchDef, shape: ShapeSpec, mesh: Mesh,
+                 variant: str = "base") -> LoweringJob:
+    rules = mesh_rules(mesh)
+    mod = _lm_modules(arch)
+    cfg = arch.make_config()
+    nb = batch_axis_size(mesh)
+    if hasattr(cfg, "moe_groups") and getattr(cfg, "n_experts", 0):
+        cfg = dataclasses.replace(cfg, moe_groups=nb)
+    ep_group = mesh.shape["data"] * mesh.shape["model"]   # intra-pod devices
+    if getattr(cfg, "n_experts", 0) >= ep_group:
+        # fine-grained MoE (deepseek: 256e): full EP — one expert per
+        # intra-pod device, replicated across pods (all-to-all never crosses
+        # the slow pod links); capacity stays unsharded
+        rules = rules.with_overrides(experts=("data", "model"), capacity=None)
+    if "fsdp" in variant:
+        # 2-D weight sharding (FSDP x TP): the `embed` weight dim shards over
+        # data — params/device drop |data|x and GSPMD all-gathers each scan
+        # layer's weights at use (the ZeRO-3-in-scan pattern)
+        rules = rules.with_overrides(embed="data")
+
+    B, S = shape["batch"], shape["seq"]
+    if shape.kind in ("train", "prefill") and S >= 2048:
+        # flash-style chunked attention: bounds the (B,H,c,T) logits buffer
+        cfg = dataclasses.replace(cfg, attn_chunk=1024)
+    if shape.kind in ("train", "prefill") and getattr(cfg, "n_experts", 0):
+        # explicit all-to-all EP dispatch (GSPMD's scatter lowering replicates
+        # token buffers — see moe.moe_ffn_ep docstring)
+        cfg = dataclasses.replace(cfg, moe_impl="ep")
+    params_sds, axes = _abstract_init(mod.init_params, cfg)
+    param_sh = shardings_for_tree(axes, mesh, rules)
+    bspec = _batch_spec(mesh)
+
+    if shape.kind == "train":
+        opt_cfg = _lm_opt_cfg(arch)
+        opt_sds, opt_sh = _opt_shardings(params_sds, axes, mesh, rules, opt_cfg)
+        batch_sds = {"tokens": _sds((B, S), jnp.int32),
+                     "targets": _sds((B, S), jnp.int32)}
+        batch_sh = {k: NamedSharding(mesh, P(bspec[0], None))
+                    for k in batch_sds}
+        # perf variants: microbatchN = N-way gradient accumulation (activation
+        # memory / N at the cost of N sequential sub-steps)
+        import re as _re
+        _m = _re.search(r"microbatch(\d+)", variant)
+        n_micro = int(_m.group(1)) if _m else 1
+
+        def step(params, opt, batch):
+            def loss_fn(p, b):
+                return mod.lm_loss(p, b["tokens"], b["targets"], cfg, rules)
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            else:
+                def micro(carry, mb):
+                    l, g = jax.value_and_grad(loss_fn)(params, mb)
+                    return (carry[0] + l,
+                            jax.tree_util.tree_map(jnp.add, carry[1], g)), None
+                mbs = jax.tree_util.tree_map(
+                    lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
+                                        *x.shape[1:]), batch)
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(
+                    micro, (jnp.float32(0), zeros), mbs)
+                loss = loss / n_micro
+                grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            params, opt, metrics = adamw_update(params, grads, opt, opt_cfg)
+            metrics["loss"] = loss
+            return params, opt, metrics
+
+        return LoweringJob(
+            name=f"{arch.name}:{shape.name}", arch=arch.name, shape=shape.name,
+            step_fn=step, args=(params_sds, opt_sds, batch_sds),
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, None),
+            static_meta={"model_flops": _lm_model_flops(cfg, B * S),
+                         "tokens": B * S, "kind": "train"},
+            donate=(0, 1))
+
+    if shape.kind == "prefill":
+        batch_sds = {"tokens": _sds((B, S), jnp.int32)}
+        batch_sh = {"tokens": NamedSharding(mesh, P(bspec[0], None))}
+        # prefill cache lands in the decode layout: kv_seq sharded on model
+        pc_rules = rules.with_overrides(kv_seq="model")
+        cache_ax = mod.cache_axes() if mod is ds_lib else tf_lib.cache_axes()
+        pc_sh = shardings_for_tree(cache_ax, mesh, pc_rules)
+
+        def step(params, batch):
+            return mod.prefill(params, batch["tokens"], cfg, rules)
+
+        return LoweringJob(
+            name=f"{arch.name}:{shape.name}", arch=arch.name, shape=shape.name,
+            step_fn=step, args=(params_sds, batch_sds),
+            in_shardings=(param_sh, batch_sh),
+            out_shardings=(NamedSharding(mesh, P(bspec[0], "model")), pc_sh),
+            static_meta={"model_flops": _lm_model_flops(cfg, B * S) / 3,
+                         "tokens": B * S, "kind": "prefill"})
+
+    # decode: one new token against a seq-length cache
+    if "w8" in variant and not getattr(cfg, "n_experts", 0) \
+            and hasattr(cfg, "param_dtype"):
+        # weight-only fp8 serving: weights stored f8_e4m3, cast to bf16 at
+        # use — halves the weight-read bytes that dominate decode
+        cfg = dataclasses.replace(cfg, param_dtype=jnp.float8_e4m3fn)
+        params_sds, axes = _abstract_init(mod.init_params, cfg)
+        param_sh = shardings_for_tree(axes, mesh, rules)
+    decode_rules = rules.with_overrides(
+        act_seq=None,   # single-token steps: nothing to sequence-shard
+        kv_seq=("data", "model") if B == 1 else "model",
+        **({"batch": None, "queries": None} if B == 1 else {}))
+    if B == 1:
+        bspec_dec = P(None)
+    else:
+        bspec_dec = P(bspec[0])
+    cache_sds = jax.eval_shape(lambda: mod.init_cache(cfg, B, S))
+    cache_ax = mod.cache_axes() if mod is ds_lib else tf_lib.cache_axes()
+    cache_sh = shardings_for_tree(cache_ax, mesh, decode_rules)
+    param_sh_dec = shardings_for_tree(axes, mesh, decode_rules)
+    tok_sds = _sds((B,), jnp.int32)
+    pos_sds = _sds((), jnp.int32)
+
+    def step(params, cache, tokens, pos):
+        return mod.decode_step(params, cache, tokens, pos, cfg, decode_rules)
+
+    return LoweringJob(
+        name=f"{arch.name}:{shape.name}", arch=arch.name, shape=shape.name,
+        step_fn=step, args=(params_sds, cache_sds, tok_sds, pos_sds),
+        in_shardings=(param_sh_dec, cache_sh,
+                      NamedSharding(mesh, bspec_dec), _repl(mesh)),
+        out_shardings=(None, cache_sh),
+        static_meta={"model_flops": _lm_model_flops(cfg, B, decode=True,
+                                                    kv_len=S),
+                     "tokens": B, "kind": "decode"},
+        donate=(1,))
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def build_gnn_job(arch: ArchDef, shape: ShapeSpec, mesh: Mesh,
+                  variant: str = "base") -> LoweringJob:
+    rules = mesh_rules(mesh)
+    cfg = arch.make_config(shape)
+    # perf variants: bf16 message aggregation / node-sharded aggregation /
+    # bf16 feature storage (halves the gather+reduce payloads end to end)
+    if "bf16model" in variant:
+        cfg = dataclasses.replace(cfg, dtype=jnp.bfloat16)
+    elif "bf16" in variant:
+        cfg = dataclasses.replace(cfg, msg_bf16=True)
+    if "shardnodes" in variant:
+        bb = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        rules = rules.with_overrides(nodes=bb)
+    params_sds, axes = _abstract_init(gnn_lib.init_params, cfg)
+    param_sh = shardings_for_tree(axes, mesh, rules)
+    opt_cfg = OptimizerConfig(lr=1e-3)
+    opt_sds, opt_sh = _opt_shardings(params_sds, axes, mesh, rules, opt_cfg)
+    espec = NamedSharding(mesh, P(_batch_spec(mesh)[0]))
+
+    if shape.name == "molecule":
+        G, Nn, Ne = shape["batch"], shape["n_nodes"], shape["n_edges"]
+        batch_sds = {
+            "feats": _sds((G * Nn, shape["d_feat"]), jnp.float32),
+            "src": _sds((G * Ne,), jnp.int32),
+            "dst": _sds((G * Ne,), jnp.int32),
+            "graph_ids": _sds((G * Nn,), jnp.int32),
+            "labels": _sds((G,), jnp.int32),
+        }
+        batch_sh = {"feats": _repl(mesh), "src": espec, "dst": espec,
+                    "graph_ids": _repl(mesh), "labels": _repl(mesh)}
+
+        def loss_fn(p, b):
+            return gnn_lib.graph_classification_loss(
+                p, b["feats"], b["src"], b["dst"], b["graph_ids"], G,
+                b["labels"], cfg, rules)
+        flops = 2.0 * (G * Ne * cfg.d_hidden * cfg.n_layers * 2
+                       + G * Nn * (shape["d_feat"] * cfg.d_hidden
+                                   + (cfg.n_layers * 2 - 1) * cfg.d_hidden ** 2)) * 3
+    else:
+        if shape.name == "minibatch_lg":
+            Nn, Ne = shape["max_nodes"], shape["max_edges"]
+        else:
+            # pad edge arrays so they shard evenly (padding masked out)
+            Nn, Ne = shape["n_nodes"], _pad_count(shape["n_edges"])
+        batch_sds = {
+            "feats": _sds((Nn, shape["d_feat"]), jnp.float32),
+            "src": _sds((Ne,), jnp.int32),
+            "dst": _sds((Ne,), jnp.int32),
+            "labels": _sds((Nn,), jnp.int32),
+            "label_mask": _sds((Nn,), jnp.float32),
+            "edge_mask": _sds((Ne,), jnp.float32),
+        }
+        batch_sh = {"feats": _repl(mesh), "src": espec, "dst": espec,
+                    "labels": _repl(mesh), "label_mask": _repl(mesh),
+                    "edge_mask": espec}
+
+        def loss_fn(p, b):
+            return gnn_lib.node_classification_loss(
+                p, b["feats"], b["src"], b["dst"], b["labels"],
+                b["label_mask"], cfg, rules, edge_mask=b["edge_mask"])
+        flops = 2.0 * (Ne * cfg.d_hidden * cfg.n_layers * 2
+                       + Nn * (shape["d_feat"] * cfg.d_hidden
+                               + (cfg.n_layers * 2 - 1) * cfg.d_hidden ** 2)) * 3
+
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt, metrics = adamw_update(params, grads, opt, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt, metrics
+
+    return LoweringJob(
+        name=f"{arch.name}:{shape.name}", arch=arch.name, shape=shape.name,
+        step_fn=step, args=(params_sds, opt_sds, batch_sds),
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, None),
+        static_meta={"model_flops": flops, "kind": "train"}, donate=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def _recsys_init(arch: ArchDef, cfg):
+    return {
+        "dlrm-rm2": rec_lib.dlrm_init,
+        "dcn-v2": rec_lib.dcn_init,
+        "bst": rec_lib.bst_init,
+        "bert4rec": rec_lib.bert4rec_init,
+    }[arch.name]
+
+
+def _recsys_train_batch(arch: ArchDef, cfg, B: int):
+    if arch.name in ("dlrm-rm2", "dcn-v2"):
+        return {"dense": _sds((B, cfg.n_dense), jnp.float32),
+                "sparse": _sds((B, cfg.n_sparse), jnp.int32),
+                "labels": _sds((B,), jnp.float32)}
+    if arch.name == "bst":
+        return {"hist": _sds((B, cfg.seq_len), jnp.int32),
+                "target": _sds((B,), jnp.int32),
+                "labels": _sds((B,), jnp.float32)}
+    n_masked = max(1, cfg.seq_len // 5)
+    return {"items": _sds((B, cfg.seq_len), jnp.int32),
+            "masked_pos": _sds((B, n_masked), jnp.int32),
+            "labels": _sds((B, n_masked), jnp.int32),
+            "negatives": _sds((1024,), jnp.int32)}
+
+
+def _recsys_loss(arch: ArchDef, cfg, rules):
+    if arch.name == "dlrm-rm2":
+        def f(p, b):
+            lg = rec_lib.dlrm_forward(p, b["dense"], b["sparse"], cfg, rules)
+            return rec_lib.bce_loss(lg, b["labels"])
+    elif arch.name == "dcn-v2":
+        def f(p, b):
+            lg = rec_lib.dcn_forward(p, b["dense"], b["sparse"], cfg, rules)
+            return rec_lib.bce_loss(lg, b["labels"])
+    elif arch.name == "bst":
+        def f(p, b):
+            lg = rec_lib.bst_forward(p, b["hist"], b["target"], cfg, rules)
+            return rec_lib.bce_loss(lg, b["labels"])
+    else:
+        def f(p, b):
+            return rec_lib.bert4rec_sampled_loss(
+                p, b["items"], b["masked_pos"], b["labels"], b["negatives"],
+                cfg, rules)
+    return f
+
+
+def _recsys_flops(arch: ArchDef, cfg, B: int, train: bool) -> float:
+    mult = 6 if train else 2
+    if arch.name == "dlrm-rm2":
+        bot = sum(a * b for a, b in zip((cfg.n_dense,) + cfg.bot_mlp[:-1], cfg.bot_mlp))
+        n_vec = cfg.n_sparse + 1
+        inter = n_vec * n_vec * cfg.embed_dim
+        tin = n_vec * (n_vec - 1) // 2 + cfg.embed_dim
+        top = sum(a * b for a, b in zip((tin,) + cfg.top_mlp[:-1], cfg.top_mlp))
+        return float(mult * B * (bot + inter + top))
+    if arch.name == "dcn-v2":
+        d = cfg.d_input
+        cross = cfg.n_cross_layers * d * d
+        deep = sum(a * b for a, b in zip((d,) + cfg.deep_mlp[:-1], cfg.deep_mlp))
+        return float(mult * B * (cross + deep + d + cfg.deep_mlp[-1]))
+    if arch.name == "bst":
+        S, d = cfg.seq_len + 1, cfg.embed_dim
+        blk = cfg.n_blocks * (4 * d * d * S + 2 * S * S * d + 8 * d * d * S)
+        dflat = S * d
+        mlp = sum(a * b for a, b in zip((dflat,) + cfg.mlp[:-1], cfg.mlp)) + cfg.mlp[-1]
+        return float(mult * B * (blk + mlp))
+    S, d = cfg.seq_len, cfg.embed_dim
+    blk = cfg.n_blocks * (4 * d * d * S + 2 * S * S * d + 8 * d * d * S)
+    return float(mult * B * blk)
+
+
+def _bert4rec_retrieval_flops(cfg, N: int) -> float:
+    """Two-tower: encode the user once + one dot per candidate."""
+    S, d = cfg.seq_len, cfg.embed_dim
+    blk = cfg.n_blocks * (4 * d * d * S + 2 * S * S * d + 8 * d * d * S)
+    return float(2 * blk + 2 * N * d)
+
+
+def build_recsys_job(arch: ArchDef, shape: ShapeSpec, mesh: Mesh,
+                     variant: str = "base") -> LoweringJob:
+    rules = mesh_rules(mesh)
+    cfg = arch.make_config()
+    # perf variant: replicate the embedding table (serving-size tables fit
+    # per-chip; kills the cross-shard gather collectives on the hot path)
+    if "repltable" in variant:
+        rules = rules.with_overrides(table_rows=None)
+    init_fn = _recsys_init(arch, cfg)
+    params_sds, axes = _abstract_init(init_fn, cfg)
+    param_sh = shardings_for_tree(axes, mesh, rules)
+    bspec = _batch_spec(mesh)
+    B = shape["batch"]
+
+    if shape.kind == "train":
+        opt_cfg = OptimizerConfig(lr=1e-3)
+        opt_sds, opt_sh = _opt_shardings(params_sds, axes, mesh, rules, opt_cfg)
+        batch_sds = _recsys_train_batch(arch, cfg, B)
+        batch_sh = {k: NamedSharding(mesh, P(bspec[0], *([None] * (len(v.shape) - 1))))
+                    if v.shape and v.shape[0] == B else _repl(mesh)
+                    for k, v in batch_sds.items()}
+        loss_fn = _recsys_loss(arch, cfg, rules)
+
+        def step(params, opt, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt, metrics = adamw_update(params, grads, opt, opt_cfg)
+            metrics["loss"] = loss
+            return params, opt, metrics
+
+        return LoweringJob(
+            name=f"{arch.name}:{shape.name}", arch=arch.name, shape=shape.name,
+            step_fn=step, args=(params_sds, opt_sds, batch_sds),
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, None),
+            static_meta={"model_flops": _recsys_flops(arch, cfg, B, True),
+                         "kind": "train"}, donate=(0, 1))
+
+    if shape.kind == "serve":
+        batch_sds = _recsys_train_batch(arch, cfg, B)
+        batch_sds.pop("labels", None)
+        if arch.name == "bert4rec":
+            batch_sds.pop("masked_pos", None)
+            batch_sds.pop("negatives", None)
+        batch_sh = {k: NamedSharding(mesh, P(bspec[0], *([None] * (len(v.shape) - 1))))
+                    for k, v in batch_sds.items()}
+
+        if arch.name in ("dlrm-rm2", "dcn-v2"):
+            fwd = rec_lib.dlrm_forward if arch.name == "dlrm-rm2" else rec_lib.dcn_forward
+
+            def step(params, batch):
+                return fwd(params, batch["dense"], batch["sparse"], cfg, rules)
+        elif arch.name == "bst":
+            def step(params, batch):
+                return rec_lib.bst_forward(params, batch["hist"],
+                                           batch["target"], cfg, rules)
+        else:
+            def step(params, batch):
+                h = rec_lib.bert4rec_encode(params, batch["items"], cfg, rules)
+                return h[:, -1, :]   # serving representation
+
+        return LoweringJob(
+            name=f"{arch.name}:{shape.name}", arch=arch.name, shape=shape.name,
+            step_fn=step, args=(params_sds, batch_sds),
+            in_shardings=(param_sh, batch_sh), out_shardings=None,
+            static_meta={"model_flops": _recsys_flops(arch, cfg, B, False),
+                         "kind": "serve"})
+
+    # retrieval: 1 query x 1e6 candidates (padded to shard evenly; the pad
+    # tail scores are sliced off by the caller)
+    N = _pad_count(shape["n_candidates"])
+    corpus_axes = tuple(a for a in ("pod", "data", "model")
+                        if a in mesh.axis_names)
+    # candidate-batch activations live on the corpus axes, not the training
+    # batch axes — without this the in-model batch constrains force a
+    # de-shard/re-shard round trip (found via the Cell-C hillclimb)
+    r_rules = rules.with_overrides(corpus=corpus_axes, batch=corpus_axes)
+    cspec = NamedSharding(mesh, P(corpus_axes))
+
+    if arch.name in ("dlrm-rm2", "dcn-v2"):
+        score_fn = (rec_lib.dlrm_score_candidates if arch.name == "dlrm-rm2"
+                    else rec_lib.dcn_score_candidates)
+        n_item = cfg.n_item_fields
+        batch_sds = {"dense": _sds((cfg.n_dense,), jnp.float32),
+                     "user_sparse": _sds((cfg.n_sparse - n_item,), jnp.int32),
+                     "cand_emb": _sds((N, n_item, cfg.embed_dim), jnp.float32)}
+        batch_sh = {"dense": _repl(mesh), "user_sparse": _repl(mesh),
+                    "cand_emb": NamedSharding(mesh, P(corpus_axes, None, None))}
+
+        def step(params, batch):
+            return score_fn(params, batch["dense"], batch["user_sparse"],
+                            batch["cand_emb"], cfg, r_rules)
+    elif arch.name == "bst":
+        batch_sds = {"hist": _sds((cfg.seq_len,), jnp.int32),
+                     "cand": _sds((N,), jnp.int32)}
+        batch_sh = {"hist": _repl(mesh), "cand": cspec}
+
+        def step(params, batch):
+            return rec_lib.bst_score_candidates(params, batch["hist"],
+                                                batch["cand"], cfg, r_rules)
+    else:
+        batch_sds = {"items": _sds((1, cfg.seq_len), jnp.int32),
+                     "cand": _sds((N,), jnp.int32)}
+        batch_sh = {"items": _repl(mesh), "cand": cspec}
+
+        def step(params, batch):
+            return rec_lib.bert4rec_score_candidates(
+                params, batch["items"], batch["cand"], cfg, r_rules)
+
+    mflops = (_bert4rec_retrieval_flops(cfg, N) if arch.name == "bert4rec"
+              else _recsys_flops(arch, cfg, N, False))
+    return LoweringJob(
+        name=f"{arch.name}:{shape.name}", arch=arch.name, shape=shape.name,
+        step_fn=step, args=(params_sds, batch_sds),
+        in_shardings=(param_sh, batch_sh), out_shardings=cspec,
+        static_meta={"model_flops": mflops, "kind": "retrieval"})
+
+
+# ---------------------------------------------------------------------------
+
+def build_guitar_serve_job(mesh: Mesh, variant: str = "base",
+                           n_items: int = 1_048_576, n_queries: int = 4096,
+                           degree: int = 48) -> LoweringJob:
+    """The paper's own serving step as a dry-run cell: corpus-sharded GUITAR
+    search (shard_map sub-search + global top-k merge) over a Twitch-scale
+    corpus with the DeepFM measure — the roofline entry for the technique
+    itself. Variant 'sl2g' lowers the evaluate-all baseline for comparison."""
+    from repro.configs.guitar_deepfm import measure_config
+    from repro.core.search import SearchConfig
+    from repro.core.sharded import make_sharded_search
+    from repro.models import deepfm as deepfm_lib
+
+    mcfg = measure_config()
+    box = {}
+
+    def _init(key):
+        p, ax = deepfm_lib.init_measure(key, mcfg)
+        box["ax"] = ax
+        return p
+
+    mparams_sds = jax.eval_shape(_init, jax.random.PRNGKey(0))
+
+    def score_fn(p, x, q):
+        return deepfm_lib.score(p, x, q, mcfg)
+
+    mode = "sl2g" if "sl2g" in variant else "guitar"
+    scfg = SearchConfig(k=10, ef=64, budget=8, alpha=1.01, mode=mode)
+    Pn = mesh.shape["model"]
+    Np = n_items // Pn
+    D = mcfg.vec_dim
+    args = (
+        mparams_sds,
+        _sds((Pn, Np, D), jnp.float32),           # base shards
+        _sds((Pn, Np, degree), jnp.int32),        # neighbor shards
+        _sds((Pn,), jnp.int32),                   # entries
+        _sds((Pn, Np), jnp.int32),                # global ids
+        _sds((n_queries, D), jnp.float32),        # queries
+    )
+    bspec = _batch_spec(mesh)
+    in_sh = (
+        jax.tree_util.tree_map(lambda _: _repl(mesh), mparams_sds),
+        NamedSharding(mesh, P("model", None, None)),
+        NamedSharding(mesh, P("model", None, None)),
+        NamedSharding(mesh, P("model")),
+        NamedSharding(mesh, P("model", None)),
+        NamedSharding(mesh, P(bspec[0], None)),
+    )
+    fn = make_sharded_search(score_fn, mesh, scfg)
+    # cost model: per expansion 2F (grad) + C·F (evals); iters ≈ 2·ef
+    F = 2 * (64 * 64 + 64 * 64 + 64 + mcfg.fm_dim)
+    iters = 2 * scfg.ef
+    per_q = iters * (2 + (scfg.budget if mode == "guitar" else degree)) * F
+    return LoweringJob(
+        name=f"guitar-serve:{mode}", arch="guitar-serve", shape=mode,
+        step_fn=fn, args=args, in_shardings=in_sh, out_shardings=None,
+        static_meta={"model_flops": float(per_q * n_queries * Pn),
+                     "kind": "serve",
+                     "note": "corpus-sharded search; per-shard sub-search"})
+
+
+def build_job(arch_name: str, shape_name: str, mesh: Mesh,
+              variant: str = "base") -> LoweringJob:
+    if arch_name == "guitar-serve":
+        # shape selects the searcher: 'guitar' (gradient-pruned) or 'sl2g'
+        return build_guitar_serve_job(mesh, variant=shape_name)
+    arch = get_arch(arch_name)
+    shape = arch.shape(shape_name)
+    if arch.family == "lm":
+        return build_lm_job(arch, shape, mesh, variant)
+    if arch.family == "gnn":
+        return build_gnn_job(arch, shape, mesh, variant)
+    return build_recsys_job(arch, shape, mesh, variant)

@@ -1,0 +1,1 @@
+from repro.models import deepfm, gnn, recsys, transformer  # noqa: F401

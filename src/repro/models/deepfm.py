@@ -1,0 +1,85 @@
+"""DeepFM matching measure — faithful to the paper's experimental setup
+(GUITAR §4, Fig. 3): factorization dim 8, deep dim 32, user/item vectors are
+both 40-dimensional ( [fm(8) | deep(32)] ).
+
+    f(x, q) = sigmoid( <x_fm, q_fm> + MLP([q_deep, x_deep]) )
+
+The MLP hidden sizes are not specified by the paper; we use (64, 64) and
+record the choice in EXPERIMENTS.md. The full trainable recommender is
+user-table + item-table + MLP, trained with BCE on interactions; after
+training, item rows become the ANN base vectors and user rows the queries —
+the paper's own label protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    name: str = "deepfm"
+    fm_dim: int = 8
+    deep_dim: int = 32
+    mlp_hidden: Tuple[int, ...] = (64, 64)
+    n_users: int = 10_000
+    n_items: int = 100_000
+    dtype: Any = jnp.float32
+
+    @property
+    def vec_dim(self) -> int:
+        return self.fm_dim + self.deep_dim  # 40
+
+
+def init_measure(key: jax.Array, cfg: DeepFMConfig) -> Tuple[dict, dict]:
+    """The measure network only (no embedding tables)."""
+    mlp, mlp_axes = L.init_mlp(
+        key, [2 * cfg.deep_dim, *cfg.mlp_hidden, 1], cfg.dtype)
+    return {"mlp": mlp}, {"mlp": mlp_axes}
+
+
+def init_model(key: jax.Array, cfg: DeepFMConfig) -> Tuple[dict, dict]:
+    """Full trainable recommender: user/item tables + measure MLP."""
+    ks = jax.random.split(key, 3)
+    measure, measure_axes = init_measure(ks[0], cfg)
+    params = {
+        "users": L.embed_init(ks[1], cfg.n_users, cfg.vec_dim, cfg.dtype, scale=0.3),
+        "items": L.embed_init(ks[2], cfg.n_items, cfg.vec_dim, cfg.dtype, scale=0.3),
+        **measure,
+    }
+    axes = {
+        "users": ("table_rows", "table_dim"),
+        "items": ("table_rows", "table_dim"),
+        **measure_axes,
+    }
+    return params, axes
+
+
+def score(measure_params: dict, x: jax.Array, q: jax.Array,
+          cfg: DeepFMConfig) -> jax.Array:
+    """f(x, q) ∈ [0, 1]. x: (..., 40) item vec; q: (..., 40) user vec."""
+    fm = jnp.sum(x[..., : cfg.fm_dim] * q[..., : cfg.fm_dim], axis=-1)
+    deep_in = jnp.concatenate(
+        [q[..., cfg.fm_dim:], x[..., cfg.fm_dim:]], axis=-1)
+    deep = L.mlp_apply(measure_params["mlp"], deep_in, act=jax.nn.relu)[..., 0]
+    return jax.nn.sigmoid(fm + deep)
+
+
+def interaction_loss(params: dict, user_ids: jax.Array, item_ids: jax.Array,
+                     labels: jax.Array, cfg: DeepFMConfig) -> jax.Array:
+    """BCE training loss over (user, item, click) interactions."""
+    q = params["users"][user_ids]
+    x = params["items"][item_ids]
+    fm = jnp.sum(x[..., : cfg.fm_dim] * q[..., : cfg.fm_dim], axis=-1)
+    deep_in = jnp.concatenate([q[..., cfg.fm_dim:], x[..., cfg.fm_dim:]], axis=-1)
+    deep = L.mlp_apply({"w": params["mlp"]["w"], "b": params["mlp"]["b"]},
+                       deep_in, act=jax.nn.relu)[..., 0]
+    logits = (fm + deep).astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))

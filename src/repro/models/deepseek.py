@@ -1,0 +1,442 @@
+"""DeepSeek-V3-style model: Multi-head Latent Attention (MLA) + fine-grained
+MoE (1 shared + 256 routed, top-8, sigmoid router) + optional MTP head.
+
+Faithful dims [arXiv:2412.19437]: d_model 7168, 128 heads, qk_nope 128,
+qk_rope 64, v_head 128, q_lora 1536, kv_lora 512; first 3 layers dense
+(d_ff 18432), remaining layers MoE with expert d_ff 2048.
+
+Decode uses the *absorbed* MLA form: the KV cache stores only the compressed
+latent (kv_lora + rope dims = 576 per token), and the query is absorbed into
+latent space — this is what makes the 500k-token decode shape cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.sharding import ShardingRules, constrain, single_device_rules
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepSeekConfig:
+    name: str = "deepseek"
+    n_layers: int = 61
+    n_dense_layers: int = 3
+    d_model: int = 7168
+    n_heads: int = 128
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    dense_d_ff: int = 18432
+    moe_d_ff: int = 2048
+    n_experts: int = 256
+    moe_top_k: int = 8
+    n_shared_experts: int = 1
+    vocab_size: int = 129280
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    capacity_factor: float = 1.25
+    moe_groups: int = 16
+    moe_impl: str = "scatter"   # scatter (pjit) | ep (shard_map all-to-all)
+    attn_chunk: int = 0     # >0: chunked-causal attention (flash-style)
+    use_mtp: bool = True
+    mtp_weight: float = 0.1
+    remat: bool = True
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+
+def _w(key, *shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)).astype(dtype)
+
+
+def _init_mla(key, cfg: DeepSeekConfig, n_layers: int):
+    ks = jax.random.split(key, 8)
+    d, H = cfg.d_model, cfg.n_heads
+    qk, rr, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = cfg.dtype
+
+    def stack(kk, *shape, fan_in):
+        kl = jax.random.split(kk, n_layers)
+        return jax.vmap(lambda k_: _w(k_, *shape, fan_in=fan_in, dtype=dt))(kl)
+
+    params = {
+        "wq_a": stack(ks[0], d, cfg.q_lora_rank, fan_in=d),
+        "q_norm": jnp.ones((n_layers, cfg.q_lora_rank), dt),
+        "wq_b": stack(ks[1], cfg.q_lora_rank, H * (qk + rr), fan_in=cfg.q_lora_rank),
+        "wkv_a": stack(ks[2], d, cfg.kv_lora_rank + rr, fan_in=d),
+        "kv_norm": jnp.ones((n_layers, cfg.kv_lora_rank), dt),
+        "wkv_b": stack(ks[3], cfg.kv_lora_rank, H * (qk + vh), fan_in=cfg.kv_lora_rank),
+        "wo": stack(ks[4], H * vh, d, fan_in=H * vh),
+    }
+    axes = {
+        "wq_a": ("layers", "embed", "q_lora"),
+        "q_norm": ("layers", "q_lora"),
+        "wq_b": ("layers", "q_lora", "heads"),
+        "wkv_a": ("layers", "embed", "kv_lora"),
+        "kv_norm": ("layers", "kv_lora"),
+        "wkv_b": ("layers", "kv_lora", "heads"),
+        "wo": ("layers", "heads", "embed"),
+    }
+    return params, axes
+
+
+def init_params(key: jax.Array, cfg: DeepSeekConfig) -> Tuple[dict, dict]:
+    ks = jax.random.split(key, 16)
+    d, dt = cfg.d_model, cfg.dtype
+    n_moe = cfg.n_layers - cfg.n_dense_layers
+
+    dense_attn, dense_attn_axes = _init_mla(ks[0], cfg, cfg.n_dense_layers)
+    moe_attn, moe_attn_axes = _init_mla(ks[1], cfg, n_moe)
+
+    def stack(kk, n, *shape, fan_in):
+        kl = jax.random.split(kk, n)
+        return jax.vmap(lambda k_: _w(k_, *shape, fan_in=fan_in, dtype=dt))(kl)
+
+    dense_mlp = {
+        "w_gate": stack(ks[2], cfg.n_dense_layers, d, cfg.dense_d_ff, fan_in=d),
+        "w_up": stack(ks[3], cfg.n_dense_layers, d, cfg.dense_d_ff, fan_in=d),
+        "w_down": stack(ks[4], cfg.n_dense_layers, cfg.dense_d_ff, d, fan_in=cfg.dense_d_ff),
+    }
+    dense_mlp_axes = {
+        "w_gate": ("layers", "embed", "mlp"),
+        "w_up": ("layers", "embed", "mlp"),
+        "w_down": ("layers", "mlp", "embed"),
+    }
+    moe_mlp, moe_mlp_axes = moe_lib.init_moe(
+        ks[5], n_layers=n_moe, d_model=d, d_ff=cfg.moe_d_ff,
+        n_experts=cfg.n_experts, dtype=dt, n_shared=cfg.n_shared_experts,
+        shared_d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+
+    def norms(n):
+        return ({"ln1": jnp.ones((n, d), dt), "ln2": jnp.ones((n, d), dt)},
+                {"ln1": ("layers", "embed"), "ln2": ("layers", "embed")})
+
+    dn, dn_axes = norms(cfg.n_dense_layers)
+    mn, mn_axes = norms(n_moe)
+
+    V_pad = L.pad_vocab(cfg.vocab_size)
+    params = {
+        "embed": L.embed_init(ks[6], V_pad, d, dt),
+        "dense_layers": {"attn": dense_attn, "mlp": dense_mlp, "norm": dn},
+        "moe_layers": {"attn": moe_attn, "mlp": moe_mlp, "norm": mn},
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": L.dense_init(ks[7], d, V_pad, dt),
+    }
+    axes = {
+        "embed": ("vocab", "embed"),
+        "dense_layers": {"attn": dense_attn_axes, "mlp": dense_mlp_axes, "norm": dn_axes},
+        "moe_layers": {"attn": moe_attn_axes, "mlp": moe_mlp_axes, "norm": mn_axes},
+        "final_norm": ("embed",),
+        "lm_head": ("embed", "vocab"),
+    }
+    if cfg.use_mtp:
+        mtp_attn, mtp_attn_axes = _init_mla(ks[8], cfg, 1)
+        mtp_attn = jax.tree_util.tree_map(lambda x: x[0], mtp_attn)
+        params["mtp"] = {
+            "proj": _w(ks[9], 2 * d, d, fan_in=2 * d, dtype=dt),
+            "attn": mtp_attn,
+            "norm1": jnp.ones((d,), dt),
+            "norm2": jnp.ones((d,), dt),
+            "w_gate": _w(ks[10], d, cfg.moe_d_ff, fan_in=d, dtype=dt),
+            "w_up": _w(ks[11], d, cfg.moe_d_ff, fan_in=d, dtype=dt),
+            "w_down": _w(ks[12], cfg.moe_d_ff, d, fan_in=cfg.moe_d_ff, dtype=dt),
+        }
+        axes["mtp"] = {
+            "proj": ("embed", "embed"),
+            "attn": {k: v[1:] for k, v in mtp_attn_axes.items()},
+            "norm1": ("embed",), "norm2": ("embed",),
+            "w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+            "w_down": ("mlp", "embed"),
+        }
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# MLA attention
+# ---------------------------------------------------------------------------
+
+def _mla_train(p, x, positions, mask, cfg: DeepSeekConfig, rules):
+    """Full (non-absorbed) MLA for train/prefill. x: (B, S, d)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    qk, rr, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    if S > 1:
+        # SP gather point (Megatron SP): projections consume the full seq
+        x = constrain(x, rules, "batch", None, None)
+
+    q_lat = L.rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"]).reshape(B, S, H, qk + rr)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ p["wkv_a"]                                    # (B, S, kv_lora + rr)
+    c_kv = L.rms_norm(kv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = L.apply_rope(kv[..., None, cfg.kv_lora_rank:], positions, cfg.rope_theta)
+
+    kvu = (c_kv @ p["wkv_b"]).reshape(B, S, H, qk + vh)
+    k_nope, v = kvu[..., :qk], kvu[..., qk:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, rr))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qf = constrain(qf, rules, "batch", "seq", "heads", None)
+    k = constrain(k, rules, "batch", "seq", "heads", None)
+
+    scale = 1.0 / math.sqrt(qk + rr)
+    if cfg.attn_chunk and S > cfg.attn_chunk:
+        out = L.chunked_causal_mha(qf, k, v, cfg.attn_chunk, scale=scale)
+    else:
+        logits = jnp.einsum("bshd,bthd->bhst", qf, k).astype(jnp.float32) * scale
+        if mask is not None:
+            logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    out = constrain(out, rules, "batch", "seq", "heads", None)
+    return out.reshape(B, S, H * vh) @ p["wo"]
+
+
+def _mla_decode(p, x, cache_c, cache_kr, pos, cfg: DeepSeekConfig, rules):
+    """Absorbed MLA decode. x: (B, 1, d); cache_c: (B, T, kv_lora);
+    cache_kr: (B, T, rr). Returns (out, new_cache_c, new_cache_kr)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    qk, rr, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    R = cfg.kv_lora_rank
+    positions = jnp.broadcast_to(pos[None, None], (B, S))
+
+    q_lat = L.rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"]).reshape(B, S, H, qk + rr)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ p["wkv_a"]
+    c_new = L.rms_norm(kv[..., :R], p["kv_norm"], cfg.norm_eps)
+    kr_new = L.apply_rope(kv[..., None, R:], positions, cfg.rope_theta)[:, :, 0, :]
+
+    cache_c = jax.lax.dynamic_update_slice(cache_c, c_new.astype(cache_c.dtype), (0, pos, 0))
+    cache_kr = jax.lax.dynamic_update_slice(cache_kr, kr_new.astype(cache_kr.dtype), (0, pos, 0))
+    T = cache_c.shape[1]
+
+    # absorb: q_nope (B,S,H,qk) x Wkv_b[:, :, :qk] (R,H,qk) -> (B,S,H,R)
+    wkv_b = p["wkv_b"].reshape(R, H, qk + vh)
+    w_k, w_v = wkv_b[..., :qk], wkv_b[..., qk:]
+    q_abs = jnp.einsum("bshq,rhq->bshr", q_nope, w_k)
+    q_abs = constrain(q_abs, rules, "batch", "seq", "heads", None)
+
+    scale = 1.0 / math.sqrt(qk + rr)
+    logits = (jnp.einsum("bshr,btr->bhst", q_abs, cache_c) +
+              jnp.einsum("bshr,btr->bhst", q_rope, cache_kr)).astype(jnp.float32) * scale
+    key_pos = jnp.arange(T)
+    mask = key_pos[None, :] <= (pos + jnp.arange(S))[:, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(cache_c.dtype)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs, cache_c)     # (B,S,H,R)
+    out = jnp.einsum("bshr,rhv->bshv", out_lat, w_v)           # (B,S,H,vh)
+    out = constrain(out, rules, "batch", "seq", "heads", None)
+    return out.reshape(B, S, H * vh) @ p["wo"], cache_c, cache_kr
+
+
+# ---------------------------------------------------------------------------
+# Blocks / forward
+# ---------------------------------------------------------------------------
+
+def _dense_ffn(p, x, rules):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, rules, "batch", "seq", "mlp")
+    return h @ p["w_down"]
+
+
+def _block(cfg, rules, x, lp, positions, mask, is_moe: bool):
+    h = L.rms_norm(x, lp["norm"]["ln1"], cfg.norm_eps)
+    x = x + _mla_train(lp["attn"], h, positions, mask, cfg, rules)
+    h = L.rms_norm(x, lp["norm"]["ln2"], cfg.norm_eps)
+    if is_moe:
+        if cfg.moe_impl == "ep" and rules.mesh is not None:
+            y = moe_lib.moe_ffn_ep(
+                lp["mlp"], h, n_experts=cfg.n_experts, top_k=cfg.moe_top_k,
+                capacity_factor=cfg.capacity_factor, rules=rules,
+                router_type="sigmoid")
+        else:
+            y = moe_lib.moe_ffn(
+                lp["mlp"], h, n_experts=cfg.n_experts, top_k=cfg.moe_top_k,
+                capacity_factor=cfg.capacity_factor, n_groups=cfg.moe_groups,
+                rules=rules, router_type="sigmoid")
+    else:
+        y = _dense_ffn(lp["mlp"], h, rules)
+    # sequence-parallel residual handoff between blocks
+    return constrain(x + y, rules, "batch", "act_seq", None)
+
+
+def forward(params: dict, tokens: jax.Array, cfg: DeepSeekConfig,
+            rules: Optional[ShardingRules] = None,
+            return_hidden: bool = False):
+    rules = rules or single_device_rules()
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = constrain(x, rules, "batch", "act_seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    mask = L.causal_mask(S)
+
+    def dense_body(x, lp):
+        return _block(cfg, rules, x, lp, positions, mask, is_moe=False), None
+
+    def moe_body(x, lp):
+        return _block(cfg, rules, x, lp, positions, mask, is_moe=True), None
+
+    if cfg.remat:
+        dense_body = jax.checkpoint(dense_body, policy=jax.checkpoint_policies.nothing_saveable)
+        moe_body = jax.checkpoint(moe_body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(dense_body, x, params["dense_layers"])
+    x, _ = jax.lax.scan(moe_body, x, params["moe_layers"])
+    h_final = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.mask_pad_vocab(h_final @ params["lm_head"], cfg.vocab_size)
+    logits = constrain(logits, rules, "batch", "seq", "vocab")
+    if return_hidden:
+        return logits, h_final
+    return logits
+
+
+def mtp_logits(params: dict, hidden: jax.Array, next_tokens: jax.Array,
+               cfg: DeepSeekConfig, rules: ShardingRules) -> jax.Array:
+    """MTP module: predict token t+2 from (hidden_t, emb(token_{t+1}))."""
+    p = params["mtp"]
+    B, S, d = hidden.shape
+    emb = params["embed"].astype(cfg.dtype)[next_tokens]
+    x = jnp.concatenate([hidden, emb], axis=-1) @ p["proj"]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    mask = L.causal_mask(S)
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    x = x + _mla_train(p["attn"], h, positions, mask, cfg, rules)
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    hh = jax.nn.silu(h @ p["w_gate"]) * (h @ p["w_up"])
+    x = x + hh @ p["w_down"]
+    return L.mask_pad_vocab(x @ params["lm_head"], cfg.vocab_size)
+
+
+def lm_loss(params: dict, tokens: jax.Array, targets: jax.Array,
+            cfg: DeepSeekConfig, rules: Optional[ShardingRules] = None) -> jax.Array:
+    rules = rules or single_device_rules()
+    if cfg.use_mtp:
+        logits, hidden = forward(params, tokens, cfg, rules, return_hidden=True)
+    else:
+        logits = forward(params, tokens, cfg, rules)
+
+    def nll(lg, tg):
+        logp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, tg[..., None], axis=-1))
+
+    loss = nll(logits, targets)
+    if cfg.use_mtp:
+        # MTP predicts targets shifted one further; reuse `targets` as the
+        # "next token" stream and roll for the t+2 labels.
+        t2 = jnp.roll(targets, -1, axis=1)
+        mtp_fn = jax.checkpoint(
+            lambda h, t: mtp_logits(params, h, t, cfg, rules)) \
+            if cfg.remat else lambda h, t: mtp_logits(params, h, t, cfg, rules)
+        loss = loss + cfg.mtp_weight * nll(mtp_fn(hidden, targets), t2)
+    return loss
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: DeepSeekConfig,
+            rules: Optional[ShardingRules] = None):
+    """Prefill: tokens (B, S) -> (next-token logits, latent cache
+    {'c': (L, B, S, kv_lora), 'kr': (L, B, S, rr)})."""
+    rules = rules or single_device_rules()
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = constrain(x, rules, "batch", "act_seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    mask = L.causal_mask(S)
+    R = cfg.kv_lora_rank
+
+    def latents(lp, x):
+        # cache latents are a function of the *normalized* block input
+        h = L.rms_norm(x, lp["norm"]["ln1"], cfg.norm_eps)
+        kv = h @ lp["attn"]["wkv_a"]
+        c = L.rms_norm(kv[..., :R], lp["attn"]["kv_norm"], cfg.norm_eps)
+        kr = L.apply_rope(kv[..., None, R:], positions, cfg.rope_theta)[:, :, 0, :]
+        return c, kr
+
+    def dense_body(x, lp):
+        c, kr = latents(lp, x)
+        return _block(cfg, rules, x, lp, positions, mask, is_moe=False), (c, kr)
+
+    def moe_body(x, lp):
+        c, kr = latents(lp, x)
+        return _block(cfg, rules, x, lp, positions, mask, is_moe=True), (c, kr)
+
+    x, dkv = jax.lax.scan(dense_body, x, params["dense_layers"])
+    x, mkv = jax.lax.scan(moe_body, x, params["moe_layers"])
+    x = L.rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = L.mask_pad_vocab(x[:, 0, :] @ params["lm_head"], cfg.vocab_size)
+    cache = {"c": jnp.concatenate([dkv[0], mkv[0]], axis=0),
+             "kr": jnp.concatenate([dkv[1], mkv[1]], axis=0)}
+    return constrain(logits, rules, "batch", "vocab"), cache
+
+
+def init_cache(cfg: DeepSeekConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return {
+        "c": jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((cfg.n_layers, batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def cache_axes() -> dict:
+    return {"c": ("layers", "batch", "kv_seq", None),
+            "kr": ("layers", "batch", "kv_seq", None)}
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: DeepSeekConfig, rules: Optional[ShardingRules] = None):
+    """One decode step (absorbed MLA). tokens: (B,), pos: scalar int32."""
+    rules = rules or single_device_rules()
+    B = tokens.shape[0]
+    x = params["embed"].astype(cfg.dtype)[tokens][:, None, :]
+    nd = cfg.n_dense_layers
+
+    def body(x, lp_cache):
+        lp, cc, ckr, is_moe = lp_cache
+        h = L.rms_norm(x, lp["norm"]["ln1"], cfg.norm_eps)
+        attn_out, cc, ckr = _mla_decode(lp["attn"], h, cc, ckr, pos, cfg, rules)
+        x = x + attn_out
+        h = L.rms_norm(x, lp["norm"]["ln2"], cfg.norm_eps)
+        if is_moe:
+            y = moe_lib.moe_ffn(lp["mlp"], h, n_experts=cfg.n_experts,
+                                top_k=cfg.moe_top_k, capacity_factor=cfg.capacity_factor,
+                                n_groups=1, rules=rules, router_type="sigmoid")
+        else:
+            y = _dense_ffn(lp["mlp"], h, rules)
+        return x + y, (cc, ckr)
+
+    # dense prefix (scan over the 3 dense layers)
+    def dense_body(x, lp_cache):
+        lp, cc, ckr = lp_cache
+        x, (cc, ckr) = body(x, (lp, cc, ckr, False))
+        return x, (cc, ckr)
+
+    def moe_body(x, lp_cache):
+        lp, cc, ckr = lp_cache
+        x, (cc, ckr) = body(x, (lp, cc, ckr, True))
+        return x, (cc, ckr)
+
+    x, dense_kv = jax.lax.scan(
+        dense_body, x, (params["dense_layers"], cache["c"][:nd], cache["kr"][:nd]))
+    x, moe_kv = jax.lax.scan(
+        moe_body, x, (params["moe_layers"], cache["c"][nd:], cache["kr"][nd:]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.mask_pad_vocab(x[:, 0, :] @ params["lm_head"], cfg.vocab_size)
+    new_cache = {
+        "c": jnp.concatenate([dense_kv[0], moe_kv[0]], axis=0),
+        "kr": jnp.concatenate([dense_kv[1], moe_kv[1]], axis=0),
+    }
+    return logits, new_cache

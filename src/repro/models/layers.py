@@ -1,0 +1,193 @@
+"""Shared neural-network building blocks (pure JAX, pytree params).
+
+Every ``init_*`` function returns ``(params, axes)`` where ``axes`` is a
+pytree of logical-axis tuples with the same structure as ``params`` — this is
+what drives sharding (see repro.sharding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+VOCAB_PAD = 16  # vocab/table rows padded to a multiple of this (TP evenness)
+
+
+def pad_vocab(n: int) -> int:
+    return ((n + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+def mask_pad_vocab(logits: jax.Array, vocab: int) -> jax.Array:
+    """-inf the padded vocab tail so softmax/argmax ignore it."""
+    if logits.shape[-1] == vocab:
+        return logits
+    ok = jnp.arange(logits.shape[-1]) < vocab
+    return jnp.where(ok, logits, -1e30)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, n: int, d: int, dtype=jnp.bfloat16, scale: float = 0.02):
+    return (jax.random.normal(key, (n, d), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, n_heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) — shared by the dense LM family
+# ---------------------------------------------------------------------------
+
+def mha_attention(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, T, H, hd)  (same head count — GQA pre-expanded)
+    v: jax.Array,  # (B, T, H, hd)
+    mask: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Plain MHA einsum. Keeping q/k/v at the full head count (KV heads
+    repeated) means the `heads` dim shards cleanly on the TP axis with no
+    reshape-induced resharding — the k/v expansion is cheap next to q·kᵀ."""
+    hd = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def chunked_causal_mha(q: jax.Array, k: jax.Array, v: jax.Array,
+                       chunk: int, scale: Optional[float] = None) -> jax.Array:
+    """Causal MHA with lax.scan over query chunks — bounds the transient
+    (B, H, S, T) logits tensor to (B, H, chunk, T). Flash-attention's memory
+    behaviour expressed in XLA (the Pallas kernel handles the decode shape;
+    prefill/train long-seq shapes use this chunking). The chunk body is
+    rematerialized so the backward never stacks per-chunk logits."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    hd_v = v.shape[-1]          # MLA: v head dim != qk head dim
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    nq = S // chunk
+    qc = q.reshape(B, nq, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, pair):
+        i, qb = pair                                   # qb: (B, c, H, hd)
+        logits = jnp.einsum("bshd,bthd->bhst", qb, k).astype(jnp.float32) * scale
+        qpos = i * chunk + jnp.arange(chunk)
+        mask = jnp.arange(T)[None, :] <= qpos[:, None]
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v)
+        return None, out
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd_v)
+
+
+def expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, T, KV, hd) -> (B, T, H, hd) by repeating each kv head G times."""
+    B, T, KV, hd = k.shape
+    G = n_heads // KV
+    return jnp.repeat(k, G, axis=2)
+
+
+def gqa_attention(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, T, KV, hd)
+    v: jax.Array,  # (B, T, KV, hd)
+    mask: Optional[jax.Array] = None,  # broadcastable to (B, H? or KV groups.., S, T)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Grouped-query attention keeping k/v at KV heads (used on the decode
+    path where the KV cache must stay compact)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, KV, G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        # mask: (B, 1, 1, S, T) or (S, T)
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+def causal_mask(S: int, T: Optional[int] = None) -> jax.Array:
+    T = T if T is not None else S
+    # query i (at absolute position T - S + i) attends to keys <= its position
+    qi = jnp.arange(S)[:, None] + (T - S)
+    ki = jnp.arange(T)[None, :]
+    return ki <= qi  # (S, T)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def mlp_apply(params: dict, x: jax.Array, act=jax.nn.relu) -> jax.Array:
+    """Simple MLP: params = {'w': [W0, W1, ...], 'b': [b0, b1, ...]}."""
+    n = len(params["w"])
+    for i in range(n):
+        x = x @ params["w"][i] + params["b"][i]
+        if i < n - 1:
+            x = act(x)
+    return x
+
+
+def init_mlp(key, dims, dtype=jnp.bfloat16) -> Tuple[dict, dict]:
+    """dims = [d_in, h1, ..., d_out]. Returns (params, axes)."""
+    ws, bs = [], []
+    keys = jax.random.split(key, len(dims) - 1)
+    for i in range(len(dims) - 1):
+        ws.append(dense_init(keys[i], dims[i], dims[i + 1], dtype))
+        bs.append(jnp.zeros((dims[i + 1],), dtype))
+    params = {"w": ws, "b": bs}
+    axes: dict[str, Any] = {
+        "w": [(None, None) for _ in ws],
+        "b": [(None,) for _ in bs],
+    }
+    return params, axes

@@ -1,0 +1,437 @@
+"""RecSys architectures: DLRM (RM2), DCN-v2, BST, BERT4Rec + EmbeddingBag.
+
+JAX has no native EmbeddingBag / CSR sparse: lookups are ``jnp.take`` and
+bagged (multi-hot) lookups are ``take + segment_sum`` — implemented here as
+first-class ops (and as a Pallas kernel in repro.kernels.embedding_bag).
+
+Embedding tables for the Criteo-style models are stored as ONE concatenated
+table with per-field row offsets (the standard trick: a single big gather
+instead of 26 small ones). Tables are row-sharded over the ``model`` mesh
+axis (hierarchical-parallel DLRM: model-parallel embeddings, data-parallel
+MLPs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.sharding import ShardingRules, constrain, single_device_rules
+
+# Criteo Kaggle display-advertising per-field cardinalities (26 sparse fields).
+CRITEO_CARDINALITIES: Tuple[int, ...] = (
+    1460, 583, 10131227, 2202608, 305, 24, 12517, 633, 3, 93145, 5683,
+    8351593, 3194, 27, 14992, 5461306, 10, 5652, 2173, 4, 7046547, 18, 15,
+    286181, 105, 142572,
+)
+
+
+# ---------------------------------------------------------------------------
+# Embedding ops
+# ---------------------------------------------------------------------------
+
+def embedding_lookup(table: jax.Array, indices: jax.Array) -> jax.Array:
+    """Plain row gather: (rows, dim) x (...,) -> (..., dim)."""
+    return jnp.take(table, indices, axis=0)
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array, segment_ids: jax.Array,
+                  n_bags: int, weights: Optional[jax.Array] = None,
+                  mode: str = "sum") -> jax.Array:
+    """EmbeddingBag: gather rows then segment-reduce into bags.
+
+    indices: (nnz,) int32 rows; segment_ids: (nnz,) int32 bag ids (sorted or
+    not); returns (n_bags, dim)."""
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+        cnt = jax.ops.segment_sum(jnp.ones_like(segment_ids, rows.dtype),
+                                  segment_ids, num_segments=n_bags)
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=n_bags)
+    raise ValueError(mode)
+
+
+def field_offsets(cardinalities: Sequence[int]) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(cardinalities)[:-1]]).astype(np.int32)
+
+
+def multi_field_lookup(table: jax.Array, sparse: jax.Array,
+                       offsets: jax.Array) -> jax.Array:
+    """sparse: (B, F) per-field ids -> (B, F, dim) via one fused gather."""
+    return jnp.take(table, sparse + offsets[None, :], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# DLRM  [arXiv:1906.00091] — RM2 flavor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    cardinalities: Tuple[int, ...] = CRITEO_CARDINALITIES
+    embed_dim: int = 64
+    bot_mlp: Tuple[int, ...] = (512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    n_item_fields: int = 13   # trailing fields treated as item-side (retrieval)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.cardinalities)
+
+
+def dlrm_init(key: jax.Array, cfg: DLRMConfig) -> Tuple[dict, dict]:
+    ks = jax.random.split(key, 4)
+    total_rows = L.pad_vocab(int(sum(cfg.cardinalities)))
+    table = L.embed_init(ks[0], total_rows, cfg.embed_dim, cfg.dtype)
+    bot, bot_axes = L.init_mlp(ks[1], [cfg.n_dense, *cfg.bot_mlp], cfg.dtype)
+    n_vec = cfg.n_sparse + 1
+    n_int = n_vec * (n_vec - 1) // 2
+    top_in = n_int + cfg.embed_dim
+    top, top_axes = L.init_mlp(ks[2], [top_in, *cfg.top_mlp], cfg.dtype)
+    params = {"table": table, "bot": bot, "top": top}
+    axes = {"table": ("table_rows", "table_dim"), "bot": bot_axes,
+            "top": top_axes}
+    return params, axes
+
+
+def _dot_interaction(vecs: jax.Array) -> jax.Array:
+    """vecs: (B, F, d) -> (B, F*(F-1)/2) upper-triangular pairwise dots."""
+    B, F, _ = vecs.shape
+    gram = jnp.einsum("bfd,bgd->bfg", vecs, vecs)
+    iu, ju = jnp.triu_indices(F, k=1)
+    return gram[:, iu, ju]
+
+
+def dlrm_forward(params: dict, dense: jax.Array, sparse: jax.Array,
+                 cfg: DLRMConfig, rules: Optional[ShardingRules] = None) -> jax.Array:
+    """dense: (B, 13) f32; sparse: (B, 26) int32 -> logits (B,)."""
+    rules = rules or single_device_rules()
+    dense = constrain(dense, rules, "batch", None)
+    offsets = jnp.asarray(field_offsets(cfg.cardinalities))
+    emb = multi_field_lookup(params["table"], sparse, offsets)
+    emb = constrain(emb, rules, "batch", None, None)
+    d0 = L.mlp_apply(params["bot"], dense.astype(cfg.dtype), act=jax.nn.relu)
+    vecs = jnp.concatenate([d0[:, None, :], emb], axis=1)      # (B, 27, d)
+    inter = _dot_interaction(vecs)
+    top_in = jnp.concatenate([inter, d0], axis=-1)
+    return L.mlp_apply(params["top"], top_in, act=jax.nn.relu)[:, 0]
+
+
+def dlrm_score_candidates(params: dict, dense: jax.Array, user_sparse: jax.Array,
+                          cand_emb: jax.Array, cfg: DLRMConfig,
+                          rules: Optional[ShardingRules] = None) -> jax.Array:
+    """Retrieval scoring: one user vs N candidates.
+    dense: (13,); user_sparse: (n_user_fields,) ids (already offset);
+    cand_emb: (N, n_item_fields, d) pre-gathered item-side embeddings."""
+    rules = rules or single_device_rules()
+    cand_emb = constrain(cand_emb, rules, "corpus", None, None)
+    d0 = L.mlp_apply(params["bot"], dense.astype(cfg.dtype), act=jax.nn.relu)
+    user_emb = jnp.take(params["table"], user_sparse, axis=0)  # (Fu, d)
+    fixed = jnp.concatenate([d0[None, :], user_emb], axis=0)   # (Fu+1, d)
+
+    def score_one(item_vecs):
+        vecs = jnp.concatenate([fixed, item_vecs], axis=0)[None]
+        inter = _dot_interaction(vecs)[0]
+        top_in = jnp.concatenate([inter, d0], axis=-1)
+        return L.mlp_apply(params["top"], top_in, act=jax.nn.relu)[0]
+
+    return jax.vmap(score_one)(cand_emb)
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2  [arXiv:2008.13535]
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DCNConfig:
+    name: str = "dcn-v2"
+    n_dense: int = 13
+    cardinalities: Tuple[int, ...] = CRITEO_CARDINALITIES
+    embed_dim: int = 16
+    n_cross_layers: int = 3
+    deep_mlp: Tuple[int, ...] = (1024, 1024, 512)
+    structure: str = "parallel"   # parallel: cross ∥ deep -> concat -> logit
+    n_item_fields: int = 13
+    dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.cardinalities)
+
+    @property
+    def d_input(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+
+def dcn_init(key: jax.Array, cfg: DCNConfig) -> Tuple[dict, dict]:
+    ks = jax.random.split(key, 5)
+    total_rows = L.pad_vocab(int(sum(cfg.cardinalities)))
+    table = L.embed_init(ks[0], total_rows, cfg.embed_dim, cfg.dtype)
+    d = cfg.d_input
+    kc = jax.random.split(ks[1], cfg.n_cross_layers)
+    cross = {
+        "w": jnp.stack([L.dense_init(kc[i], d, d, cfg.dtype) for i in range(cfg.n_cross_layers)]),
+        "b": jnp.zeros((cfg.n_cross_layers, d), cfg.dtype),
+    }
+    deep, deep_axes = L.init_mlp(ks[2], [d, *cfg.deep_mlp], cfg.dtype)
+    head, head_axes = L.init_mlp(ks[3], [d + cfg.deep_mlp[-1], 1], cfg.dtype)
+    params = {"table": table, "cross": cross, "deep": deep, "head": head}
+    axes = {"table": ("table_rows", "table_dim"),
+            "cross": {"w": ("layers", None, None), "b": ("layers", None)},
+            "deep": deep_axes, "head": head_axes}
+    return params, axes
+
+
+def _cross_net(cross: dict, x0: jax.Array) -> jax.Array:
+    """DCN-v2 cross layers: x_{l+1} = x0 ⊙ (W_l x_l + b_l) + x_l."""
+    def body(x, wb):
+        w, b = wb
+        return x0 * (x @ w + b) + x, None
+    x, _ = jax.lax.scan(body, x0, (cross["w"], cross["b"]))
+    return x
+
+
+def dcn_forward(params: dict, dense: jax.Array, sparse: jax.Array,
+                cfg: DCNConfig, rules: Optional[ShardingRules] = None) -> jax.Array:
+    rules = rules or single_device_rules()
+    dense = constrain(dense, rules, "batch", None)
+    offsets = jnp.asarray(field_offsets(cfg.cardinalities))
+    emb = multi_field_lookup(params["table"], sparse, offsets)
+    emb = constrain(emb, rules, "batch", None, None)
+    B = dense.shape[0]
+    x0 = jnp.concatenate([dense.astype(cfg.dtype), emb.reshape(B, -1)], axis=-1)
+    xc = _cross_net(params["cross"], x0)
+    xd = L.mlp_apply(params["deep"], x0, act=jax.nn.relu)
+    out = L.mlp_apply(params["head"], jnp.concatenate([xc, xd], axis=-1))
+    return out[:, 0]
+
+
+def dcn_score_candidates(params: dict, dense: jax.Array, user_sparse: jax.Array,
+                         cand_emb: jax.Array, cfg: DCNConfig,
+                         rules: Optional[ShardingRules] = None) -> jax.Array:
+    """dense: (13,); user_sparse: (Fu,) offset ids; cand_emb: (N, Fi, d)."""
+    rules = rules or single_device_rules()
+    cand_emb = constrain(cand_emb, rules, "corpus", None, None)
+    user_emb = jnp.take(params["table"], user_sparse, axis=0).reshape(-1)
+    fixed = jnp.concatenate([dense.astype(cfg.dtype), user_emb])
+    N = cand_emb.shape[0]
+    x0 = jnp.concatenate(
+        [jnp.broadcast_to(fixed, (N, fixed.shape[0])), cand_emb.reshape(N, -1)],
+        axis=-1)
+    xc = _cross_net(params["cross"], x0)
+    xd = L.mlp_apply(params["deep"], x0, act=jax.nn.relu)
+    return L.mlp_apply(params["head"], jnp.concatenate([xc, xd], axis=-1))[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# BST — Behavior Sequence Transformer  [arXiv:1905.06874]
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    n_items: int = 4_000_000
+    embed_dim: int = 32
+    seq_len: int = 20          # history length (target appended -> seq_len+1)
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp: Tuple[int, ...] = (1024, 512, 256)
+    dtype: Any = jnp.float32
+
+
+def _encoder_block_init(key, d, d_ff, dtype):
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": L.dense_init(ks[0], d, d, dtype),
+        "wk": L.dense_init(ks[1], d, d, dtype),
+        "wv": L.dense_init(ks[2], d, d, dtype),
+        "wo": L.dense_init(ks[3], d, d, dtype),
+        "ffn_up": L.dense_init(ks[4], d, d_ff, dtype),
+        "ffn_down": L.dense_init(ks[5], d_ff, d, dtype),
+        "ln1": jnp.ones((d,), dtype), "ln1_b": jnp.zeros((d,), dtype),
+        "ln2": jnp.ones((d,), dtype), "ln2_b": jnp.zeros((d,), dtype),
+    }
+    axes = {k: tuple(None for _ in v.shape) for k, v in p.items()}
+    return p, axes
+
+
+def _encoder_block(p, x, n_heads, mask=None):
+    """Post-LN transformer encoder block. x: (B, S, d)."""
+    B, S, d = x.shape
+    hd = d // n_heads
+    q = (x @ p["wq"]).reshape(B, S, n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, n_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, n_heads, hd)
+    attn = L.gqa_attention(q, k, v, mask=mask).reshape(B, S, d) @ p["wo"]
+    x = L.layer_norm(x + attn, p["ln1"], p["ln1_b"])
+    h = jax.nn.gelu(x @ p["ffn_up"]) @ p["ffn_down"]
+    return L.layer_norm(x + h, p["ln2"], p["ln2_b"])
+
+
+def bst_init(key: jax.Array, cfg: BSTConfig) -> Tuple[dict, dict]:
+    ks = jax.random.split(key, cfg.n_blocks + 3)
+    blocks, block_axes = [], []
+    for i in range(cfg.n_blocks):
+        p, a = _encoder_block_init(ks[i], cfg.embed_dim, 4 * cfg.embed_dim, cfg.dtype)
+        blocks.append(p)
+        block_axes.append(a)
+    S = cfg.seq_len + 1
+    d_flat = S * cfg.embed_dim
+    mlp, mlp_axes = L.init_mlp(ks[-2], [d_flat, *cfg.mlp, 1], cfg.dtype)
+    params = {
+        "item_table": L.embed_init(ks[-3], L.pad_vocab(cfg.n_items), cfg.embed_dim, cfg.dtype),
+        "pos": L.embed_init(ks[-1], S, cfg.embed_dim, cfg.dtype),
+        "blocks": blocks, "mlp": mlp,
+    }
+    axes = {
+        "item_table": ("table_rows", "table_dim"),
+        "pos": (None, None),
+        "blocks": block_axes, "mlp": mlp_axes,
+    }
+    return params, axes
+
+
+def bst_forward(params: dict, hist: jax.Array, target: jax.Array,
+                cfg: BSTConfig, rules: Optional[ShardingRules] = None) -> jax.Array:
+    """hist: (B, seq_len) item ids; target: (B,) item id -> logits (B,)."""
+    rules = rules or single_device_rules()
+    seq = jnp.concatenate([hist, target[:, None]], axis=1)      # (B, S)
+    x = embedding_lookup(params["item_table"], seq) + params["pos"][None]
+    x = constrain(x, rules, "batch", None, None)
+    for blk in params["blocks"]:
+        x = _encoder_block(blk, x, cfg.n_heads)
+    B = x.shape[0]
+    return L.mlp_apply(params["mlp"], x.reshape(B, -1), act=jax.nn.gelu)[:, 0]
+
+
+def bst_score_candidates(params: dict, hist: jax.Array, cand: jax.Array,
+                         cfg: BSTConfig, rules: Optional[ShardingRules] = None
+                         ) -> jax.Array:
+    """Cross-encoder retrieval: hist: (seq_len,) one user; cand: (N,) item ids.
+    Every candidate re-runs the transformer (true cross measure — the regime
+    GUITAR targets)."""
+    rules = rules or single_device_rules()
+    N = cand.shape[0]
+    hist_b = jnp.broadcast_to(hist[None, :], (N, cfg.seq_len))
+    return bst_forward(params, hist_b, cand, cfg, rules)
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec  [arXiv:1904.06690]
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BERT4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 1_000_000   # scaled so retrieval_cand (1e6) is meaningful
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    dtype: Any = jnp.float32
+
+    @property
+    def vocab(self) -> int:
+        return self.n_items + 2  # +PAD, +MASK
+
+
+def bert4rec_init(key: jax.Array, cfg: BERT4RecConfig) -> Tuple[dict, dict]:
+    ks = jax.random.split(key, cfg.n_blocks + 2)
+    blocks, block_axes = [], []
+    for i in range(cfg.n_blocks):
+        p, a = _encoder_block_init(ks[i], cfg.embed_dim, 4 * cfg.embed_dim, cfg.dtype)
+        blocks.append(p)
+        block_axes.append(a)
+    params = {
+        "item_table": L.embed_init(ks[-2], L.pad_vocab(cfg.vocab), cfg.embed_dim, cfg.dtype),
+        "pos": L.embed_init(ks[-1], cfg.seq_len, cfg.embed_dim, cfg.dtype),
+        "blocks": blocks,
+    }
+    axes = {
+        "item_table": ("table_rows", "table_dim"),
+        "pos": (None, None),
+        "blocks": block_axes,
+    }
+    return params, axes
+
+
+def bert4rec_encode(params: dict, items: jax.Array, cfg: BERT4RecConfig,
+                    rules: Optional[ShardingRules] = None) -> jax.Array:
+    """items: (B, seq_len) -> hidden (B, seq_len, d). Bidirectional."""
+    rules = rules or single_device_rules()
+    x = embedding_lookup(params["item_table"], items) + params["pos"][None]
+    x = constrain(x, rules, "batch", None, None)
+    pad_mask = (items > 0)[:, None, None, None, :]   # (B,1,1,1,S) keys
+    for blk in params["blocks"]:
+        x = _encoder_block(blk, x, cfg.n_heads, mask=pad_mask)
+    return x
+
+
+def bert4rec_logits(params: dict, items: jax.Array, cfg: BERT4RecConfig,
+                    rules: Optional[ShardingRules] = None) -> jax.Array:
+    """Masked-item-prediction logits over the item vocab (tied embeddings)."""
+    rules = rules or single_device_rules()
+    h = bert4rec_encode(params, items, cfg, rules)
+    logits = L.mask_pad_vocab(h @ params["item_table"].T, cfg.vocab)
+    return constrain(logits, rules, "batch", None, "table_rows")
+
+
+def bert4rec_mlm_loss(params: dict, items: jax.Array, labels: jax.Array,
+                      mask: jax.Array, cfg: BERT4RecConfig,
+                      rules: Optional[ShardingRules] = None) -> jax.Array:
+    logits = bert4rec_logits(params, items, cfg, rules).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def bert4rec_sampled_loss(params: dict, items: jax.Array,
+                          masked_pos: jax.Array, labels: jax.Array,
+                          negatives: jax.Array, cfg: BERT4RecConfig,
+                          rules: Optional[ShardingRules] = None) -> jax.Array:
+    """Sampled-softmax MLM loss for huge item vocabs (production practice —
+    full softmax over 10⁶ items x 65k batch is infeasible).
+
+    items: (B, S); masked_pos: (B, M) positions; labels: (B, M) true items;
+    negatives: (N,) shared negative samples."""
+    rules = rules or single_device_rules()
+    h = bert4rec_encode(params, items, cfg, rules)                    # (B,S,d)
+    hm = jnp.take_along_axis(h, masked_pos[..., None], axis=1)        # (B,M,d)
+    pos_emb = embedding_lookup(params["item_table"], labels)          # (B,M,d)
+    neg_emb = embedding_lookup(params["item_table"], negatives)       # (N,d)
+    pos_logit = jnp.sum(hm * pos_emb, axis=-1, keepdims=True)         # (B,M,1)
+    neg_logit = jnp.einsum("bmd,nd->bmn", hm, neg_emb)                # (B,M,N)
+    logits = jnp.concatenate([pos_logit, neg_logit], axis=-1).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(logp[..., 0])
+
+
+def bert4rec_score_candidates(params: dict, items: jax.Array, cand: jax.Array,
+                              cfg: BERT4RecConfig,
+                              rules: Optional[ShardingRules] = None) -> jax.Array:
+    """items: (1, seq_len) user history; cand: (N,) item ids -> (N,) scores.
+    Two-tower style: encode once, dot with candidate embeddings."""
+    h = bert4rec_encode(params, items, cfg, rules)[:, -1, :]     # (1, d)
+    cand_emb = embedding_lookup(params["item_table"], cand)      # (N, d)
+    cand_emb = constrain(cand_emb, rules or single_device_rules(), "corpus", None)
+    return (cand_emb @ h[0]).astype(jnp.float32)
+
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))

@@ -1,0 +1,361 @@
+"""Decoder-only transformer family (dense GQA + optional MoE FFN).
+
+Covers: yi-9b / starcoder2-3b (llama-style), command-r-plus (parallel block,
+qk-norm), granite-moe (MoE FFN). DeepSeek-V3 (MLA) lives in deepseek.py.
+
+Design notes
+- Params for the repeated layer stack are *stacked* along a leading ``layers``
+  axis and the forward pass is a ``jax.lax.scan`` (+ remat) — keeps HLO size
+  O(1) in depth, which matters for the 512-device dry-run compiles.
+- Every init returns ``(params, axes)`` — logical-axis trees drive sharding.
+- KV caches are stacked per-layer: ``{'k': (L, B, T, KV, hd), 'v': ...}``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.sharding import ShardingRules, constrain, single_device_rules
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "transformer"
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 256
+    vocab_size: int = 512
+    head_dim: int = 32
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    use_bias: bool = False
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    mlp_type: str = "swiglu"         # swiglu | gelu
+    parallel_block: bool = False      # command-r style
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    param_dtype: object = None        # e.g. jnp.float8_e4m3fn for serving
+                                      # (weight-only quantization: weights
+                                      # stored narrow, cast to dtype at use)
+    # MoE (granite)
+    n_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    moe_groups: int = 16              # hierarchical dispatch groups (≈ data shards)
+    moe_impl: str = "scatter"         # scatter (pjit) | ep (shard_map all-to-all)
+    attn_chunk: int = 0               # >0: chunked-causal attention (flash-style)
+    remat: bool = True
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> Tuple[dict, dict]:
+    keys = iter(jax.random.split(key, 64))
+    H, KV, hd, d, ff, Lx = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                            cfg.d_model, cfg.d_ff, cfg.n_layers)
+    dt = cfg.param_dtype or cfg.dtype
+
+    def stack(init_fn, *shape):
+        k = jax.random.split(next(keys), Lx)
+        return jax.vmap(lambda kk: init_fn(kk, *shape))(k)
+
+    def w(kk, *shape):
+        scale = 1.0 / math.sqrt(shape[0])
+        return (jax.random.normal(kk, shape, jnp.float32) * scale).astype(dt)
+
+    attn = {
+        "wq": stack(w, d, H * hd),
+        "wk": stack(w, d, KV * hd),
+        "wv": stack(w, d, KV * hd),
+        "wo": stack(w, H * hd, d),
+    }
+    attn_axes = {
+        "wq": ("layers", "embed", "heads"),
+        "wk": ("layers", "embed", "kv_heads"),
+        "wv": ("layers", "embed", "kv_heads"),
+        "wo": ("layers", "heads", "embed"),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = jnp.ones((Lx, hd), dt)
+        attn["k_norm"] = jnp.ones((Lx, hd), dt)
+        attn_axes["q_norm"] = ("layers", None)
+        attn_axes["k_norm"] = ("layers", None)
+
+    if cfg.is_moe:
+        mlp, mlp_axes = moe_lib.init_moe(
+            next(keys), n_layers=Lx, d_model=d, d_ff=cfg.moe_d_ff,
+            n_experts=cfg.n_experts, dtype=dt)
+    elif cfg.mlp_type == "swiglu":
+        mlp = {
+            "w_gate": stack(w, d, ff),
+            "w_up": stack(w, d, ff),
+            "w_down": stack(w, ff, d),
+        }
+        mlp_axes = {
+            "w_gate": ("layers", "embed", "mlp"),
+            "w_up": ("layers", "embed", "mlp"),
+            "w_down": ("layers", "mlp", "embed"),
+        }
+    else:  # gelu (starcoder2)
+        mlp = {
+            "w_up": stack(w, d, ff),
+            "b_up": jnp.zeros((Lx, ff), dt),
+            "w_down": stack(w, ff, d),
+            "b_down": jnp.zeros((Lx, d), dt),
+        }
+        mlp_axes = {
+            "w_up": ("layers", "embed", "mlp"),
+            "b_up": ("layers", "mlp"),
+            "w_down": ("layers", "mlp", "embed"),
+            "b_down": ("layers", "embed"),
+        }
+
+    norms = {"ln1": jnp.ones((Lx, d), dt)}
+    norm_axes = {"ln1": ("layers", "embed")}
+    if not cfg.parallel_block:
+        norms["ln2"] = jnp.ones((Lx, d), dt)
+        norm_axes["ln2"] = ("layers", "embed")
+    if cfg.norm_type == "layernorm":
+        norms["ln1_b"] = jnp.zeros((Lx, d), dt)
+        norm_axes["ln1_b"] = ("layers", "embed")
+        if not cfg.parallel_block:
+            norms["ln2_b"] = jnp.zeros((Lx, d), dt)
+            norm_axes["ln2_b"] = ("layers", "embed")
+
+    V_pad = L.pad_vocab(cfg.vocab_size)
+    params = {
+        "embed": L.embed_init(next(keys), V_pad, d, dt),
+        "layers": {"attn": attn, "mlp": mlp, "norm": norms},
+        "final_norm": jnp.ones((d,), dt),
+    }
+    axes = {
+        "embed": ("vocab", "embed"),
+        "layers": {"attn": attn_axes, "mlp": mlp_axes, "norm": norm_axes},
+        "final_norm": ("embed",),
+    }
+    if cfg.norm_type == "layernorm":
+        params["final_norm_b"] = jnp.zeros((d,), dt)
+        axes["final_norm_b"] = ("embed",)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(next(keys), d, V_pad, dt)
+        axes["lm_head"] = ("embed", "vocab")
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _norm(cfg, x, scale, bias=None):
+    if cfg.norm_type == "layernorm":
+        return L.layer_norm(x, scale, bias, cfg.norm_eps)
+    return L.rms_norm(x, scale, cfg.norm_eps)
+
+
+def _attn_block(cfg, p, x, positions, mask, rules, cache_kv=None, cache_pos=None):
+    """x: (B, S, d). Returns (out, (k, v)) where k/v are the *new* entries.
+
+    When ``cache_kv=(ck, cv)`` is given (decode), new k/v are written at
+    ``cache_pos`` and attention runs over the full cache."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if S > 1:
+        # SP gather point: qkv GEMMs consume the full sequence (Megatron SP)
+        x = constrain(x, rules, "batch", None, None)
+    cd = x.dtype
+    q = (x @ p["wq"].astype(cd)).reshape(B, S, H, hd)
+    k = (x @ p["wk"].astype(cd)).reshape(B, S, KV, hd)
+    v = (x @ p["wv"].astype(cd)).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, rules, "batch", "seq", "heads", None)
+    k = constrain(k, rules, "batch", "seq", "kv_heads", None)
+
+    if cache_kv is not None:
+        ck, cv = cache_kv
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        T = ck.shape[1]
+        key_pos = jnp.arange(T)
+        mask = key_pos[None, :] <= (cache_pos + jnp.arange(S))[:, None]  # (S, T)
+        out = L.gqa_attention(q, ck, cv, mask=mask)
+        new_kv = (ck, cv)
+    else:
+        # train/prefill: expand kv heads so the heads dim TP-shards cleanly
+        kf = L.expand_kv(k, H)
+        vf = L.expand_kv(v, H)
+        kf = constrain(kf, rules, "batch", "seq", "heads", None)
+        vf = constrain(vf, rules, "batch", "seq", "heads", None)
+        if cfg.attn_chunk and S > cfg.attn_chunk:
+            out = L.chunked_causal_mha(q, kf, vf, cfg.attn_chunk)
+        else:
+            out = L.mha_attention(q, kf, vf, mask=mask)
+        new_kv = (k, v)
+    out = constrain(out, rules, "batch", "seq", "heads", None)
+    return out.reshape(B, S, H * hd) @ p["wo"].astype(cd), new_kv
+
+
+def _mlp_block(cfg, p, x, rules):
+    if cfg.is_moe:
+        if cfg.moe_impl == "ep" and rules.mesh is not None:
+            return moe_lib.moe_ffn_ep(p, x, n_experts=cfg.n_experts,
+                                      top_k=cfg.moe_top_k,
+                                      capacity_factor=cfg.capacity_factor,
+                                      rules=rules)
+        return moe_lib.moe_ffn(p, x, n_experts=cfg.n_experts, top_k=cfg.moe_top_k,
+                               capacity_factor=cfg.capacity_factor,
+                               n_groups=cfg.moe_groups, rules=rules)
+    cd = x.dtype
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(cd)) * (x @ p["w_up"].astype(cd))
+        h = constrain(h, rules, "batch", "seq", "mlp")
+        return h @ p["w_down"].astype(cd)
+    h = jax.nn.gelu(x @ p["w_up"].astype(cd) + p["b_up"].astype(cd))
+    h = constrain(h, rules, "batch", "seq", "mlp")
+    return h @ p["w_down"].astype(cd) + p["b_down"].astype(cd)
+
+
+def _layer(cfg, rules, x, layer_params, positions, mask, cache=None, cache_pos=None):
+    p = layer_params
+    nb = p["norm"].get("ln1_b") if cfg.norm_type == "layernorm" else None
+    h1 = _norm(cfg, x, p["norm"]["ln1"], nb)
+    cache_kv = None if cache is None else (cache[0], cache[1])
+    attn_out, new_kv = _attn_block(cfg, p["attn"], h1, positions, mask, rules,
+                                   cache_kv=cache_kv, cache_pos=cache_pos)
+    if cfg.parallel_block:
+        mlp_out = _mlp_block(cfg, p["mlp"], h1, rules)
+        x = x + attn_out + mlp_out
+    else:
+        x = x + attn_out
+        nb2 = p["norm"].get("ln2_b") if cfg.norm_type == "layernorm" else None
+        h2 = _norm(cfg, x, p["norm"]["ln2"], nb2)
+        x = x + _mlp_block(cfg, p["mlp"], h2, rules)
+    # sequence-parallel residual handoff between blocks
+    x = constrain(x, rules, "batch", "act_seq", None)
+    return x, new_kv
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, tokens: jax.Array, cfg: TransformerConfig,
+            rules: Optional[ShardingRules] = None) -> jax.Array:
+    """Training/prefill forward: tokens (B, S) -> logits (B, S, V)."""
+    rules = rules or single_device_rules()
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = constrain(x, rules, "batch", "act_seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    mask = L.causal_mask(S)
+
+    def body(x, lp):
+        x, _ = _layer(cfg, rules, x, lp, positions, mask)
+        return x, None
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    fb = params.get("final_norm_b") if cfg.norm_type == "layernorm" else None
+    x = _norm(cfg, x, params["final_norm"], fb)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    logits = L.mask_pad_vocab(x @ head, cfg.vocab_size)
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return constrain(logits, rules, "batch", "seq", "vocab")
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: TransformerConfig,
+            rules: Optional[ShardingRules] = None) -> Tuple[jax.Array, dict]:
+    """Prefill pass: tokens (B, S) -> (next-token logits (B, V),
+    cache {'k','v': (L, B, S, KV, hd)})."""
+    rules = rules or single_device_rules()
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = constrain(x, rules, "batch", "act_seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    mask = L.causal_mask(S)
+
+    def body(x, lp):
+        x, kv = _layer(cfg, rules, x, lp, positions, mask)
+        return x, kv
+
+    x, kvs = jax.lax.scan(body, x, params["layers"])
+    fb = params.get("final_norm_b") if cfg.norm_type == "layernorm" else None
+    x = _norm(cfg, x[:, -1:, :], params["final_norm"], fb)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    logits = L.mask_pad_vocab(x[:, 0, :] @ head, cfg.vocab_size)
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    logits = constrain(logits, rules, "batch", "vocab")
+    return logits, {"k": kvs[0], "v": kvs[1]}
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_axes(decode_seq_shard: bool = True) -> dict:
+    seq_ax = "kv_seq" if decode_seq_shard else None
+    return {"k": ("layers", "batch", seq_ax, None, None),
+            "v": ("layers", "batch", seq_ax, None, None)}
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: TransformerConfig, rules: Optional[ShardingRules] = None
+                ) -> Tuple[jax.Array, dict]:
+    """One decode step. tokens: (B,) int32; pos: scalar int32 (current length).
+    Returns (logits (B, V), new_cache)."""
+    rules = rules or single_device_rules()
+    B = tokens.shape[0]
+    x = params["embed"].astype(cfg.dtype)[tokens][:, None, :]  # (B, 1, d)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+
+    def body(x, lp_and_cache):
+        lp, ck, cv = lp_and_cache
+        x, (nk, nv) = _layer(cfg, rules, x, lp, positions, None,
+                             cache=(ck, cv), cache_pos=pos)
+        return x, (nk, nv)
+
+    x, new_kv = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    fb = params.get("final_norm_b") if cfg.norm_type == "layernorm" else None
+    x = _norm(cfg, x, params["final_norm"], fb)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    logits = L.mask_pad_vocab(x[:, 0, :] @ head, cfg.vocab_size)
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, {"k": new_kv[0], "v": new_kv[1]}
+
+
+def lm_loss(params: dict, tokens: jax.Array, targets: jax.Array,
+            cfg: TransformerConfig, rules: Optional[ShardingRules] = None) -> jax.Array:
+    logits = forward(params, tokens, cfg, rules).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

@@ -1,0 +1,4 @@
+from repro.train.optimizer import (  # noqa: F401
+    AdamWState, OptimizerConfig, adamw_init, adamw_update, clip_by_global_norm,
+    cosine_schedule,
+)

@@ -1,0 +1,94 @@
+"""Gradient compression for cross-pod reduction.
+
+At (2, 16, 16) and beyond, the pod-axis all-reduce crosses the slow
+inter-pod links; compressing that hop is the standard trick. Two schemes,
+both with error feedback (the residual is carried to the next step so the
+compression is unbiased over time):
+
+  - int8 uniform quantization (per-tensor scale): 4x over fp32, 2x over bf16
+  - top-k sparsification (keep the largest |g| fraction): 10-100x, pairs
+    with an all-gather of (values, indices) instead of an all-reduce
+
+Used by the trainer as a pre-reduction transform on the pod axis inside
+shard_map (see launch/train.py); also usable standalone.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)).astype(jnp.float32) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_int8_ef(grads: Any, errors: Any) -> Tuple[Any, Any]:
+    """Error-feedback int8: returns (quantized tree of (q, scale), new_errors).
+    decompress with ``decompress_int8``."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e.astype(jnp.float32)
+        q, s = quantize_int8(target)
+        deq = dequantize_int8(q, s)
+        return (q, s), (target - deq).astype(e.dtype)
+
+    flat = jax.tree_util.tree_map(one, grads, errors)
+    comp = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                                  and isinstance(t[0], tuple))
+    errs = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                                  and isinstance(t[0], tuple))
+    return comp, errs
+
+
+def decompress_int8(comp: Any, dtype=jnp.float32) -> Any:
+    return jax.tree_util.tree_map(
+        lambda qs: dequantize_int8(qs[0], qs[1], dtype), comp,
+        is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)
+
+
+def topk_sparsify(g: jax.Array, frac: float = 0.01
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Keep the largest-|g| fraction. Returns (values, flat_indices)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx.astype(jnp.int32)
+
+
+def topk_densify(values: jax.Array, indices: jax.Array, shape,
+                 dtype=jnp.float32) -> jax.Array:
+    out = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), jnp.float32)
+    out = out.at[indices].add(values)
+    return out.reshape(shape).astype(dtype)
+
+
+def topk_compress_ef(grads: Any, errors: Any, frac: float = 0.01):
+    """Error-feedback top-k. Returns (tree of (values, indices), new_errors)."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e.astype(jnp.float32)
+        v, i = topk_sparsify(target, frac)
+        dense = topk_densify(v, i, g.shape)
+        return (v, i), (target - dense).astype(e.dtype)
+
+    flat = jax.tree_util.tree_map(one, grads, errors)
+    is_pair = lambda t: (isinstance(t, tuple) and len(t) == 2
+                         and isinstance(t[0], tuple))
+    comp = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=is_pair)
+    errs = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=is_pair)
+    return comp, errs
+
+
+def init_error_state(grads_like: Any, dtype=jnp.float32) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, dtype), grads_like)

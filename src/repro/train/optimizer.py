@@ -1,0 +1,96 @@
+"""AdamW + schedules + global-norm clipping, pure JAX.
+
+Moments are kept in a configurable dtype (fp32 default; bf16 for the
+671B-scale configs where optimizer HBM dominates — recorded in
+EXPERIMENTS.md). ZeRO-1 sharding of the moments is purely declarative: the
+trainer assigns the moment trees the specs from
+``repro.sharding.zero1_spec_tree`` and XLA inserts the reduce-scatter /
+all-gather pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: Any = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def cosine_schedule(step: jax.Array, cfg: OptimizerConfig) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw_init(params: Any, cfg: OptimizerConfig) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def adamw_update(params: Any, grads: Any, state: AdamWState,
+                 cfg: OptimizerConfig) -> tuple[Any, AdamWState, dict]:
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = jnp.float32(0)
+    step = state.step + 1
+    lr = cosine_schedule(step, cfg)
+    b1, b2 = cfg.betas
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = b1 * m32 + (1 - b1) * gf
+        v_new = b2 * v32 + (1 - b2) * gf * gf
+        u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:   # decay matrices only
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * u
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, AdamWState(step, new_m, new_v), metrics

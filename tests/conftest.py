@@ -1,0 +1,15 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the host's single device; only launch/dryrun.py (and the
+subprocess-based distributed tests) force 512/8 fake devices."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,49 @@
+"""The HLO analyzer drives the roofline numbers — verify it on programs with
+known FLOP counts (including scan trip-count weighting)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_single_dot_flops():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    comp = _compile(lambda x, y: x @ y, a, b)
+    rep = analyze_hlo(comp.as_text())
+    assert abs(rep.flops - 2 * 64 * 128 * 32) / (2 * 64 * 128 * 32) < 0.05
+
+
+def test_scan_trip_count_weighting():
+    def fn(params, x):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, params)
+        return h.sum()
+
+    for L in (3, 9):
+        params = jax.ShapeDtypeStruct((L, 32, 32), jnp.float32)
+        x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+        rep = analyze_hlo(_compile(fn, params, x).as_text())
+        expect = L * 2 * 8 * 32 * 32
+        assert abs(rep.flops - expect) / expect < 0.05, (L, rep.flops)
+        assert L in rep.trip_counts.values()
+
+
+def test_no_collectives_single_device():
+    a = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    rep = analyze_hlo(_compile(lambda x: x @ x, a).as_text())
+    assert rep.total_collective_bytes == 0
+
+
+def test_bytes_reasonable_for_elementwise():
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    rep = analyze_hlo(_compile(lambda x: x * 2 + 1, a).as_text())
+    nbytes = 1024 * 1024 * 4
+    # one fused read + one write, allow 4x slack for copies
+    assert nbytes <= rep.bytes_accessed <= 6 * nbytes

@@ -1,0 +1,201 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp ref.py oracle, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# deepfm_score
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,hidden", [(64, 40, 64), (256, 40, 64),
+                                        (555, 48, 32), (1, 24, 16)])
+def test_deepfm_score_sweep(n, d, hidden):
+    from repro.kernels.deepfm_score import deepfm_score
+    from repro.kernels.deepfm_score.ref import deepfm_score_ref
+    k = jax.random.PRNGKey(n)
+    fm, deep = 8, d - 8
+    mlp, _ = L.init_mlp(k, [2 * deep, hidden, hidden, 1], jnp.float32)
+    cand = jax.random.normal(k, (n, d))
+    q = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    out = deepfm_score(cand, q, mlp, fm_dim=fm)
+    ref = deepfm_score_ref(cand, jnp.broadcast_to(q, cand.shape),
+                           mlp["w"][0], mlp["b"][0], mlp["w"][1], mlp["b"][1],
+                           mlp["w"][2], mlp["b"][2], fm_dim=fm)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# neighbor_rank
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q,b,d,rank_by,alpha", [
+    (4, 16, 40, "angle", 1.01), (16, 32, 40, "projection", 2.0),
+    (7, 48, 64, "angle", 1.5), (1, 8, 16, "projection", 1.0),
+])
+def test_neighbor_rank_sweep(q, b, d, rank_by, alpha):
+    from repro.kernels.neighbor_rank import neighbor_rank
+    from repro.kernels.neighbor_rank.ref import neighbor_rank_ref
+    k = jax.random.PRNGKey(q * b)
+    x = jax.random.normal(k, (q, d))
+    g = jax.random.normal(jax.random.PRNGKey(1), (q, d))
+    nv = jax.random.normal(jax.random.PRNGKey(2), (q, b, d))
+    valid = jax.random.bernoulli(jax.random.PRNGKey(3), 0.75, (q, b))
+    valid = valid.at[:, 0].set(True)   # at least one valid per row
+    key_k, mask_k = neighbor_rank(x, g, nv, valid, alpha=alpha, rank_by=rank_by)
+    key_r, mask_r = neighbor_rank_ref(x, g, nv, valid, alpha=alpha, rank_by=rank_by)
+    fin = np.isfinite(np.asarray(key_r))
+    np.testing.assert_allclose(np.asarray(key_k)[fin], np.asarray(key_r)[fin],
+                               rtol=1e-5, atol=1e-5)
+    assert (np.asarray(mask_k) == np.asarray(mask_r)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 24), st.integers(4, 40), st.floats(1.0, 3.0))
+def test_neighbor_rank_properties(b, d, alpha):
+    """Properties of Eq.3: mask subset of valid; the best-angle neighbor is
+    always selected; alpha=inf-ish admits all valid."""
+    from repro.kernels.neighbor_rank.ref import neighbor_rank_ref
+    k = jax.random.PRNGKey(b * d)
+    x = jax.random.normal(k, (2, d))
+    g = jax.random.normal(jax.random.PRNGKey(1), (2, d)) + 0.1
+    nv = jax.random.normal(jax.random.PRNGKey(2), (2, b, d))
+    valid = jnp.ones((2, b), bool)
+    key, mask = neighbor_rank_ref(x, g, nv, valid, alpha=alpha)
+    key_np, mask_np = np.asarray(key), np.asarray(mask)
+    assert mask_np.any(axis=1).all(), "best neighbor must survive pruning"
+    best = key_np.argmin(axis=1)
+    assert mask_np[np.arange(2), best].all()
+    # monotone in alpha
+    _, mask_hi = neighbor_rank_ref(x, g, nv, valid, alpha=alpha + 1.0)
+    assert (np.asarray(mask_hi) | ~mask_np).all()
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,d,b,l,dtype", [
+    (100, 16, 8, 4, jnp.float32), (500, 64, 33, 8, jnp.float32),
+    (64, 128, 16, 2, jnp.bfloat16),
+])
+def test_embedding_bag_sweep(r, d, b, l, dtype):
+    from repro.kernels.embedding_bag import embedding_bag
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+    k = jax.random.PRNGKey(r)
+    table = jax.random.normal(k, (r, d), dtype)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (b, l), -1, r)
+    w = jax.random.uniform(jax.random.PRNGKey(2), (b, l), dtype)
+    out = embedding_bag(table, idx, w)
+    ref = embedding_bag_ref(table, idx, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 50), st.integers(1, 6), st.integers(1, 16))
+def test_embedding_bag_matches_loop(rows, l, d):
+    """Hypothesis: bag == explicit python loop over indices."""
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+    rng = np.random.default_rng(rows * l * d)
+    table = rng.normal(size=(rows, d)).astype(np.float32)
+    idx = rng.integers(-1, rows, size=(3, l)).astype(np.int32)
+    ref = np.zeros((3, d), np.float32)
+    for i in range(3):
+        for j in range(l):
+            if idx[i, j] >= 0:
+                ref[i] += table[idx[i, j]]
+    out = embedding_bag_ref(jnp.asarray(table), jnp.asarray(idx))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_attn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,kv,hd,t,ln,bt", [
+    (2, 8, 2, 32, 128, 100, 64), (1, 4, 4, 64, 300, 300, 128),
+    (3, 8, 4, 16, 1024, 77, 256), (2, 16, 8, 64, 512, 512, 512),
+])
+def test_decode_attn_sweep(b, h, kv, hd, t, ln, bt):
+    from repro.kernels.decode_attn import decode_attention
+    from repro.kernels.decode_attn.ref import decode_attention_ref
+    k = jax.random.PRNGKey(b * t)
+    q = jax.random.normal(k, (b, h, hd))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (b, t, kv, hd))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (b, t, kv, hd))
+    out = decode_attention(q, kc, vc, ln, block_t=bt)
+    ref = decode_attention_ref(q, kc, vc, jnp.int32(ln))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attn_matches_gqa_layer():
+    """Kernel == the model's grouped attention on a cache prefix."""
+    from repro.kernels.decode_attn import decode_attention
+    B, H, KV, hd, T, ln = 2, 8, 4, 32, 256, 199
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (B, 1, H, hd))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (B, T, KV, hd))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (B, T, KV, hd))
+    mask = jnp.arange(T)[None, :] < ln
+    ref = L.gqa_attention(q, kc, vc, mask=mask)[:, 0]
+    out = decode_attention(q[:, 0], kc, vc, ln, block_t=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attn (causal forward)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,hd,bq,bk", [
+    (2, 128, 4, 32, 32, 32), (1, 100, 2, 16, 32, 32),
+    (2, 256, 2, 64, 64, 128), (1, 64, 8, 8, 64, 16),
+])
+def test_flash_attention_sweep(b, s, h, hd, bq, bk):
+    from repro.kernels.flash_attn import flash_attention
+    from repro.kernels.flash_attn.ref import flash_attention_ref
+    k = jax.random.PRNGKey(s)
+    q = jax.random.normal(k, (b, s, h, hd))
+    kk = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, hd))
+    out = flash_attention(q, kk, v, block_q=bq, block_k=bk)
+    ref = flash_attention_ref(q, kk, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_matches_model_layer():
+    from repro.kernels.flash_attn import flash_attention
+    B, S, H, hd = 2, 64, 4, 16
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (B, S, H, hd))
+    kk = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, hd))
+    ref = L.mha_attention(q, kk, v, mask=L.causal_mask(S))
+    out = flash_attention(q, kk, v, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_causal_mha_matches_full():
+    B, S, H, hd = 2, 128, 4, 16
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (B, S, H, hd))
+    kk = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, hd))
+    full = L.mha_attention(q, kk, v, mask=L.causal_mask(S))
+    for chunk in (16, 32, 64):
+        ch = L.chunked_causal_mha(q, kk, v, chunk)
+        np.testing.assert_allclose(np.asarray(ch), np.asarray(full),
+                                   rtol=1e-5, atol=1e-5)
+    # gradients flow through the rematted chunk scan
+    g = jax.grad(lambda qq: L.chunked_causal_mha(qq, kk, v, 32).sum())(q)
+    assert np.isfinite(np.asarray(g)).all()

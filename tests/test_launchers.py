@@ -1,0 +1,33 @@
+"""The --arch CLI launchers run every registered architecture's reduced
+config end to end (subprocess; cheap archs only to bound runtime)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(mod, *args, timeout=600):
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-m", mod, *args], env=env,
+                         capture_output=True, text=True, timeout=timeout,
+                         cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["starcoder2-3b", "gin-tu", "dcn-v2", "bst"])
+def test_train_launcher(arch):
+    out = _run("repro.launch.train", "--arch", arch, "--steps", "6",
+               "--batch", "8", "--seq", "32")
+    assert "loss" in out
+
+
+@pytest.mark.slow
+def test_serve_launcher():
+    out = _run("repro.launch.serve", "--items", "2000", "--queries", "64",
+               "--batch", "32")
+    assert "recall@10" in out

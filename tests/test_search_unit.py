@@ -1,0 +1,113 @@
+"""Unit-level searcher invariants + hypothesis properties (fast — tiny
+corpora, cheap measures)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SearchConfig, brute_force_topk, inner_product_measure,
+                        l2_measure, recall, search_measure)
+from repro.core.search import _bit_set, _bit_test, rank_and_prune
+from repro.graph import build_l2_graph
+
+
+@pytest.fixture(scope="module")
+def small_corpus(rng=np.random.default_rng(7)):
+    base = rng.normal(size=(600, 12)).astype(np.float32)
+    queries = rng.normal(size=(12, 12)).astype(np.float32)
+    graph = build_l2_graph(base, m=10, k_construction=32)
+    return base, queries, graph
+
+
+def test_bitmap_roundtrip():
+    bm = jnp.zeros((4,), jnp.uint32)
+    ids = jnp.asarray([0, 31, 32, 100, 127])
+    bm = _bit_set(bm, ids, jnp.ones(5, bool))
+    assert bool(_bit_test(bm, jnp.asarray([31]))[0])
+    assert bool(_bit_test(bm, jnp.asarray([100]))[0])
+    assert not bool(_bit_test(bm, jnp.asarray([99]))[0])
+
+
+def test_l2_measure_search_matches_knn(small_corpus):
+    """With the l2 measure, graph search == approximate nearest neighbors."""
+    base, queries, graph = small_corpus
+    m = l2_measure()
+    true_ids, _ = brute_force_topk(m, jnp.asarray(base), jnp.asarray(queries), 5)
+    cfg = SearchConfig(k=5, ef=48, mode="sl2g")
+    res = search_measure(m, jnp.asarray(base), jnp.asarray(graph.neighbors),
+                         jnp.asarray(queries),
+                         jnp.full((12,), graph.entry, jnp.int32), cfg)
+    assert recall(res.ids, true_ids) > 0.9
+
+
+def test_mips_measure_search(small_corpus):
+    base, queries, graph = small_corpus
+    m = inner_product_measure()
+    true_ids, _ = brute_force_topk(m, jnp.asarray(base), jnp.asarray(queries), 5)
+    cfg = SearchConfig(k=5, ef=48, mode="guitar", budget=6, alpha=1.1)
+    res = search_measure(m, jnp.asarray(base), jnp.asarray(graph.neighbors),
+                         jnp.asarray(queries),
+                         jnp.full((12,), graph.entry, jnp.int32), cfg)
+    assert recall(res.ids, true_ids) > 0.6
+
+
+def test_budget_bounds_evals(small_corpus):
+    base, queries, graph = small_corpus
+    m = l2_measure()
+    for budget in (2, 4, 8):
+        cfg = SearchConfig(k=5, ef=32, mode="guitar", budget=budget,
+                           alpha=10.0, max_iters=50)
+        res = search_measure(m, jnp.asarray(base), jnp.asarray(graph.neighbors),
+                             jnp.asarray(queries),
+                             jnp.full((12,), graph.entry, jnp.int32), cfg)
+        max_evals = 1 + budget * np.asarray(res.n_iters)
+        assert (np.asarray(res.n_eval) <= max_evals + 1).all()
+
+
+def test_guitar_evals_less_than_sl2g(small_corpus):
+    base, queries, graph = small_corpus
+    m = l2_measure()
+    args = (m, jnp.asarray(base), jnp.asarray(graph.neighbors),
+            jnp.asarray(queries), jnp.full((12,), graph.entry, jnp.int32))
+    res_s = search_measure(*args, SearchConfig(k=5, ef=32, mode="sl2g"))
+    res_g = search_measure(*args, SearchConfig(k=5, ef=32, mode="guitar",
+                                               budget=6))
+    assert float(res_g.n_eval.mean()) < 0.7 * float(res_s.n_eval.mean())
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(3, 32), st.integers(4, 24), st.floats(1.0, 4.0),
+       st.sampled_from(["angle", "projection"]))
+def test_rank_and_prune_invariants(b, d, alpha, rank_by):
+    key = jax.random.PRNGKey(b * d)
+    diffs = jax.random.normal(key, (b, d))
+    grad = jax.random.normal(jax.random.PRNGKey(1), (d,)) + 0.01
+    valid = jax.random.bernoulli(jax.random.PRNGKey(2), 0.8, (b,))
+    valid = valid.at[0].set(True)
+    C = min(5, b)
+    sel_idx, sel_mask = rank_and_prune(diffs, grad, valid, C, alpha, rank_by,
+                                       adaptive=True)
+    assert sel_idx.shape == (C,) and sel_mask.shape == (C,)
+    # masked-in selections must be valid neighbors
+    v = np.asarray(valid)
+    for i, m in zip(np.asarray(sel_idx), np.asarray(sel_mask)):
+        if m:
+            assert v[i]
+    # the single best neighbor always survives
+    assert bool(sel_mask[0]), "top-ranked neighbor must be selected"
+
+
+def test_entry_always_in_results_when_best():
+    """Degenerate: base point identical to query argmax must be found."""
+    base = np.zeros((10, 4), np.float32)
+    base[7] = 1.0
+    nbrs = np.full((10, 3), -1, np.int32)
+    for i in range(10):
+        nbrs[i] = [(i + 1) % 10, (i + 2) % 10, (i + 5) % 10]
+    m = inner_product_measure()
+    q = np.ones((1, 4), np.float32)
+    cfg = SearchConfig(k=1, ef=8, mode="guitar", budget=3)
+    res = search_measure(m, jnp.asarray(base), jnp.asarray(nbrs),
+                         jnp.asarray(q), jnp.zeros((1,), jnp.int32), cfg)
+    assert int(res.ids[0, 0]) == 7

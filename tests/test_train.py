@@ -1,0 +1,178 @@
+"""Training substrate: optimizer math, microbatching, checkpoint/restart,
+gradient compression, straggler/elastic policies."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ft import StragglerMonitor, remesh_plan
+from repro.ft.checkpoint import (latest_step, restore_checkpoint,
+                                 save_checkpoint)
+from repro.train import compress
+from repro.train.optimizer import (OptimizerConfig, adamw_init, adamw_update,
+                                   clip_by_global_norm, cosine_schedule)
+from repro.train.trainer import Trainer, TrainerConfig, make_train_step
+
+
+def test_adamw_matches_reference():
+    """One AdamW step vs a hand-written numpy reference."""
+    cfg = OptimizerConfig(lr=0.1, betas=(0.9, 0.999), eps=1e-8,
+                          weight_decay=0.0, grad_clip=0.0, warmup_steps=0,
+                          total_steps=1_000_000)
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.5, 0.5, -1.0])}
+    st_ = adamw_init(p, cfg)
+    p2, st2, _ = adamw_update(p, g, st_, cfg)
+    # reference
+    gn = np.asarray(g["w"])
+    m = 0.1 * gn
+    v = 0.001 * gn * gn
+    lr = cosine_schedule(jnp.int32(1), cfg)
+    upd = (m / (1 - 0.9)) / (np.sqrt(v / (1 - 0.999)) + 1e-8)
+    ref = np.asarray(p["w"]) - np.asarray(lr) * upd
+    np.testing.assert_allclose(np.asarray(p2["w"]), ref, rtol=1e-5)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    total = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    assert abs(total - 1.0) < 1e-4
+    assert abs(float(norm) - np.sqrt(1000.0)) < 1e-2
+
+
+def test_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(cosine_schedule(jnp.int32(s), cfg)) for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0 and abs(lrs[1] - 0.5) < 1e-5 and abs(lrs[2] - 1.0) < 1e-5
+    assert lrs[3] < 1.0 and lrs[4] < 0.01
+
+
+def _quad_loss(params, batch):
+    return jnp.sum((params["w"] - batch["target"]) ** 2)
+
+
+def test_trainer_converges_and_restarts():
+    params = {"w": jnp.zeros((4,))}
+    target = jnp.asarray([1.0, 2.0, -1.0, 0.5])
+    batch_fn = lambda step: {"target": target}
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(_quad_loss, params, OptimizerConfig(lr=0.1, total_steps=200),
+                     TrainerConfig(total_steps=60, ckpt_every=20, ckpt_dir=d))
+        tr.run(batch_fn)
+        assert float(jnp.abs(tr.params["w"] - target).max()) < 0.2
+        assert latest_step(d) == 60
+        # restart continues, state intact
+        tr2 = Trainer(_quad_loss, params, OptimizerConfig(lr=0.1, total_steps=200),
+                      TrainerConfig(total_steps=80, ckpt_every=20, ckpt_dir=d))
+        assert tr2.maybe_restore() == 60
+        np.testing.assert_allclose(np.asarray(tr2.params["w"]),
+                                   np.asarray(tr.params["w"]))
+        tr2.run(batch_fn)
+        assert int(tr2.opt_state.step) == 80
+
+
+def test_checkpoint_atomicity_and_shape_check():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.ones((3, 4)), "b": {"c": jnp.zeros((2,))}}
+        save_checkpoint(d, 5, tree)
+        back = restore_checkpoint(d, tree)
+        np.testing.assert_allclose(np.asarray(back["a"]), np.ones((3, 4)))
+        # wrong-shape template must fail loudly
+        with pytest.raises(Exception):
+            restore_checkpoint(d, {"a": jnp.ones((9, 9)),
+                                   "b": {"c": jnp.zeros((2,))}})
+
+
+def test_microbatch_equivalence():
+    params = {"w": jnp.arange(8.0)}
+    batch = {"target": jnp.ones((8, 8))}
+
+    def loss(p, b):
+        return jnp.mean((p["w"][None, :] - b["target"]) ** 2)
+
+    cfg = OptimizerConfig(lr=0.05, grad_clip=0.0)
+    s1 = make_train_step(loss, cfg, 1, donate=False)
+    s4 = make_train_step(loss, cfg, 4, donate=False)
+    p1, _, m1 = s1(params, adamw_init(params, cfg), batch)
+    p4, _, m4 = s4(params, adamw_init(params, cfg), batch)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]),
+                               rtol=1e-6)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 1000))
+def test_int8_compression_bounded_error(seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    q, s = compress.quantize_int8(g)
+    back = compress.dequantize_int8(q, s)
+    max_err = float(jnp.abs(g - back).max())
+    assert max_err <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """Sum of decompressed grads + final residual == sum of true grads."""
+    rng = np.random.default_rng(0)
+    grads = [
+        {"w": jnp.asarray(rng.normal(size=(32,)).astype(np.float32))}
+        for _ in range(16)
+    ]
+    err = compress.init_error_state(grads[0])
+    total_sent = jnp.zeros((32,))
+    for g in grads:
+        comp, err = compress.compress_int8_ef(g, err)
+        total_sent = total_sent + compress.decompress_int8(comp)["w"]
+    total_true = sum(np.asarray(g["w"]) for g in grads)
+    np.testing.assert_allclose(np.asarray(total_sent + err["w"]), total_true,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_topk_compression_roundtrip():
+    g = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(100,)).astype(np.float32))}
+    err = compress.init_error_state(g)
+    comp, err2 = compress.topk_compress_ef(g, err, frac=0.1)
+    vals, idx = comp["w"]
+    assert vals.shape[0] == 10
+    dense = compress.topk_densify(vals, idx, (100,))
+    # kept entries match, rest in residual
+    np.testing.assert_allclose(np.asarray(dense + err2["w"]),
+                               np.asarray(g["w"]), rtol=1e-5, atol=1e-5)
+
+
+def test_straggler_ladder():
+    mon = StragglerMonitor(n_hosts=8, threshold=1.5, patience=2)
+    normal = {i: 1.0 for i in range(8)}
+    assert mon.record_step(normal).kind == "none"
+    slow = {**normal, 3: 5.0}
+    assert mon.record_step(slow).kind == "none"       # patience not reached
+    act = mon.record_step(slow)
+    assert act.kind == "rebalance" and act.hosts == [3]
+    for _ in range(4):
+        act = mon.record_step(slow)
+    assert act.kind in ("swap", "reshard")
+    assert 3 not in mon.healthy_hosts()
+
+
+def test_elastic_remesh():
+    plan = remesh_plan(384, (16, 16))
+    assert plan is not None and plan.new_shape == (24, 16)
+    assert "preserved" in plan.note
+    plan2 = remesh_plan(24, (16, 16))
+    assert plan2 is not None and plan2.new_shape[0] * plan2.new_shape[1] == 24
+    assert remesh_plan(7, (16, 16), model_divisors=(16, 8, 4, 2)) is None
+
+
+def test_elastic_restore_roundtrip():
+    """Checkpoint written under one 'mesh' restores under another shape of
+    the same arrays (npz stores full arrays; shardings reapplied)."""
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+        save_checkpoint(d, 1, tree)
+        back = restore_checkpoint(d, tree)
+        np.testing.assert_allclose(np.asarray(back["w"]),
+                                   np.arange(64.0).reshape(8, 8))
