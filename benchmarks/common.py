@@ -26,7 +26,7 @@ from repro.configs.guitar_deepfm import (AMAZON_BENCH, TWITCH_BENCH,
                                          GuitarExperiment, measure_config)
 from repro.core import (Measure, SearchConfig, brute_force_topk,
                         deepfm_measure, deepfm_numpy_fns, recall,
-                        search_measure)
+                        search_legacy, search_measure)
 from repro.data import make_interactions
 from repro.graph import GraphIndex, build_l2_graph
 from repro.models import deepfm as deepfm_lib
@@ -120,10 +120,21 @@ class SweepPoint:
 def run_sweep(sys: BenchSystem, mode: str, k: int, efs=None,
               alpha: float = 1.01, budget: int = 8, rank_by: str = "angle",
               graph: Optional[GraphIndex] = None,
-              time_queries: bool = True) -> List[SweepPoint]:
-    """Sweep ef (the paper's k_search) -> (recall, QPS, Total) points."""
+              time_queries: bool = True,
+              searcher: str = "engine") -> List[SweepPoint]:
+    """Sweep ef (the paper's k_search) -> (recall, QPS, Total) points.
+    ``searcher``: 'engine' (staged batch-major pipeline) | 'legacy'."""
+    if searcher not in ("engine", "legacy"):
+        raise ValueError(f"unknown searcher {searcher!r}")
     graph = graph or sys.graph
     measure = rebuild_measure(sys)
+
+    def run_search(base_j, nbrs_j, queries_j, entries, cfg):
+        if searcher == "legacy":
+            return search_legacy(measure.score_fn, measure.params, base_j,
+                                 nbrs_j, queries_j, entries, cfg)
+        return search_measure(measure, base_j, nbrs_j, queries_j, entries, cfg)
+
     efs = efs or [max(k, e) for e in (8, 16, 32, 64, 128, 256)]
     Q = sys.queries.shape[0]
     base_j = jnp.asarray(graph.base)
@@ -134,11 +145,11 @@ def run_sweep(sys: BenchSystem, mode: str, k: int, efs=None,
     for ef in efs:
         cfg = SearchConfig(k=k, ef=ef, budget=budget, alpha=alpha, mode=mode,
                            rank_by=rank_by)
-        res = search_measure(measure, base_j, nbrs_j, queries_j, entries, cfg)
+        res = run_search(base_j, nbrs_j, queries_j, entries, cfg)
         jax.block_until_ready(res.ids)
         if time_queries:
             t0 = time.perf_counter()
-            res = search_measure(measure, base_j, nbrs_j, queries_j, entries, cfg)
+            res = run_search(base_j, nbrs_j, queries_j, entries, cfg)
             jax.block_until_ready(res.ids)
             dt = time.perf_counter() - t0
             qps = Q / dt

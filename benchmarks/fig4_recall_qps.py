@@ -13,15 +13,18 @@ from benchmarks.common import (build_system, csv_row, frontier, run_sweep,
                                speedup_at_recall, TWITCH_BENCH, AMAZON_BENCH)
 
 
-def run(datasets=("twitch",), ks=(1, 10, 100), quick: bool = False):
+def run(datasets=("twitch",), ks=(1, 10, 100), quick: bool = False,
+        searcher: str = "engine"):
     rows = []
     exps = {"twitch": TWITCH_BENCH, "amazon": AMAZON_BENCH}
     for ds in datasets:
         sys = build_system(exps[ds])
         for k in ks:
             efs = [max(k, e) for e in ((16, 64) if quick else (8, 16, 32, 64, 128, 256))]
-            sl2g = frontier(run_sweep(sys, "sl2g", k, efs=efs))
-            guitar = frontier(run_sweep(sys, "guitar", k, efs=efs))
+            sl2g = frontier(run_sweep(sys, "sl2g", k, efs=efs,
+                                      searcher=searcher))
+            guitar = frontier(run_sweep(sys, "guitar", k, efs=efs,
+                                        searcher=searcher))
             for p in sl2g:
                 rows.append(csv_row(
                     f"fig4/{ds}/top{k}/sl2g/ef{p.ef}", 1e6 / max(p.qps, 1e-9),

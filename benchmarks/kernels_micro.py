@@ -1,19 +1,67 @@
 """Microbenchmarks of the Pallas kernels' XLA fallbacks vs naive compositions
 on CPU (wall-clock), plus interpret-mode correctness spot checks. On-TPU
 timing is out of scope for this container; the kernels' BlockSpec tiling is
-validated structurally (tests) and their arithmetic via ref.py."""
+validated structurally (tests) and their arithmetic via ref.py.
+
+Also benchmarks the staged expansion engine against the legacy lane-major
+searcher end to end (same config → same recall; the engine's batch-major
+layout must win or tie on QPS)."""
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import csv_row
 from repro.models import layers as L
 from repro.utils import timeit
 
 
+def bench_engine_vs_legacy(quick: bool = False):
+    """End-to-end searcher A/B: staged engine vs legacy vmap searcher."""
+    from repro.core import (SearchConfig, mlp_measure, search_legacy,
+                            search_measure)
+    from repro.graph import build_l2_graph
+
+    n = 2000 if quick else 8000
+    q = 64 if quick else 128
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(n, 32)).astype(np.float32)
+    queries = rng.normal(size=(q, 32)).astype(np.float32)
+    measure = mlp_measure(jax.random.PRNGKey(0), 32, 32, hidden=(64, 64))
+    graph = build_l2_graph(base, m=16, k_construction=48)
+    base_j, nbrs_j = jnp.asarray(base), jnp.asarray(graph.neighbors)
+    queries_j = jnp.asarray(queries)
+    entries = jnp.full((q,), graph.entry, jnp.int32)
+    cfg = SearchConfig(k=10, ef=64, mode="guitar", budget=8, alpha=1.01)
+
+    def bench(fn):
+        jax.block_until_ready(fn().ids)          # compile
+        best = float("inf")
+        for _ in range(2 if quick else 3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn().ids)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_eng = bench(lambda: search_measure(measure, base_j, nbrs_j, queries_j,
+                                         entries, cfg))
+    t_leg = bench(lambda: search_legacy(measure.score_fn, measure.params,
+                                        base_j, nbrs_j, queries_j, entries,
+                                        cfg))
+    return [
+        csv_row("search/engine", t_eng * 1e6 / q,
+                f"n={n};qps={q / t_eng:.0f}"),
+        csv_row("search/legacy", t_leg * 1e6 / q,
+                f"n={n};qps={q / t_leg:.0f}"),
+        csv_row("search/engine_speedup", 0.0, f"x={t_leg / t_eng:.2f}"),
+    ]
+
+
 def run(quick: bool = False):
-    rows = []
+    rows = bench_engine_vs_legacy(quick)
     k = jax.random.PRNGKey(0)
     # measure-eval batch: fused ref vs unfused python composition
     from repro.kernels.deepfm_score.ref import deepfm_score_ref

@@ -1,14 +1,21 @@
 """Quickstart: build a GUITAR index over random vectors with an MLP measure
 and search it — the 60-second tour of the public API.
 
+Search runs on the staged expansion engine (docs/DESIGN.md §3): the whole
+query batch moves through one iteration-major loop — batched frontier pop,
+one batched value_and_grad, Eq. 3/4 neighbor ranking, a single fused
+(Q·C, D) measure evaluation per step, batched pool insert. `search_measure`
+hides all of that behind the classic one-call API; `build_engine` exposes
+the stage pipeline for customization.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (SearchConfig, brute_force_topk, mlp_measure, recall,
-                        search_measure)
+from repro.core import (SearchConfig, brute_force_topk, build_engine,
+                        mlp_measure, recall, search_measure)
 from repro.graph import build_l2_graph
 
 
@@ -29,7 +36,8 @@ def main():
     true_ids, _ = brute_force_topk(measure, jnp.asarray(base),
                                    jnp.asarray(queries), 10)
 
-    # 4. search: SL2G baseline vs GUITAR gradient pruning
+    # 4. search: SL2G baseline vs GUITAR gradient pruning — both are
+    #    configurations of the same staged engine, not separate searchers
     entries = jnp.full((16,), graph.entry, jnp.int32)
     for mode in ("sl2g", "guitar"):
         cfg = SearchConfig(k=10, ef=64, mode=mode, budget=8, alpha=1.01)
@@ -41,6 +49,15 @@ def main():
               f"measure-evals/query={float(res.n_eval.mean()):.0f} "
               f"grads/query={float(res.n_grad.mean()):.0f} "
               f"total-network-passes={total:.0f}")
+
+    # 5. the engine behind the API: stages (pop/grad/rank/measure/insert)
+    #    are swappable callables — see docs/DESIGN.md §3
+    eng = build_engine(measure, SearchConfig(k=10, ef=64, mode="guitar"))
+    res = eng.search(measure.params, jnp.asarray(base),
+                     jnp.asarray(graph.neighbors), jnp.asarray(queries),
+                     entries)
+    print(f"engine  recall@10={recall(res.ids, true_ids):.3f} "
+          f"(stages: pop/grad/rank/measure/insert)")
 
 
 if __name__ == "__main__":

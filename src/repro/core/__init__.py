@@ -4,8 +4,12 @@ from repro.core.measures import (  # noqa: F401
     Measure, deepfm_measure, deepfm_numpy_fns, inner_product_measure,
     l2_measure, mlp_measure,
 )
+from repro.core.engine import (  # noqa: F401
+    EngineOptions, ExpansionEngine, build_engine, build_engine_from_fn,
+    engine_search,
+)
 from repro.core.search import (  # noqa: F401
     SearchConfig, SearchResult, brute_force_topk, recall, search,
-    search_measure,
+    search_legacy, search_measure,
 )
 from repro.core.faithful import FaithfulStats, faithful_search, faithful_search_batch  # noqa: F401

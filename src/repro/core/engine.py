@@ -1,0 +1,489 @@
+"""Batch-major staged expansion engine for fast neural ranking (DESIGN.md §3).
+
+The paper's observation is that measure evaluation dominates search cost.
+The original searcher (`core/search.py`, kept as the legacy path) ran a
+per-query ``lax.while_loop`` vmapped over lanes, scoring at most ``budget``
+vectors per lane per step — tiny, lane-fragmented measure calls. This module
+restructures the search as ONE iteration-major loop over the whole query
+batch, with each algorithmic phase a swappable *stage*:
+
+    pop      batched frontier pop over the (Q, ef) pools
+    grad     one batched value_and_grad over the (Q, D) frontier (GUITAR)
+    rank     Eq. 3/4 neighbor ranking — Pallas ``neighbor_rank`` kernel on
+             TPU, pure-jnp ``ref`` fallback elsewhere
+    measure  a single flattened (Q·C, D) evaluation per step — the Pallas
+             ``deepfm_score`` kernel when the measure is DeepFM
+    insert   batched pool insert + packed visited-bitmap update
+
+Strategies are *configurations* of the same engine rather than branches in
+the loop body: SL2G = no grad stage + select-all rank; GUITAR = grad stage +
+angle/projection rank with the adaptive α·θ mask. Custom stages (caching,
+quantized measures, learned pruners) plug in via ``dataclasses.replace``.
+
+Two execution paths share the exact same stage code:
+
+- ``ExpansionEngine.search``       jitted ``lax.while_loop`` (serving path);
+- ``ExpansionEngine.search_debug`` eager host loop, one Python call per
+  iteration — stages are observable (call-counting doubles, tracing).
+
+Counter semantics match the legacy searcher: ``n_eval`` counts *effective*
+(α-mask-surviving) measure evaluations, ``n_grad`` gradient computations,
+``n_iters`` expansions — the paper's Table-2 accounting
+(Total = #NN + 2·#Grad).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.deepfm_score import deepfm_score
+from repro.kernels.neighbor_rank import neighbor_rank
+from repro.kernels.neighbor_rank.ref import neighbor_rank_ref
+
+
+# ---------------------------------------------------------------------------
+# config / results (canonical home; core/search.py re-exports for compat)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    k: int = 10                 # results to return
+    ef: int = 64                # pool (beam) size; >= k
+    budget: int = 8             # C: measure evals per expansion (guitar)
+    alpha: float = 1.01         # adaptive tolerance (>= 1)
+    mode: str = "guitar"        # guitar | sl2g
+    rank_by: str = "angle"      # angle | projection
+    adaptive: bool = True       # apply the alpha*theta mask
+    max_iters: int = 0          # 0 -> 4 * ef
+
+    def iters(self) -> int:
+        return self.max_iters if self.max_iters > 0 else 4 * self.ef
+
+
+class SearchResult(NamedTuple):
+    ids: jax.Array       # (Q, k) int32
+    scores: jax.Array    # (Q, k) float32
+    n_eval: jax.Array    # (Q,) effective measure evaluations
+    n_grad: jax.Array    # (Q,) gradient computations
+    n_iters: jax.Array   # (Q,) expansions
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """Backend knobs; hashable so engines can be cached per (fn, cfg, opts).
+
+    rank_impl:    'auto' (Pallas on TPU, ref elsewhere) | 'pallas' | 'ref'
+    measure_impl: 'auto' (Pallas DeepFM kernel on TPU, vmap elsewhere)
+                  | 'pallas' | 'vmap'
+    interpret:    force Pallas interpret mode (None = auto per backend)
+    """
+    rank_impl: str = "auto"
+    measure_impl: str = "auto"
+    interpret: Optional[bool] = None
+    block_q: int = 8
+
+
+# ---------------------------------------------------------------------------
+# batched state + packed visited bitmap
+# ---------------------------------------------------------------------------
+
+class EngineState(NamedTuple):
+    pool_scores: jax.Array    # (Q, ef) f32 desc-sorted
+    pool_ids: jax.Array       # (Q, ef) i32
+    pool_expanded: jax.Array  # (Q, ef) bool
+    visited: jax.Array        # (Q, ceil(N/32)) uint32
+    n_eval: jax.Array         # (Q,) i32
+    n_grad: jax.Array         # (Q,) i32
+    n_iters: jax.Array        # (Q,) i32
+    done: jax.Array           # (Q,) bool
+
+
+class PopOut(NamedTuple):
+    slot: jax.Array      # (Q,) pool slot popped
+    fid: jax.Array       # (Q,) frontier node id, clamped >= 0
+    active: jax.Array    # (Q,) lane expands this step (has frontier & ~done)
+
+
+def bit_test_rows(bitmap: jax.Array, ids: jax.Array) -> jax.Array:
+    """bitmap: (Q, W) uint32; ids: (Q, B) int32 -> (Q, B) bool."""
+    safe = jnp.maximum(ids, 0)
+    word = safe >> 5
+    bit = (safe & 31).astype(jnp.uint32)
+    w = jnp.take_along_axis(bitmap, word, axis=1)
+    return ((w >> bit) & 1).astype(jnp.bool_)
+
+
+def bit_set_rows(bitmap: jax.Array, ids: jax.Array, mask: jax.Array) -> jax.Array:
+    """Set bits rowwise. Within a row, masked-in ids are distinct and unset
+    (neighbor lists are duplicate-free and we only set fresh ids), so
+    scatter-add acts as OR — ids sharing a word accumulate distinct bits."""
+    Q = bitmap.shape[0]
+    safe = jnp.maximum(ids, 0)
+    word = safe >> 5
+    bit = (safe & 31).astype(jnp.uint32)
+    updates = jnp.where(mask, jnp.uint32(1) << bit, jnp.uint32(0))
+    rows = jnp.broadcast_to(jnp.arange(Q)[:, None], ids.shape)
+    return bitmap.at[rows, word].add(updates, mode="drop")
+
+
+def _freeze_done(done: jax.Array, new: Any, old: Any) -> Any:
+    """Keep converged lanes' state frozen (lane-granular early exit)."""
+    def pick(n, o):
+        d = done.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(d, o, n)
+    return jax.tree_util.tree_map(pick, new, old)
+
+
+# ---------------------------------------------------------------------------
+# Stage protocols — the engine is a pipeline of these callables
+# ---------------------------------------------------------------------------
+
+class PopStage(Protocol):
+    def __call__(self, state: EngineState) -> Tuple[EngineState, PopOut]:
+        """Pop one frontier node per lane; mark its slot expanded."""
+
+
+class GradStage(Protocol):
+    def __call__(self, params: Any, x: jax.Array, q: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+        """(Q, D) frontier, (Q, Dq) queries -> ((Q,) values, (Q, D) grads)."""
+
+
+class RankStage(Protocol):
+    def __call__(self, x: jax.Array, grad: Optional[jax.Array],
+                 nvecs: jax.Array, valid: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+        """Pick candidates: (Q,D), (Q,D)|None, (Q,B,D), (Q,B) ->
+        (sel_idx (Q,C) i32 slots into B, sel_mask (Q,C) bool)."""
+
+
+class MeasureStage(Protocol):
+    def __call__(self, params: Any, vecs: jax.Array, qs: jax.Array
+                 ) -> jax.Array:
+        """Flattened batch scorer: (M, D), (M, Dq) -> (M,) f32."""
+
+
+class InsertStage(Protocol):
+    def __call__(self, state: EngineState, ids: jax.Array, scores: jax.Array,
+                 mask: jax.Array) -> EngineState:
+        """Merge (Q, C) candidates into the sorted pools."""
+
+
+# ---------------------------------------------------------------------------
+# default stage implementations
+# ---------------------------------------------------------------------------
+
+def default_pop_stage(state: EngineState) -> Tuple[EngineState, PopOut]:
+    Q = state.pool_scores.shape[0]
+    cand = jnp.where(state.pool_expanded, -jnp.inf, state.pool_scores)
+    slot = jnp.argmax(cand, axis=1)
+    best = jnp.take_along_axis(cand, slot[:, None], axis=1)[:, 0]
+    active = jnp.isfinite(best) & ~state.done
+    fid = jnp.take_along_axis(state.pool_ids, slot[:, None], axis=1)[:, 0]
+    fid = jnp.maximum(fid, 0)
+    marked = state.pool_expanded.at[jnp.arange(Q), slot].set(True)
+    expanded = jnp.where(active[:, None], marked, state.pool_expanded)
+    return state._replace(pool_expanded=expanded), PopOut(slot, fid, active)
+
+
+def make_grad_stage(score_fn) -> GradStage:
+    def stage(params, x, q):
+        f = lambda xx, qq: score_fn(params, xx, qq)
+        vals, grads = jax.vmap(jax.value_and_grad(f))(x, q)
+        return vals.astype(jnp.float32), grads
+    return stage
+
+
+def make_guitar_rank_stage(cfg: SearchConfig,
+                           options: EngineOptions = EngineOptions()
+                           ) -> RankStage:
+    """Eq. 3 (angle) / Eq. 4 (projection) + static top-C + adaptive α·θ mask.
+    Backed by the Pallas ``neighbor_rank`` kernel or its jnp ref."""
+    def stage(x, grad, nvecs, valid):
+        use_pallas = options.rank_impl == "pallas" or (
+            options.rank_impl == "auto" and jax.default_backend() == "tpu")
+        if use_pallas:
+            key, in_range = neighbor_rank(
+                x, grad, nvecs, valid, alpha=cfg.alpha, rank_by=cfg.rank_by,
+                block_q=options.block_q, interpret=options.interpret)
+        else:
+            key, in_range = neighbor_rank_ref(
+                x, grad, nvecs, valid, alpha=cfg.alpha, rank_by=cfg.rank_by)
+        C = min(cfg.budget, nvecs.shape[1])
+        neg_key = jnp.where(jnp.isfinite(key), -key, -jnp.inf)
+        _, sel_idx = jax.lax.top_k(neg_key, C)
+        base_mask = in_range if cfg.adaptive else valid
+        sel_mask = jnp.take_along_axis(base_mask, sel_idx, axis=1)
+        return sel_idx, sel_mask
+    return stage
+
+
+def select_all_rank_stage(x, grad, nvecs, valid):
+    """SL2G: no pruning — every fresh neighbor is a candidate (C = B)."""
+    Q, B, _ = nvecs.shape
+    sel_idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None, :], (Q, B))
+    return sel_idx, valid
+
+
+def make_vmap_measure_stage(score_fn) -> MeasureStage:
+    def stage(params, vecs, qs):
+        return jax.vmap(
+            lambda x, q: score_fn(params, x, q))(vecs, qs).astype(jnp.float32)
+    return stage
+
+
+def make_deepfm_measure_stage(fm_dim: int,
+                              options: EngineOptions = EngineOptions()
+                              ) -> MeasureStage:
+    """Fused DeepFM scorer over the flattened (Q·C, D) candidate block."""
+    def stage(params, vecs, qs):
+        use_pallas = options.measure_impl == "pallas" or (
+            options.measure_impl == "auto" and jax.default_backend() == "tpu")
+        return deepfm_score(vecs, qs, params["mlp"], fm_dim=fm_dim,
+                            use_pallas=use_pallas, interpret=options.interpret)
+    return stage
+
+
+def default_insert_stage(state: EngineState, ids: jax.Array,
+                         scores: jax.Array, mask: jax.Array) -> EngineState:
+    """Sorted-pool merge WITHOUT a general sort. The pool is desc-sorted and
+    only C ≪ ef candidates arrive per step, so (1) candidates are ordered by
+    a comparison-counted rank realized as a one-hot permutation (XLA's
+    generic sort and scatter are both far slower on CPU than these dense
+    ops), and (2) each output slot gathers from pool or sorted candidates by
+    merge-path counting — O(ef·C) vectorized comparisons total. Tie-breaking
+    is pool-first then candidate index order, i.e. bit-exact with a stable
+    desc sort of [pool | candidates]."""
+    Q, ef = state.pool_scores.shape
+    C = scores.shape[1]
+    ns = jnp.where(mask, scores, -jnp.inf)               # (Q, C)
+    ni = jnp.where(mask, ids, -1)
+    ne = ~mask
+    p = state.pool_scores                                # (Q, ef) desc
+    # stable desc rank within candidates (unique) -> permutation via one-hot
+    gt = ns[:, :, None] < ns[:, None, :]                 # cand[k] > cand[j]
+    eq_earlier = (ns[:, :, None] == ns[:, None, :]) \
+        & (jnp.arange(C)[None, :] < jnp.arange(C)[:, None])[None]
+    rank = jnp.sum(gt | eq_earlier, axis=2)              # (Q, C)
+    onehot = (rank[:, :, None]
+              == jnp.arange(C)[None, None, :]).astype(jnp.float32)
+    perm = jnp.einsum("qjc,j->qc", onehot,
+                      jnp.arange(C, dtype=jnp.float32)).astype(jnp.int32)
+    ns = jnp.take_along_axis(ns, perm, axis=1)           # (Q, C) desc
+    ni = jnp.take_along_axis(ni, perm, axis=1)
+    ne = jnp.take_along_axis(ne, perm, axis=1)
+    # merged position of sorted cand j: j + #(pool >= cand_j)
+    pos_c = jnp.arange(C)[None, :] + jnp.sum(
+        p[:, None, :] >= ns[:, :, None], axis=2)         # (Q, C)
+    # slot-major gather: n_c(t) candidates land before output slot t, so
+    # slot t holds cand[n_c] if its position is exactly t, else pool[t - n_c]
+    t = jnp.arange(ef)[None, :]
+    n_c = jnp.sum(pos_c[:, None, :] < t[:, :, None], axis=2)   # (Q, ef)
+    ip = t - n_c
+    jc = jnp.clip(n_c, 0, C - 1)
+    from_c = jnp.take_along_axis(pos_c, jc, axis=1) == t
+
+    def pick(pool_v, cand_v):
+        a = jnp.take_along_axis(pool_v, jnp.clip(ip, 0, ef - 1), axis=1)
+        b = jnp.take_along_axis(cand_v, jc, axis=1)
+        return jnp.where(from_c, b, a)
+
+    return state._replace(
+        pool_scores=pick(p, ns),
+        pool_ids=pick(state.pool_ids, ni),
+        pool_expanded=pick(state.pool_expanded, ne))
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ExpansionEngine:
+    """A staged, batch-major graph searcher. Stages are swappable callables;
+    use ``dataclasses.replace(engine, measure=...)`` to instrument or extend.
+    ``grad=None`` skips the gradient phase (SL2G and other no-prune modes).
+    """
+    cfg: SearchConfig
+    pop: PopStage
+    rank: RankStage
+    measure: MeasureStage
+    insert: InsertStage
+    grad: Optional[GradStage] = None
+
+    # -- candidates per expansion (static; fixes the flattened batch shape)
+    def n_candidates(self, max_degree: int) -> int:
+        if self.grad is None:
+            return max_degree
+        return min(self.cfg.budget, max_degree)
+
+    # -- state init: seed pools with the entry points (one measure call)
+    def init_state(self, params, base, neighbors, queries, entries
+                   ) -> EngineState:
+        Q = queries.shape[0]
+        N = base.shape[0]
+        ef = self.cfg.ef
+        nwords = (N + 31) // 32
+        e_scores = self.measure(params, base[entries], queries)      # (Q,)
+        pool_scores = jnp.full((Q, ef), -jnp.inf).at[:, 0].set(e_scores)
+        pool_ids = jnp.full((Q, ef), -1, jnp.int32).at[:, 0].set(entries)
+        pool_expanded = jnp.ones((Q, ef), jnp.bool_).at[:, 0].set(False)
+        visited = bit_set_rows(jnp.zeros((Q, nwords), jnp.uint32),
+                               entries[:, None], jnp.ones((Q, 1), jnp.bool_))
+        zeros = jnp.zeros((Q,), jnp.int32)
+        return EngineState(pool_scores, pool_ids, pool_expanded, visited,
+                           zeros + 1, zeros, zeros,
+                           jnp.zeros((Q,), jnp.bool_))
+
+    # -- one iteration over the whole batch: pop → grad → rank → measure →
+    #    insert. qs_flat is the (Q·C, Dq) repeated query block, hoisted out
+    #    of the loop because C is static.
+    def step(self, params, base, neighbors, queries, qs_flat,
+             state: EngineState) -> EngineState:
+        Q = queries.shape[0]
+        s, pop = self.pop(state)
+
+        x = base[pop.fid]                              # (Q, D)
+        nbr = neighbors[pop.fid]                       # (Q, B)
+        nbr_safe = jnp.maximum(nbr, 0)
+        valid = (nbr >= 0) & ~bit_test_rows(s.visited, nbr) \
+            & pop.active[:, None]
+        nvecs = base[nbr_safe]                         # (Q, B, D)
+
+        if self.grad is not None:
+            _, g = self.grad(params, x, queries)
+            n_grad = s.n_grad + pop.active.astype(jnp.int32)
+        else:
+            g, n_grad = None, s.n_grad
+
+        sel_idx, sel_mask = self.rank(x, g, nvecs, valid)     # (Q, C)
+        sel_ids = jnp.take_along_axis(nbr, sel_idx, axis=1)
+        sel_vecs = jnp.take_along_axis(nvecs, sel_idx[..., None], axis=1)
+
+        C = sel_idx.shape[1]
+        flat_scores = self.measure(params, sel_vecs.reshape(Q * C, -1),
+                                   qs_flat)
+        scores = jnp.where(sel_mask, flat_scores.reshape(Q, C), -jnp.inf)
+
+        s = s._replace(
+            visited=bit_set_rows(s.visited, sel_ids, sel_mask),
+            n_grad=n_grad,
+            n_eval=s.n_eval + jnp.sum(sel_mask, axis=1).astype(jnp.int32),
+            n_iters=s.n_iters + pop.active.astype(jnp.int32))
+        s = self.insert(s, sel_ids, scores, sel_mask)
+
+        exhausted = ~jnp.any(~s.pool_expanded & jnp.isfinite(s.pool_scores),
+                             axis=1)
+        done = state.done | exhausted | (s.n_iters >= self.cfg.iters()) \
+            | ~pop.active
+        return s._replace(done=done)
+
+    def _result(self, final: EngineState) -> SearchResult:
+        k = self.cfg.k
+        return SearchResult(ids=final.pool_ids[:, :k],
+                            scores=final.pool_scores[:, :k],
+                            n_eval=final.n_eval, n_grad=final.n_grad,
+                            n_iters=final.n_iters)
+
+    # -- jitted whole-search path (serving / benchmarks)
+    @functools.cached_property
+    def _run_jit(self):
+        def run(params, base, neighbors, queries, entries):
+            state = self.init_state(params, base, neighbors, queries, entries)
+            C = self.n_candidates(neighbors.shape[1])
+            qs_flat = jnp.repeat(queries, C, axis=0)
+
+            def cond(s):
+                return ~jnp.all(s.done)
+
+            def body(s):
+                s2 = self.step(params, base, neighbors, queries, qs_flat, s)
+                return _freeze_done(s.done, s2, s)
+
+            return self._result(jax.lax.while_loop(cond, body, state))
+        return jax.jit(run)
+
+    def search(self, params, base, neighbors, queries, entries
+               ) -> SearchResult:
+        """base: (N, D); neighbors: (N, B) int32 -1-padded; queries: (Q, Dq);
+        entries: (Q,) int32. Returns SearchResult with (Q, ...) leaves."""
+        return self._run_jit(params, base, neighbors, queries, entries)
+
+    # -- eager host loop: same stage code, one Python call per iteration.
+    #    Stages are observable — wrap them (e.g. a call-counting double via
+    #    dataclasses.replace) to assert batching invariants.
+    def search_debug(self, params, base, neighbors, queries, entries,
+                     max_steps: Optional[int] = None,
+                     on_step: Optional[Callable[[int, EngineState], None]]
+                     = None) -> SearchResult:
+        entries = jnp.asarray(entries, jnp.int32)
+        state = self.init_state(params, base, neighbors, queries, entries)
+        C = self.n_candidates(neighbors.shape[1])
+        qs_flat = jnp.repeat(queries, C, axis=0)
+        limit = max_steps if max_steps is not None else self.cfg.iters() + 1
+        steps = 0
+        while steps < limit and not bool(jnp.all(state.done)):
+            s2 = self.step(params, base, neighbors, queries, qs_flat, state)
+            state = _freeze_done(state.done, s2, state)
+            steps += 1
+            if on_step is not None:
+                on_step(steps, state)
+        return self._result(state)
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+def _build(score_fn, meta, cfg: SearchConfig,
+           options: EngineOptions) -> ExpansionEngine:
+    if meta is not None and len(meta) == 2 and meta[0] == "deepfm" \
+            and options.measure_impl != "vmap":
+        measure_stage = make_deepfm_measure_stage(int(meta[1]), options)
+    else:
+        measure_stage = make_vmap_measure_stage(score_fn)
+    if cfg.mode == "guitar":
+        grad = make_grad_stage(score_fn)
+        rank = make_guitar_rank_stage(cfg, options)
+    else:
+        grad = None
+        rank = select_all_rank_stage
+    return ExpansionEngine(cfg=cfg, pop=default_pop_stage, rank=rank,
+                           measure=measure_stage, insert=default_insert_stage,
+                           grad=grad)
+
+
+@functools.lru_cache(maxsize=128)
+def _build_cached(score_fn, meta, cfg, options):
+    return _build(score_fn, meta, cfg, options)
+
+
+def build_engine_from_fn(score_fn, cfg: SearchConfig,
+                         options: EngineOptions = EngineOptions()
+                         ) -> ExpansionEngine:
+    """Engine for a bare ``score_fn(params, x, q) -> scalar`` (generic vmap
+    measure stage). Cached per (score_fn, cfg, options) so repeated calls
+    reuse the compiled search."""
+    return _build_cached(score_fn, None, cfg, options)
+
+
+def build_engine(measure, cfg: SearchConfig,
+                 options: EngineOptions = EngineOptions()) -> ExpansionEngine:
+    """Engine for a ``Measure``. Uses the fused Pallas DeepFM scorer when the
+    measure advertises ``meta == ('deepfm', fm_dim)`` (and the backend /
+    options allow), otherwise the generic vmap measure stage."""
+    meta = getattr(measure, "meta", None)
+    meta = tuple(meta) if meta is not None else None
+    return _build_cached(measure.score_fn, meta, cfg, options)
+
+
+def engine_search(measure, base, neighbors, queries, entries,
+                  cfg: SearchConfig,
+                  options: EngineOptions = EngineOptions()) -> SearchResult:
+    """One-call convenience: build (cached) + run."""
+    eng = build_engine(measure, cfg, options)
+    return eng.search(measure.params, base, neighbors, queries, entries)

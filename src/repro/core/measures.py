@@ -25,10 +25,16 @@ ScoreFn = Callable[[Any, jax.Array, jax.Array], jax.Array]
 
 @dataclasses.dataclass(frozen=True)
 class Measure:
-    """score_fn is static (hashable); params is a pytree traced by jit."""
+    """score_fn is static (hashable); params is a pytree traced by jit.
+
+    ``meta`` optionally advertises a kernel-fusable structure as a hashable
+    tuple — e.g. ``('deepfm', fm_dim)`` lets the expansion engine route the
+    flattened candidate scoring through the Pallas ``deepfm_score`` kernel.
+    """
     name: str
     score_fn: ScoreFn
     params: Any
+    meta: Optional[tuple] = None
 
     def score(self, x: jax.Array, q: jax.Array) -> jax.Array:
         return self.score_fn(self.params, x, q)
@@ -53,7 +59,7 @@ def deepfm_measure(params: dict, cfg: deepfm_lib.DeepFMConfig) -> Measure:
     def fn(p, x, q):
         return deepfm_lib.score(p, x, q, cfg_static)
 
-    return Measure("deepfm", fn, mlp_params)
+    return Measure("deepfm", fn, mlp_params, meta=("deepfm", cfg.fm_dim))
 
 
 def mlp_measure(key: jax.Array, d_x: int, d_q: int,

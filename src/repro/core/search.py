@@ -1,54 +1,32 @@
-"""Batched graph search for fast neural ranking — SL2G baseline + GUITAR.
+"""Compat search API for fast neural ranking — SL2G baseline + GUITAR.
 
-TPU-native restructuring of the paper's Algorithm 1 (see DESIGN.md §2):
+The hot path now lives in ``core/engine.py`` (see DESIGN.md §3): a staged,
+batch-major ExpansionEngine that runs the whole query batch through one
+iteration-major loop and issues a single flattened (Q·C, D) measure
+evaluation per step. This module keeps the original public surface:
 
-- per-query state is a fixed-size best-first pool (``ef`` entries, sorted by
-  score) + a packed-bit visited bitmap; the whole search is one
-  ``lax.while_loop`` vmapped over the query batch;
-- GUITAR mode spends one ``value_and_grad`` per expansion (cost 2F), ranks
-  the frontier's neighbors by separation angle (Eq. 3) or gradient projection
-  (Eq. 4) against ``-∂L/∂x = ∂f/∂x``, keeps the best ``budget`` (static C)
-  within the adaptive ``α·θ`` range, and evaluates the measure only on those;
-- SL2G mode evaluates the measure on ALL neighbors (the baseline).
-
-The measure evaluation is the dominant cost; in GUITAR mode it shrinks from
-B (graph degree) to C lanes per expansion — the static-shape analogue of the
-paper's dynamic pruning. Counters track both the static cost and the
-"effective" (α-mask-surviving) evaluations for Table-2-style accounting.
+- ``search`` / ``search_measure`` keep their signatures and ``SearchResult``
+  counters but dispatch to the engine;
+- ``search_legacy`` is the original per-query ``lax.while_loop`` vmapped
+  over lanes (kept for A/B benchmarking — see benchmarks/kernels_micro.py);
+- ``rank_and_prune`` is the single-lane Eq. 3/4 ranking primitive (the
+  engine uses the batched ``neighbor_rank`` kernel / ref instead);
+- ``brute_force_topk`` is the exact ground-truth labeler, batched over both
+  queries and the corpus (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import (  # noqa: F401  (re-exported compat surface)
+    EngineOptions, ExpansionEngine, SearchConfig, SearchResult, build_engine,
+    build_engine_from_fn, engine_search,
+)
 from repro.core.measures import Measure
-
-
-@dataclasses.dataclass(frozen=True)
-class SearchConfig:
-    k: int = 10                 # results to return
-    ef: int = 64                # pool (beam) size; >= k
-    budget: int = 8             # C: measure evals per expansion (guitar)
-    alpha: float = 1.01         # adaptive tolerance (>= 1)
-    mode: str = "guitar"        # guitar | sl2g
-    rank_by: str = "angle"      # angle | projection
-    adaptive: bool = True       # apply the alpha*theta mask
-    max_iters: int = 0          # 0 -> 4 * ef
-
-    def iters(self) -> int:
-        return self.max_iters if self.max_iters > 0 else 4 * self.ef
-
-
-class SearchResult(NamedTuple):
-    ids: jax.Array       # (Q, k) int32
-    scores: jax.Array    # (Q, k) float32
-    n_eval: jax.Array    # (Q,) effective measure evaluations
-    n_grad: jax.Array    # (Q,) gradient computations
-    n_iters: jax.Array   # (Q,) expansions
 
 
 class _State(NamedTuple):
@@ -63,7 +41,7 @@ class _State(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# visited bitmap
+# visited bitmap (single-lane; the engine has batched twins)
 # ---------------------------------------------------------------------------
 
 def _bit_test(bitmap: jax.Array, ids: jax.Array) -> jax.Array:
@@ -108,7 +86,7 @@ def _pool_insert(state: _State, new_scores, new_ids, new_valid) -> _State:
 
 
 # ---------------------------------------------------------------------------
-# neighbor ranking (the paper's Eq. 3 / Eq. 4)
+# neighbor ranking (the paper's Eq. 3 / Eq. 4), single lane
 # ---------------------------------------------------------------------------
 
 def rank_and_prune(diffs: jax.Array, grad: jax.Array, valid: jax.Array,
@@ -147,7 +125,7 @@ def rank_and_prune(diffs: jax.Array, grad: jax.Array, valid: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# the search loop (single query; vmapped by `search`)
+# legacy search loop (single query; vmapped by `search_legacy`)
 # ---------------------------------------------------------------------------
 
 def _search_one(score_fn, measure_params, base, neighbors, q, entry,
@@ -231,46 +209,83 @@ def _search_one(score_fn, measure_params, base, neighbors, q, entry,
 
 
 @functools.partial(jax.jit, static_argnames=("score_fn", "cfg"))
-def search(score_fn, measure_params, base: jax.Array, neighbors: jax.Array,
-           queries: jax.Array, entries: jax.Array, cfg: SearchConfig
-           ) -> SearchResult:
-    """Batched fast-neural-ranking search.
-
-    score_fn: (params, x (D,), q (Dq,)) -> scalar (static callable)
-    base: (N, D); neighbors: (N, B) int32 -1-padded; queries: (Q, Dq);
-    entries: (Q,) int32 entry points. Returns SearchResult with (Q, ...)."""
+def search_legacy(score_fn, measure_params, base: jax.Array,
+                  neighbors: jax.Array, queries: jax.Array,
+                  entries: jax.Array, cfg: SearchConfig) -> SearchResult:
+    """The original lane-major searcher (per-query while_loop, vmapped)."""
     return jax.vmap(
         lambda q, e: _search_one(score_fn, measure_params, base, neighbors,
                                  q, e, cfg)
     )(queries, entries)
 
 
+# ---------------------------------------------------------------------------
+# public API — engine-backed
+# ---------------------------------------------------------------------------
+
+def search(score_fn, measure_params, base: jax.Array, neighbors: jax.Array,
+           queries: jax.Array, entries: jax.Array, cfg: SearchConfig,
+           options: Optional[EngineOptions] = None) -> SearchResult:
+    """Batched fast-neural-ranking search (engine path).
+
+    score_fn: (params, x (D,), q (Dq,)) -> scalar (static callable)
+    base: (N, D); neighbors: (N, B) int32 -1-padded; queries: (Q, Dq);
+    entries: (Q,) int32 entry points. Returns SearchResult with (Q, ...)."""
+    eng = build_engine_from_fn(score_fn, cfg, options or EngineOptions())
+    return eng.search(measure_params, base, neighbors, queries, entries)
+
+
 def search_measure(measure: Measure, base, neighbors, queries, entries,
-                   cfg: SearchConfig) -> SearchResult:
-    return search(measure.score_fn, measure.params, base, neighbors,
-                  queries, entries, cfg)
+                   cfg: SearchConfig,
+                   options: Optional[EngineOptions] = None) -> SearchResult:
+    """Like ``search`` but measure-aware: DeepFM measures route their fused
+    (Q·C, D) evaluation through the Pallas ``deepfm_score`` kernel on TPU."""
+    eng = build_engine(measure, cfg, options or EngineOptions())
+    return eng.search(measure.params, base, neighbors, queries, entries)
+
+
+# ---------------------------------------------------------------------------
+# ground truth + metrics
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _bf_merge_step(score_fn):
+    """Jitted (Qb, Nb) blocked scorer + running top-k merge, cached per
+    measure fn (shape-specialized compiles per distinct block shape)."""
+    @jax.jit
+    def step(params, qb, xs, col0, best_s, best_i):
+        scores = jax.vmap(lambda q: jax.vmap(
+            lambda x: score_fn(params, x, q))(xs))(qb).astype(jnp.float32)
+        ids = col0 + jnp.arange(xs.shape[0], dtype=jnp.int32)
+        cs = jnp.concatenate([best_s, scores], axis=1)
+        ci = jnp.concatenate(
+            [best_i, jnp.broadcast_to(ids[None, :], scores.shape)], axis=1)
+        v, ix = jax.lax.top_k(cs, best_s.shape[1])
+        return v, jnp.take_along_axis(ci, ix, axis=1)
+    return step
 
 
 def brute_force_topk(measure: Measure, base: jax.Array, queries: jax.Array,
-                     k: int, batch: int = 8192) -> Tuple[jax.Array, jax.Array]:
+                     k: int, batch: int = 8192, q_block: int = 128
+                     ) -> Tuple[jax.Array, jax.Array]:
     """Exact top-k by exhaustive measure evaluation (ground-truth labels —
-    the paper's label protocol)."""
-    @jax.jit
-    def score_block(xs, q):
-        return jax.vmap(lambda x: measure.score_fn(measure.params, x, q)
-                        )(xs).astype(jnp.float32)
-
+    the paper's label protocol). Batched over queries AND corpus blocks: one
+    jitted (Qb, Nb) scorer with a streaming top-k merge, instead of the old
+    per-query Python loop."""
+    base = jnp.asarray(base)
+    queries = jnp.asarray(queries)
+    step = _bf_merge_step(measure.score_fn)
     outs_i, outs_s = [], []
-    for qi in range(queries.shape[0]):
-        q = queries[qi]
-        scores = []
+    for q0 in range(0, queries.shape[0], q_block):
+        qb = queries[q0: q0 + q_block]
+        best_s = jnp.full((qb.shape[0], k), -jnp.inf, jnp.float32)
+        best_i = jnp.full((qb.shape[0], k), -1, jnp.int32)
         for s in range(0, base.shape[0], batch):
-            scores.append(score_block(base[s: s + batch], q))
-        sc = jnp.concatenate(scores)
-        v, i = jax.lax.top_k(sc, k)
-        outs_i.append(i)
-        outs_s.append(v)
-    return jnp.stack(outs_i), jnp.stack(outs_s)
+            best_s, best_i = step(measure.params, qb, base[s: s + batch],
+                                  jnp.int32(s), best_s, best_i)
+        outs_i.append(best_i)
+        outs_s.append(best_s)
+    return jnp.concatenate(outs_i), jnp.concatenate(outs_s)
 
 
 def recall(found_ids: jax.Array, true_ids: jax.Array) -> float:

@@ -23,9 +23,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.engine import EngineOptions, build_engine_from_fn
 from repro.core.measures import Measure
-from repro.core.search import SearchConfig, SearchResult, _search_one
+from repro.core.search import SearchConfig, SearchResult
 from repro.graph.build import GraphIndex, build_l2_graph
+from repro.utils import shard_map_compat
 
 
 @dataclasses.dataclass
@@ -64,22 +66,23 @@ def build_sharded_index(base: np.ndarray, n_shards: int, m: int = 24,
         n_shards=n_shards)
 
 
-def make_sharded_search(score_fn, mesh: Mesh, cfg: SearchConfig):
+def make_sharded_search(score_fn, mesh: Mesh, cfg: SearchConfig,
+                        options: EngineOptions = EngineOptions()):
     """Returns a jitted fn(measure_params, sh_base, sh_nbrs, sh_entries,
     sh_gids, queries) -> (global_ids (Q, k), scores (Q, k)) under shard_map.
     ``measure_params`` is an ordinary (replicated) pytree argument so the
     whole service step can be lowered abstractly for the dry-run."""
     axis = "model"
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    engine = build_engine_from_fn(score_fn, cfg, options)
 
     def local_search(measure_params, base, nbrs, entry, gids, queries):
-        # shard_map blocks: base (1, Np, D), queries (Qlocal, Dq)
+        # shard_map blocks: base (1, Np, D), queries (Qlocal, Dq).
+        # Batch-major engine: the whole local query block runs through one
+        # staged expansion loop against the local partition.
         base, nbrs, gids = base[0], nbrs[0], gids[0]
-        entry = entry[0]
-        res = jax.vmap(
-            lambda q: _search_one(score_fn, measure_params,
-                                  base, nbrs, q, entry, cfg)
-        )(queries)
+        entries = jnp.full((queries.shape[0],), entry[0], jnp.int32)
+        res = engine.search(measure_params, base, nbrs, queries, entries)
         local_ids = jnp.where(res.ids >= 0, gids[jnp.maximum(res.ids, 0)], -1)
         # gather candidates from all corpus shards, merge top-k
         all_ids = jax.lax.all_gather(local_ids, axis, axis=1)     # (Q, S, k)
@@ -94,13 +97,13 @@ def make_sharded_search(score_fn, mesh: Mesh, cfg: SearchConfig):
         return jax.tree_util.tree_map(lambda _: P(), tree)
 
     def fn(measure_params, base, nbrs, entries, gids, queries):
-        wrapped = jax.shard_map(
+        wrapped = shard_map_compat(
             local_search, mesh=mesh,
             in_specs=(specs_like(measure_params),
                       P(axis, None, None), P(axis, None, None), P(axis),
                       P(axis, None), P(batch_axes, None)),
             out_specs=(P(batch_axes, None), P(batch_axes, None)),
-            check_vma=False)
+            check=False)
         return wrapped(measure_params, base, nbrs, entries, gids, queries)
 
     return jax.jit(fn)

@@ -1,5 +1,7 @@
 """Serving launcher: stand up a GUITAR ranking service (measure + index) and
-run batched queries against it. ``--mode`` selects the searcher.
+run batched queries against it. ``--mode`` selects the pruning strategy,
+``--searcher`` the execution path (staged expansion engine vs the legacy
+lane-major searcher).
 
     PYTHONPATH=src python -m repro.launch.serve --items 10000 --queries 128
 """
@@ -13,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (SearchConfig, brute_force_topk, mlp_measure, recall,
-                        search_measure)
+                        search_legacy, search_measure)
 from repro.graph import build_l2_graph
 
 
@@ -24,6 +26,8 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=128)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--mode", choices=["guitar", "sl2g"], default="guitar")
+    ap.add_argument("--searcher", choices=["engine", "legacy"],
+                    default="engine")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--alpha", type=float, default=1.01)
@@ -41,28 +45,51 @@ def main() -> None:
 
     cfg = SearchConfig(k=args.k, ef=args.ef, mode=args.mode,
                        budget=args.budget, alpha=args.alpha)
+
+    def run_batch(qj, entries):
+        if args.searcher == "legacy":
+            return search_legacy(measure.score_fn, measure.params, base_j,
+                                 nbrs_j, qj, entries, cfg)
+        return search_measure(measure, base_j, nbrs_j, qj, entries, cfg)
+
     base_j = jnp.asarray(base)
     nbrs_j = jnp.asarray(graph.neighbors)
-    served = 0
-    t_total = 0.0
+    lat_ms, evals = [], []
     first_recall = None
     for s in range(0, args.queries, args.batch):
         q = rng.normal(size=(args.batch, args.dim)).astype(np.float32)
         qj = jnp.asarray(q)
         entries = jnp.full((args.batch,), graph.entry, jnp.int32)
         t0 = time.perf_counter()
-        res = search_measure(measure, base_j, nbrs_j, qj, entries, cfg)
+        res = run_batch(qj, entries)
         jax.block_until_ready(res.ids)
         dt = time.perf_counter() - t0
-        if s:  # skip the compile batch in throughput accounting
-            t_total += dt
-            served += args.batch
+        lat_ms.append(dt * 1e3)
+        evals.append(float(res.n_eval.mean()))
         if s == 0:
             true_ids, _ = brute_force_topk(measure, base_j, qj[:16], args.k)
             first_recall = recall(res.ids[:16], true_ids)
-    qps = served / t_total if t_total else 0.0
-    print(f"[serve] mode={args.mode} recall@{args.k}={first_recall:.3f} "
-          f"steady-state {qps:.0f} QPS (CPU backend)")
+
+    # batch 0 pays compilation; use the rest for steady-state numbers, but
+    # guard the single-batch (--queries <= --batch) case: re-run the warm
+    # batch so the report never divides by zero or quotes compile time.
+    steady = lat_ms[1:]
+    if not steady:
+        q = rng.normal(size=(args.batch, args.dim)).astype(np.float32)
+        entries = jnp.full((args.batch,), graph.entry, jnp.int32)
+        t0 = time.perf_counter()
+        res = run_batch(jnp.asarray(q), entries)
+        jax.block_until_ready(res.ids)
+        steady = [(time.perf_counter() - t0) * 1e3]
+        evals.append(float(res.n_eval.mean()))
+    qps = args.batch * len(steady) / (sum(steady) / 1e3)
+    p50 = float(np.percentile(steady, 50))
+    p95 = float(np.percentile(steady, 95))
+    print(f"[serve] searcher={args.searcher} mode={args.mode} "
+          f"recall@{args.k}={first_recall:.3f} steady-state {qps:.0f} QPS "
+          f"(batch={args.batch})")
+    print(f"[serve] latency/batch p50={p50:.1f}ms p95={p95:.1f}ms "
+          f"effective-evals/query={np.mean(evals):.0f}")
 
 
 if __name__ == "__main__":

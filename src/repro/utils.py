@@ -9,6 +9,18 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across JAX versions: the top-level binding (with
+    ``check_vma``) appeared after 0.4.x; older releases only ship
+    ``jax.experimental.shard_map`` (with ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)
+
+
 def key_iter(seed: int) -> Iterator[jax.Array]:
     """Infinite stream of fresh PRNG keys."""
     key = jax.random.PRNGKey(seed)

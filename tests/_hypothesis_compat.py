@@ -1,0 +1,79 @@
+"""Hypothesis with a deterministic fallback.
+
+The property tests prefer real hypothesis (declared in pyproject's ``dev``
+extra). On environments where it is not installed, a minimal stand-in runs
+each ``@given`` test over a fixed number of deterministically drawn examples
+(seeded per test name) so collection — and the properties themselves — still
+run on a clean checkout. Only the strategy surface these tests use is
+implemented: integers, floats, sampled_from, booleans.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import hashlib
+    import inspect
+    import random
+
+    _FALLBACK_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    st = _Strategies()
+
+    def given(*strategies_args):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_hc_max_examples",
+                            _FALLBACK_MAX_EXAMPLES)
+                seed = int(hashlib.md5(
+                    fn.__qualname__.encode()).hexdigest()[:8], 16)
+                rng = random.Random(seed)
+                for _ in range(n):
+                    drawn = [s.draw(rng) for s in strategies_args]
+                    fn(*args, *drawn, **kwargs)
+            # strategy args fill the TRAILING parameters (hypothesis
+            # convention: fixtures first); hide them from pytest's fixture
+            # resolution and drop __wrapped__ so inspect doesn't see them.
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            fixture_params = params[: len(params) - len(strategies_args)]
+            wrapper.__signature__ = sig.replace(parameters=fixture_params)
+            del wrapper.__wrapped__
+            wrapper._hc_given = True
+            return wrapper
+        return decorate
+
+    def settings(max_examples=_FALLBACK_MAX_EXAMPLES, **_ignored):
+        def decorate(fn):
+            if getattr(fn, "_hc_given", False):
+                fn._hc_max_examples = min(max_examples,
+                                          _FALLBACK_MAX_EXAMPLES)
+            return fn
+        return decorate

@@ -1,7 +1,7 @@
 """Graph construction + data pipeline + GNN sampler."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data import BatchIterator, NeighborSampler, make_graph, make_interactions
 from repro.data.synthetic import make_batched_molecules
