@@ -33,7 +33,16 @@ from repro.models import deepfm as deepfm_lib
 from repro.train.optimizer import OptimizerConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
+# Generated caches only — gitignored; build_system() regenerates on miss.
 CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "bench_cache")
+
+
+def quickstart_corpus(n: int = 5000, dim: int = 32,
+                      seed: int = 0) -> np.ndarray:
+    """The examples/quickstart.py corpus (gaussian items) — the shared small
+    corpus for construction parity gates and micro-benchmarks."""
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, dim)).astype(np.float32)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,216 @@
+"""Graph-construction micro-benchmark: blocked kernels vs the Python
+reference (DESIGN.md §5).
+
+Three gates, printed as the standard ``name,us_per_call,derived`` rows:
+
+1. **Throughput** — the blocked pipeline (occlusion prune + symmetrize) at
+   full N, against the retained references timed on a node subsample and
+   extrapolated (both stages are per-node/per-edge independent, so per-node
+   cost is scale-free). Acceptance: >= 10x at N=50k, m=24 on CPU.
+2. **Recall parity** — full blocked vs full reference build on the
+   quickstart corpus; engine search recall over the two graphs must agree
+   within +-0.5%.
+3. **Sharded uniqueness** — a padded sharded index (N not divisible by the
+   shard count) searched shard-by-shard and merged with ``merge_topk`` must
+   return duplicate-free top-k.
+
+    PYTHONPATH=src python -m benchmarks.graph_build          # N=50k gate
+    PYTHONPATH=src python -m benchmarks.graph_build --smoke  # CI (~1 min)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, quickstart_corpus
+from repro.core import (SearchConfig, brute_force_topk, build_engine,
+                        mlp_measure, recall)
+from repro.core.sharded import build_sharded_index, merge_topk
+from repro.graph import (brute_force_knn, build_l2_graph, occlusion_prune,
+                         occlusion_prune_ref, symmetrize, symmetrize_ref)
+
+
+def bench_throughput(n: int, dim: int, m: int, kc: int, ref_nodes: int,
+                     seed: int = 0) -> dict:
+    """Time the blocked prune+symmetrize at full N; time the references on a
+    ``ref_nodes`` sub-corpus (same kc/m/dim => same per-node cost) and
+    extrapolate to N. The gate uses the steady-state (second) run — jit
+    compilation is a one-time cost per build configuration, amortized across
+    shards and rebuilds; the cold first run is reported alongside."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(n, dim)).astype(np.float32)
+    knn = brute_force_knn(base, min(kc, n - 1))
+
+    # min over repeats on BOTH sides: the container is 2-core and
+    # cpu-share-throttled, so single-run wall clocks carry multi-second
+    # noise spikes; min-of-repeats is the standard de-noiser and keeps the
+    # blocked/ref ratio apples-to-apples
+    t_cold = t_prune = t_sym = None
+    for it in range(3):
+        t0 = time.perf_counter()
+        pruned = occlusion_prune(base, knn, m, assume_unique=True)
+        t_p = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        sym = symmetrize(pruned, 2 * m)
+        t_s = time.perf_counter() - t0
+        if it == 0:
+            t_cold = t_p + t_s
+        else:
+            t_prune = t_p if t_prune is None else min(t_prune, t_p)
+            t_sym = t_s if t_sym is None else min(t_sym, t_s)
+
+    r = min(ref_nodes, n)
+    ref_base = base[:r]
+    ref_knn = brute_force_knn(ref_base, min(kc, r - 1))
+    t_prune_ref = t_sym_ref = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        ref_pruned = occlusion_prune_ref(ref_base, ref_knn, m)
+        t_prune_ref = min(t_prune_ref, (time.perf_counter() - t0) * (n / r))
+        t0 = time.perf_counter()
+        symmetrize_ref(ref_pruned, 2 * m)
+        t_sym_ref = min(t_sym_ref, (time.perf_counter() - t0) * (n / r))
+
+    blocked = t_prune + t_sym
+    ref = t_prune_ref + t_sym_ref
+    return {"n": n, "avg_degree": float((sym >= 0).sum(1).mean()),
+            "t_blocked": blocked, "t_blocked_cold": t_cold,
+            "t_ref_extrapolated": ref,
+            "t_prune": t_prune, "t_sym": t_sym,
+            "speedup": ref / blocked}
+
+
+def bench_recall_parity(n: int, dim: int, m: int, kc: int,
+                        n_queries: int = 64, k: int = 10,
+                        seed: int = 0) -> dict:
+    """Blocked vs reference build on the quickstart corpus: identical-row
+    fraction and engine-search recall delta."""
+    base = quickstart_corpus(n, dim, seed)
+    g_new = build_l2_graph(base, m=m, k_construction=kc, impl="blocked")
+    g_ref = build_l2_graph(base, m=m, k_construction=kc, impl="ref")
+    row_match = float((g_new.neighbors == g_ref.neighbors).all(1).mean())
+
+    rng = np.random.default_rng(seed + 1)
+    queries = rng.normal(size=(n_queries, dim)).astype(np.float32)
+    measure = mlp_measure(jax.random.PRNGKey(0), dim, dim, hidden=(64, 64))
+    true_ids, _ = brute_force_topk(measure, jnp.asarray(base),
+                                   jnp.asarray(queries), k)
+    eng = build_engine(measure, SearchConfig(k=k, ef=64, mode="guitar"))
+    recalls = {}
+    for name, g in (("blocked", g_new), ("ref", g_ref)):
+        entries = jnp.full((n_queries,), g.entry, jnp.int32)
+        res = eng.search(measure.params, jnp.asarray(g.base),
+                         jnp.asarray(g.neighbors), jnp.asarray(queries),
+                         entries)
+        recalls[name] = float(recall(res.ids, true_ids))
+    return {"row_match": row_match, "recall_blocked": recalls["blocked"],
+            "recall_ref": recalls["ref"],
+            "recall_delta": recalls["blocked"] - recalls["ref"]}
+
+
+def bench_sharded_unique(n: int = 1030, dim: int = 12, n_shards: int = 4,
+                         n_queries: int = 16, k: int = 10) -> dict:
+    """Search a padded sharded index shard-by-shard, merge with merge_topk,
+    and count duplicate ids per query (must be zero)."""
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(n, dim)).astype(np.float32)
+    queries = rng.normal(size=(n_queries, dim)).astype(np.float32)
+    idx = build_sharded_index(base, n_shards=n_shards, m=8, k_construction=24)
+    measure = mlp_measure(jax.random.PRNGKey(1), dim, dim, hidden=(32,))
+    eng = build_engine(measure, SearchConfig(k=k, ef=32, mode="guitar"))
+    all_ids, all_scores = [], []
+    for s in range(n_shards):
+        entries = jnp.full((n_queries,), int(idx.entries[s]), jnp.int32)
+        res = eng.search(measure.params, jnp.asarray(idx.base[s]),
+                         jnp.asarray(idx.neighbors[s]), jnp.asarray(queries),
+                         entries)
+        gids = jnp.asarray(idx.global_ids[s])
+        all_ids.append(jnp.where(res.ids >= 0,
+                                 gids[jnp.maximum(res.ids, 0)], -1))
+        all_scores.append(res.scores)
+    ids, _ = merge_topk(jnp.stack(all_ids, 1), jnp.stack(all_scores, 1), k)
+    ids = np.asarray(ids)
+    dups = sum(len(row[row >= 0]) - len(set(row[row >= 0].tolist()))
+               for row in ids)
+    padded = int((idx.global_ids < 0).sum())
+    return {"padded_rows": padded, "duplicates": dups}
+
+
+def run(quick: bool = True, n: int = 50_000, dim: int = 32, m: int = 24,
+        kc: int = 100, ref_nodes: int = 2000) -> List[str]:
+    """Row-generator entry point (benchmarks/run.py contract). Raises
+    RuntimeError when a gate fails so the orchestrator's per-job error
+    handling turns it into a nonzero exit."""
+    rows, failures = _run_impl(quick, n, dim, m, kc, ref_nodes)
+    if failures:
+        raise RuntimeError("graph-build gates failed: " + ", ".join(failures))
+    return rows
+
+
+def _run_impl(quick: bool, n: int, dim: int, m: int, kc: int,
+              ref_nodes: int):
+    if quick:
+        n, ref_nodes, parity_n = 4000, 400, 1200
+    else:
+        parity_n = 5000
+    rows = []
+    thr = bench_throughput(n, dim, m, kc, ref_nodes)
+    rows.append(csv_row(
+        f"graphbuild_blocked_n{n}", thr["t_blocked"] / n * 1e6,
+        f"speedup={thr['speedup']:.1f}x_vs_ref"
+        f"(ref={thr['t_ref_extrapolated']:.1f}s_extrapolated"
+        f"_blocked={thr['t_blocked']:.1f}s_cold={thr['t_blocked_cold']:.1f}s)"))
+    par = bench_recall_parity(parity_n, dim, min(m, 16), min(kc, 48))
+    rows.append(csv_row(
+        "graphbuild_parity", 0.0,
+        f"recall_delta={par['recall_delta']:+.4f}"
+        f"(blocked={par['recall_blocked']:.3f}_ref={par['recall_ref']:.3f}"
+        f"_rowmatch={par['row_match']:.3f})"))
+    uniq = bench_sharded_unique()
+    rows.append(csv_row(
+        "graphbuild_sharded_unique", 0.0,
+        f"duplicates={uniq['duplicates']}_padded_rows={uniq['padded_rows']}"))
+    # hard gates: parity and uniqueness always; the 10x throughput gate only
+    # at full scale (smoke N is jit-compile-dominated by construction)
+    failures = []
+    if not quick and thr["speedup"] < 10.0:
+        failures.append(f"speedup {thr['speedup']:.1f}x < 10x")
+    if abs(par["recall_delta"]) > 0.005:
+        failures.append(f"recall delta {par['recall_delta']:+.4f} > 0.5%")
+    if uniq["duplicates"] != 0:
+        failures.append(f"{uniq['duplicates']} duplicate ids in merged top-k")
+    ok_speed = quick or thr["speedup"] >= 10.0
+    rows.append(csv_row(
+        "graphbuild_gates", 0.0,
+        f"speedup_ge_10x={ok_speed}"
+        f"_recall_within_0.5pct={abs(par['recall_delta']) <= 0.005}"
+        f"_duplicate_free={uniq['duplicates'] == 0}"))
+    return rows, failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (small N; skips the 10x gate)")
+    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--m", type=int, default=24)
+    ap.add_argument("--kc", type=int, default=100)
+    ap.add_argument("--ref-nodes", type=int, default=2000)
+    args = ap.parse_args()
+    rows, failures = _run_impl(args.smoke, args.n, args.dim, args.m,
+                               args.kc, args.ref_nodes)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row, flush=True)
+    if failures:
+        raise SystemExit("graph-build gates failed: " + ", ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

@@ -15,13 +15,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig5,table2,fig6,fig7,roofline,kernels")
+                    help="comma list: fig4,fig5,table2,fig6,fig7,roofline,"
+                         "kernels,graphbuild")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig4_recall_qps, fig5_alpha, fig6_projection,
-                            fig7_begin, kernels_micro, roofline,
+                            fig7_begin, graph_build, kernels_micro, roofline,
                             table2_breakdown)
 
     jobs = [
@@ -33,6 +34,7 @@ def main() -> None:
         ("fig6", lambda: fig6_projection.run(quick=quick)),
         ("fig7", lambda: fig7_begin.run(quick=quick)),
         ("kernels", lambda: kernels_micro.run(quick=quick)),
+        ("graphbuild", lambda: graph_build.run(quick=quick)),
         ("roofline", lambda: roofline.run(mesh="single") + roofline.run(mesh="multi")),
     ]
     print("name,us_per_call,derived")

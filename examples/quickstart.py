@@ -14,9 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import os
+import tempfile
+
 from repro.core import (SearchConfig, brute_force_topk, build_engine,
                         mlp_measure, recall, search_measure)
-from repro.graph import build_l2_graph
+from repro.graph import build_l2_graph, load_index, save_index
 
 
 def main():
@@ -58,6 +61,24 @@ def main():
                      entries)
     print(f"engine  recall@10={recall(res.ids, true_ids):.3f} "
           f"(stages: pop/grad/rank/measure/insert)")
+
+    # 6. build once, serve many times: persist the index (graph/io.py —
+    #    arrays.npz + meta.json) and search the reloaded copy. At scale this
+    #    is `python -m repro.launch.build_index` + `serve.py --index`.
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "index")
+        save_index(path, graph)
+        graph2 = load_index(path)
+        cfg = SearchConfig(k=10, ef=64, mode="guitar", budget=8, alpha=1.01)
+        res2 = search_measure(measure, jnp.asarray(graph2.base),
+                              jnp.asarray(graph2.neighbors),
+                              jnp.asarray(queries),
+                              jnp.full((16,), graph2.entry, jnp.int32), cfg)
+        same = bool((np.asarray(res2.ids) == np.asarray(res.ids)).all()) \
+            if res2.ids.shape == res.ids.shape else False
+        print(f"saved+reloaded index: recall@10="
+              f"{recall(res2.ids, true_ids):.3f} "
+              f"(results identical to in-memory graph: {same})")
 
 
 if __name__ == "__main__":

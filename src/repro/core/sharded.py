@@ -41,7 +41,8 @@ class ShardedIndex:
 
 
 def build_sharded_index(base: np.ndarray, n_shards: int, m: int = 24,
-                        k_construction: int = 64, seed: int = 0) -> ShardedIndex:
+                        k_construction: int = 64, seed: int = 0,
+                        impl: str = "blocked") -> ShardedIndex:
     rng = np.random.default_rng(seed)
     n = base.shape[0]
     perm = rng.permutation(n)
@@ -49,10 +50,17 @@ def build_sharded_index(base: np.ndarray, n_shards: int, m: int = 24,
     bases, nbrs, entries, gids = [], [], [], []
     for s in range(n_shards):
         ids = perm[s * per: (s + 1) * per]
-        if ids.size < per:  # pad by repeating row 0 of the shard
-            ids = np.concatenate([ids, np.repeat(ids[:1], per - ids.size)])
+        pad = per - ids.size
+        if pad:  # pad vectors by repeating row 0 of the shard...
+            ids = np.concatenate([ids, np.repeat(ids[:1], pad)])
         sub = base[ids]
-        g = build_l2_graph(sub, m=m, k_construction=k_construction, seed=seed + s)
+        if pad:  # ...but padded rows get global id -1, never row 0's id —
+            # otherwise the all-gather merge can return the same corpus id
+            # twice (one real, one padding alias), inflating recall
+            ids = ids.copy()
+            ids[per - pad:] = -1
+        g = build_l2_graph(sub, m=m, k_construction=k_construction,
+                           seed=seed + s, impl=impl)
         bases.append(g.base)
         nbrs.append(g.neighbors)
         entries.append(g.entry)
@@ -64,6 +72,23 @@ def build_sharded_index(base: np.ndarray, n_shards: int, m: int = 24,
         base=np.stack(bases), neighbors=np.stack(nbrs),
         entries=np.array(entries, np.int32), global_ids=np.stack(gids),
         n_shards=n_shards)
+
+
+def merge_topk(all_ids: jax.Array, all_scores: jax.Array, k: int
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Merge per-shard top-k: (Q, S, k) ids/scores -> (Q, k).
+
+    Invalid candidates (id < 0: pool padding or partition-padding rows) are
+    scored -inf so they can never displace a real result; slots that still
+    hold -inf after the merge report id -1. Real ids appear at most once
+    across shards (partitions are disjoint), so the output is duplicate-free.
+    """
+    Q = all_ids.shape[0]
+    flat_i = all_ids.reshape(Q, -1)
+    flat_s = jnp.where(flat_i < 0, -jnp.inf, all_scores.reshape(Q, -1))
+    v, ix = jax.lax.top_k(flat_s, k)
+    ids = jnp.take_along_axis(flat_i, ix, axis=1)
+    return jnp.where(jnp.isfinite(v), ids, -1), v
 
 
 def make_sharded_search(score_fn, mesh: Mesh, cfg: SearchConfig,
@@ -87,11 +112,7 @@ def make_sharded_search(score_fn, mesh: Mesh, cfg: SearchConfig,
         # gather candidates from all corpus shards, merge top-k
         all_ids = jax.lax.all_gather(local_ids, axis, axis=1)     # (Q, S, k)
         all_scores = jax.lax.all_gather(res.scores, axis, axis=1)
-        Q = queries.shape[0]
-        flat_s = all_scores.reshape(Q, -1)
-        flat_i = all_ids.reshape(Q, -1)
-        v, ix = jax.lax.top_k(flat_s, cfg.k)
-        return jnp.take_along_axis(flat_i, ix, axis=1), v
+        return merge_topk(all_ids, all_scores, cfg.k)
 
     def specs_like(tree):
         return jax.tree_util.tree_map(lambda _: P(), tree)

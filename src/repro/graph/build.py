@@ -6,15 +6,23 @@ point is that indexing stays cheap while *search* uses the neural measure.
 Pipeline: kNN candidates (blocked exact for small N, NN-descent for large N)
 → occlusion pruning (the HNSW/NSG diversification heuristic) → symmetrize →
 padded int32 neighbor table (N, M) with -1 padding.
+
+All three stages run as blocked vectorized kernels (``graph/prune.py``,
+DESIGN.md §5); the seed's per-node Python implementations are retained as
+``occlusion_prune_ref`` / ``symmetrize_ref`` — the parity oracles for tests
+and the baseline for ``benchmarks/graph_build.py``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.graph.prune import occlusion_prune, symmetrize  # noqa: F401
 
 
 @dataclasses.dataclass
@@ -70,49 +78,101 @@ def brute_force_knn(base: np.ndarray, k: int, block: int = 2048,
     return out
 
 
+# ---------------------------------------------------------------------------
+# NN-descent (Dong et al.) — vectorized
+# ---------------------------------------------------------------------------
+
+def _reverse_sample(fwd: np.ndarray, n: int, sample: int,
+                    rng: np.random.Generator) -> np.ndarray:
+    """Up to ``sample`` reverse neighbors per node, chosen uniformly among a
+    node's in-edges: permute the edge list, stable counting sort by
+    destination, keep each destination's first ``sample`` arrivals.
+    Returns (n, sample) int32, -1 padded."""
+    src = np.repeat(np.arange(n, dtype=np.int32), fwd.shape[1])
+    dst = fwd.reshape(-1)
+    perm = rng.permutation(src.size)
+    src, dst = src[perm], dst[perm]
+    order = np.argsort(dst, kind="stable")
+    src, dst = src[order], dst[order]
+    counts = np.bincount(dst, minlength=n)
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.arange(dst.size) - offsets[dst]
+    keep = pos < sample
+    out = np.full((n, sample), -1, np.int32)
+    out[dst[keep], pos[keep]] = src[keep]
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _join_block(base: jax.Array, rows: jax.Array, nbrs: jax.Array,
+                dists: jax.Array, cand: jax.Array, k: int):
+    """One NN-descent join/update over a node block: score the candidate
+    pool against the block's points, merge with the current k-NN lists, keep
+    the k closest unique ids. (Nb, k+C) working set, no per-node sets."""
+    x = base[rows]                                        # (Nb, D)
+    cvec = base[jnp.maximum(cand, 0)]                     # (Nb, C, D)
+    diff = cvec - x[:, None, :]
+    cd = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+    cd = jnp.where((cand < 0) | (cand == rows[:, None]), jnp.inf, cd)
+    ids = jnp.concatenate([nbrs, cand], axis=1)           # (Nb, k+C)
+    d = jnp.concatenate([dists, cd], axis=1)
+    # dedup by id: stable sort by id, repeats after the first go to +inf —
+    # the current neighbor entry (listed first) survives candidate repeats
+    order = jnp.argsort(ids, axis=1)
+    sid = jnp.take_along_axis(ids, order, axis=1)
+    rep = jnp.concatenate(
+        [jnp.zeros_like(sid[:, :1], bool),
+         (sid[:, 1:] == sid[:, :-1]) & (sid[:, 1:] >= 0)], axis=1)
+    inv = jnp.argsort(order, axis=1)
+    d = jnp.where(jnp.take_along_axis(rep, inv, axis=1), jnp.inf, d)
+    negd, sel = jax.lax.top_k(-d, k)
+    return (jnp.take_along_axis(ids, sel, axis=1).astype(jnp.int32), -negd)
+
+
 def nn_descent(base: np.ndarray, k: int, n_iters: int = 8,
-               sample: int = 10, seed: int = 0) -> np.ndarray:
-    """NN-descent (Dong et al.) approximate kNN for large N — numpy host-side.
-    Good enough for index construction; exactness is not required (the graph
-    only needs to be navigable)."""
+               sample: int = 10, seed: int = 0, block: int = 2048
+               ) -> np.ndarray:
+    """NN-descent approximate kNN for large N. Per iteration: numpy-batched
+    reverse-edge sampling builds each node's candidate pool (neighbors of its
+    sampled forward+reverse neighbors), then a jitted join/update merges the
+    pool into the k-NN lists in node blocks. Exactness is not required — the
+    graph only needs to be navigable."""
     rng = np.random.default_rng(seed)
     n = base.shape[0]
-    # init with random neighbors
+    rows = np.arange(n, dtype=np.int32)[:, None]
     nbrs = rng.integers(0, n, size=(n, k)).astype(np.int32)
-    for i in range(n):
-        while True:
-            bad = nbrs[i] == i
-            if not bad.any():
-                break
-            nbrs[i][bad] = rng.integers(0, n, size=bad.sum())
-    d = np.linalg.norm(base[:, None, :] - base[nbrs], axis=2) if n * k * base.shape[1] < 5e7 \
-        else _row_dists(base, nbrs)
+    while True:                         # re-roll self references
+        bad = nbrs == rows
+        if not bad.any():
+            break
+        nbrs[bad] = rng.integers(0, n, size=int(bad.sum()))
+    d = _row_dists(base, nbrs)
 
+    base_j = jnp.asarray(base, jnp.float32)
     for _ in range(n_iters):
-        improved = 0
-        # sample candidate pairs through common neighbors (forward + reverse)
-        rev = [[] for _ in range(n)]
-        for i in range(n):
-            for j in nbrs[i][:sample]:
-                rev[j].append(i)
-        for i in range(n):
-            cand = set()
-            pool = list(nbrs[i][:sample]) + rev[i][:sample]
-            for j in pool:
-                cand.update(nbrs[j][:sample])
-                cand.update(rev[j][:sample])
-            cand.discard(i)
-            cand = np.fromiter((c for c in cand if c not in set(nbrs[i])),
-                               np.int32, -1) if cand else np.empty(0, np.int32)
-            if cand.size == 0:
-                continue
-            cd = np.linalg.norm(base[cand] - base[i], axis=1)
-            all_ids = np.concatenate([nbrs[i], cand])
-            all_d = np.concatenate([d[i], cd])
-            order = np.argsort(all_d)[:k]
-            newn = all_ids[order]
-            improved += int((newn != nbrs[i]).sum())
-            nbrs[i], d[i] = newn.astype(np.int32), all_d[order]
+        fwd = np.ascontiguousarray(nbrs[:, :sample])      # (n, sf), sf<=s
+        sf = fwd.shape[1]                                 # k may be < sample
+        rev = _reverse_sample(fwd, n, sample, rng)        # (n, s)
+        pool = np.concatenate([fwd, rev], axis=1)         # (n, sf+s)
+        safe = np.maximum(pool, 0)
+        cand = np.concatenate(
+            [fwd[safe].reshape(n, -1), rev[safe].reshape(n, -1)], axis=1)
+        # pool padding propagates: a -1 pool slot contributes no candidates
+        # (fwd rows contribute sf candidates per pool slot, rev rows sample)
+        bad = pool < 0
+        cand[np.concatenate([np.repeat(bad, sf, axis=1),
+                             np.repeat(bad, sample, axis=1)], axis=1)] = -1
+
+        new_nbrs = np.empty_like(nbrs)
+        new_d = np.empty_like(d)
+        for s in range(0, n, block):
+            e = min(s + block, n)
+            ni, nd = _join_block(base_j, jnp.asarray(rows[s:e, 0]),
+                                 jnp.asarray(nbrs[s:e]), jnp.asarray(d[s:e]),
+                                 jnp.asarray(cand[s:e]), k)
+            new_nbrs[s:e], new_d[s:e] = np.asarray(ni), np.asarray(nd)
+        improved = int((new_nbrs != nbrs).sum())
+        nbrs, d = new_nbrs, new_d
         if improved < max(1, n // 1000):
             break
     return nbrs
@@ -126,7 +186,14 @@ def _row_dists(base: np.ndarray, nbrs: np.ndarray) -> np.ndarray:
     return out
 
 
-def occlusion_prune(base: np.ndarray, knn: np.ndarray, m: int) -> np.ndarray:
+# ---------------------------------------------------------------------------
+# Python references (the seed implementations) — parity oracles for the
+# blocked kernels in graph/prune.py and the benchmarks/graph_build.py
+# baseline. Keep these loop-exact: tests compare against them directly.
+# ---------------------------------------------------------------------------
+
+def occlusion_prune_ref(base: np.ndarray, knn: np.ndarray, m: int
+                        ) -> np.ndarray:
     """HNSW 'select neighbors heuristic': keep candidate c only if it is
     closer to the node than to every already-kept neighbor (diversification).
     Returns (N, m) int32, -1 padded."""
@@ -162,7 +229,7 @@ def occlusion_prune(base: np.ndarray, knn: np.ndarray, m: int) -> np.ndarray:
     return out
 
 
-def symmetrize(neighbors: np.ndarray, m_max: int) -> np.ndarray:
+def symmetrize_ref(neighbors: np.ndarray, m_max: int) -> np.ndarray:
     """Add reverse edges up to m_max per node (improves navigability)."""
     n, m = neighbors.shape
     adj = [list(row[row >= 0]) for row in neighbors]
@@ -178,8 +245,14 @@ def symmetrize(neighbors: np.ndarray, m_max: int) -> np.ndarray:
 
 
 def build_l2_graph(base: np.ndarray, m: int = 24, k_construction: int = 100,
-                   exact_threshold: int = 60_000, seed: int = 0) -> GraphIndex:
-    """SL2G index build: ℓ2 kNN → occlusion prune to M → symmetrize to 2M."""
+                   exact_threshold: int = 60_000, seed: int = 0,
+                   impl: str = "blocked") -> GraphIndex:
+    """SL2G index build: ℓ2 kNN → occlusion prune to M → symmetrize to 2M.
+
+    ``impl``: 'blocked' (jitted kernels) | 'ref' (seed Python loops, kept
+    for parity tests and as the benchmark baseline)."""
+    if impl not in ("blocked", "ref"):
+        raise ValueError(f"unknown impl {impl!r}")
     base = np.asarray(base, np.float32)
     n = base.shape[0]
     kc = min(k_construction, n - 1)
@@ -187,6 +260,12 @@ def build_l2_graph(base: np.ndarray, m: int = 24, k_construction: int = 100,
         knn = brute_force_knn(base, kc)
     else:
         knn = nn_descent(base, kc, seed=seed)
-    pruned = occlusion_prune(base, knn, m)
-    sym = symmetrize(pruned, 2 * m)
-    return GraphIndex(neighbors=sym, entry=medoid(base), base=base)
+    if impl == "blocked":
+        # both kNN front-ends emit duplicate-free rows (exact top-k; the
+        # NN-descent join dedups before its top-k)
+        pruned = occlusion_prune(base, knn, m, assume_unique=True)
+        nbrs = symmetrize(pruned, 2 * m)
+    else:
+        pruned = occlusion_prune_ref(base, knn, m)
+        nbrs = symmetrize_ref(pruned, 2 * m)
+    return GraphIndex(neighbors=nbrs, entry=medoid(base), base=base)

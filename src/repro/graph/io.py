@@ -1,0 +1,87 @@
+"""Index serialization: build once, serve/benchmark/test many times.
+
+An index directory holds two files:
+
+- ``arrays.npz``  — the numeric payload (compressed npz);
+- ``meta.json``   — versioned metadata: ``format_version``, ``kind``
+  (``graph`` | ``sharded``), scalar fields (entry points, shard count) and
+  summary stats. The JSON is the human-readable half — ops can inspect an
+  index without loading arrays.
+
+``save_index`` / ``load_index`` round-trip ``GraphIndex`` and
+``ShardedIndex`` exactly (tests pin array equality). Loading rejects
+unknown kinds and format versions newer than this reader — bump
+``FORMAT_VERSION`` and keep a reader branch when the layout changes.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Union
+
+import numpy as np
+
+from repro.graph.build import GraphIndex
+
+FORMAT_VERSION = 1
+_ARRAYS = "arrays.npz"
+_META = "meta.json"
+
+
+def save_index(path: str, index) -> str:
+    """Write a GraphIndex or ShardedIndex under directory ``path``.
+    Returns the path to the meta file."""
+    from repro.core.sharded import ShardedIndex  # local: avoid import cycle
+
+    os.makedirs(path, exist_ok=True)
+    if isinstance(index, GraphIndex):
+        kind = "graph"
+        arrays = {"neighbors": index.neighbors, "base": index.base}
+        meta = {"entry": int(index.entry), "n": int(index.n),
+                "dim": int(index.base.shape[1]),
+                "max_degree": int(index.max_degree),
+                "avg_degree": float(index.avg_degree)}
+    elif isinstance(index, ShardedIndex):
+        kind = "sharded"
+        arrays = {"base": index.base, "neighbors": index.neighbors,
+                  "entries": index.entries, "global_ids": index.global_ids}
+        meta = {"n_shards": int(index.n_shards),
+                "rows_per_shard": int(index.base.shape[1]),
+                "dim": int(index.base.shape[2]),
+                "n": int((index.global_ids >= 0).sum())}
+    else:
+        raise TypeError(f"cannot serialize {type(index).__name__}")
+
+    np.savez_compressed(os.path.join(path, _ARRAYS), **arrays)
+    meta = {"format_version": FORMAT_VERSION, "kind": kind, **meta}
+    meta_path = os.path.join(path, _META)
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+    return meta_path
+
+
+def load_index(path: str) -> Union[GraphIndex, "ShardedIndex"]:
+    """Load an index directory written by ``save_index``."""
+    from repro.core.sharded import ShardedIndex  # local: avoid import cycle
+
+    with open(os.path.join(path, _META)) as f:
+        meta = json.load(f)
+    version = meta.get("format_version")
+    if not isinstance(version, int) or version < 1 \
+            or version > FORMAT_VERSION:
+        raise ValueError(
+            f"index at {path!r} has format_version={version!r}; this reader "
+            f"supports 1..{FORMAT_VERSION}")
+    with np.load(os.path.join(path, _ARRAYS)) as z:
+        arrays = {k: z[k] for k in z.files}
+    kind = meta.get("kind")
+    if kind == "graph":
+        return GraphIndex(neighbors=arrays["neighbors"],
+                          entry=int(meta["entry"]), base=arrays["base"])
+    if kind == "sharded":
+        return ShardedIndex(base=arrays["base"],
+                            neighbors=arrays["neighbors"],
+                            entries=arrays["entries"],
+                            global_ids=arrays["global_ids"],
+                            n_shards=int(meta["n_shards"]))
+    raise ValueError(f"index at {path!r} has unknown kind {kind!r}")

@@ -1,0 +1,224 @@
+"""Blocked, jit-compiled construction kernels (DESIGN.md §5).
+
+The seed built the SL2G index with per-node Python loops: occlusion pruning
+was an O(N·kc·m) triple loop with one `np.linalg.norm` allocation per pair,
+and symmetrization grew Python lists edge by edge. Search got batch-major in
+PR 1; this module does the same to *construction*:
+
+- ``occlusion_prune`` — nodes are processed in jitted ``(Nb, kc)`` blocks.
+  The sequential keep-set recurrence of the HNSW select-neighbors heuristic
+  runs as a ``lax.scan`` over distance-ranked candidates: candidate *j* is
+  kept iff no already-kept candidate occludes it
+  (``d(c_j, kept) < d(c_j, node)``) and fewer than ``m`` are kept. The scan
+  carries a compact ``(Nb, m, D)`` kept-vector buffer — since at most ``m``
+  candidates are ever kept, occlusion distances cost ``O(kc·m·D)`` per node
+  instead of the ``O(kc²·D)`` full candidate–candidate matrix, and nothing
+  ``(Nb, kc, kc)``-shaped is materialized. Backfill to degree ``m`` with the
+  nearest non-kept candidates is a single key sort. The Python reference
+  survives as ``build.occlusion_prune_ref``; parity is pinned by tests and
+  the recall gate in ``benchmarks/graph_build.py``.
+
+- ``symmetrize`` — reverse-edge insertion as a vectorized counting sort:
+  flatten all edges, drop reverse edges already present in the forward
+  table, stable-sort survivors by destination, and scatter each into its
+  destination's first free slots. Bit-identical to the list-of-lists
+  reference (``build.symmetrize_ref``) — same edge visit order (stable sort
+  by destination preserves source order), same capacity rule.
+
+Everything is shape-static per (block, kc, m), so each block shape compiles
+exactly once per build configuration.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# candidates advanced per scan step; the D-dimensional work for a chunk is
+# two batched Gram contractions costing O(kc·(m + chunk)·D) per node in
+# total, so smaller chunks do less within-chunk pairwise work while bigger
+# chunks mean fewer-but-larger ops
+_CHUNK = 20
+
+
+@functools.partial(jax.jit, static_argnames=("m", "assume_unique"))
+def _prune_block(base: jax.Array, node_ids: jax.Array, cand: jax.Array,
+                 m: int, assume_unique: bool = False) -> jax.Array:
+    """base (N, D) f32; node_ids (Nb,); cand (Nb, kc) -> (Nb, m) i32 -1 pad.
+
+    Distances are squared ℓ2 — the heuristic only compares, never reads,
+    distance values.
+    """
+    nb, kc = cand.shape
+    safe = jnp.maximum(cand, 0)
+    x = base[node_ids]                                    # (Nb, D)
+    cvec = base[safe]                                     # (Nb, kc, D)
+    diff = cvec - x[:, None, :]
+    cd2 = jnp.sum(diff * diff, axis=-1)                   # (Nb, kc)
+    invalid = (cand < 0) | (cand == node_ids[:, None])
+
+    # rank candidates by distance-to-node (invalid last); stable sort keeps
+    # the reference's tie order
+    order = jnp.argsort(jnp.where(invalid, jnp.inf, cd2), axis=1)
+    cd2_s = jnp.take_along_axis(cd2, order, axis=1)
+    ids_s = jnp.take_along_axis(cand, order, axis=1)
+    valid_s = ~jnp.take_along_axis(invalid, order, axis=1)
+    cvec_s = jnp.take_along_axis(cvec, order[..., None], axis=1)
+
+    # duplicate candidate ids: keep only the first (closest) occurrence.
+    # One (Nb, kc, kc) boolean compare — cheaper on CPU than the argsort-
+    # based alternative (XLA sorts dominate this kernel's profile). Skipped
+    # when the caller guarantees duplicate-free rows (both kNN front-ends).
+    if not assume_unique:
+        same = ids_s[:, :, None] == ids_s[:, None, :]
+        earlier = (jnp.arange(kc)[None, :] < jnp.arange(kc)[:, None])[None]
+        dup = jnp.any(same & earlier & valid_s[:, None, :], axis=2)
+        valid_s = valid_s & ~dup
+
+    # keep-set recurrence: carry a compact (Nb, m, D) buffer of kept vectors
+    # — occlusion tests run against at most m keepers, never all kc. The
+    # scan moves CHUNKS of candidates: all D-dimensional distance work
+    # (chunk-vs-buffer and within-chunk, Gram form) happens in per-chunk
+    # batched contractions; the strictly sequential part degenerates to an
+    # unrolled loop of (Nb, chunk)-sized boolean updates.
+    D = base.shape[1]
+    chunk = min(_CHUNK, kc)
+    kc_p = -(-kc // chunk) * chunk
+    if kc_p != kc:  # pad with never-kept candidates to a whole chunk count
+        padc = kc_p - kc
+        cvec_s = jnp.pad(cvec_s, ((0, 0), (0, padc), (0, 0)))
+        cd2_s = jnp.pad(cd2_s, ((0, 0), (0, padc)))
+        valid_s = jnp.pad(valid_s, ((0, 0), (0, padc)))
+    rows = jnp.arange(nb)
+
+    def step(carry, xs):
+        kept_vecs, kept_mask, cnt = carry   # (Nb, m, D), (Nb, m), (Nb,)
+        V, cd2_c, valid_c = xs              # (Nb, c, D), (Nb, c), (Nb, c)
+        vsq = jnp.sum(V * V, axis=-1)
+        ksq = jnp.sum(kept_vecs * kept_vecs, axis=-1)
+        dk2 = (vsq[:, :, None] + ksq[:, None, :]
+               - 2.0 * jnp.einsum("ncd,nmd->ncm", V, kept_vecs))
+        occ_buf = jnp.any(
+            kept_mask[:, None, :] & (dk2 < cd2_c[:, :, None]), axis=2)
+        wc2 = (vsq[:, :, None] + vsq[:, None, :]
+               - 2.0 * jnp.einsum("nad,nbd->nab", V, V))
+        occ_in = wc2 < cd2_c[:, :, None]    # (Nb, c[j], c[l])
+        keep = jnp.zeros((nb, chunk), bool)
+        cnt_run = cnt
+        for jj in range(chunk):             # boolean-only, unrolled
+            occl = occ_buf[:, jj] | jnp.any(keep & occ_in[:, jj], axis=1)
+            keep_jj = valid_c[:, jj] & ~occl & (cnt_run < m)
+            keep = keep.at[:, jj].set(keep_jj)
+            cnt_run = cnt_run + keep_jj
+        # append kept chunk members: slots are distinct and < m for kept
+        # entries; non-kept entries add zeros into a clamped slot
+        slots = jnp.minimum(cnt[:, None] + jnp.cumsum(keep, axis=1) - keep,
+                            m - 1)
+        kept_vecs = kept_vecs.at[rows[:, None], slots].add(
+            jnp.where(keep[:, :, None], V, 0.0))
+        kept_mask = kept_mask.at[rows[:, None], slots].max(keep)
+        return (kept_vecs, kept_mask, cnt_run), keep
+
+    init = (jnp.zeros((nb, m, D), base.dtype),
+            jnp.zeros((nb, m), bool), jnp.zeros((nb,), jnp.int32))
+    xs = (jnp.moveaxis(cvec_s.reshape(nb, kc_p // chunk, chunk, D), 1, 0),
+          jnp.moveaxis(cd2_s.reshape(nb, -1, chunk), 1, 0),
+          jnp.moveaxis(valid_s.reshape(nb, -1, chunk), 1, 0))
+    _, keep_chunks = jax.lax.scan(step, init, xs)
+    kept = jnp.moveaxis(keep_chunks, 0, 1).reshape(nb, kc_p)[:, :kc]
+    valid_s = valid_s[:, :kc]
+
+    # selection order = kept (by distance) then backfill (by distance),
+    # invalid last — exactly the reference's keep-then-backfill output
+    pos = jnp.arange(kc)[None, :]
+    key = jnp.where(kept, pos, kc + pos)
+    key = jnp.where(valid_s, key, 3 * kc + pos)
+    sel = jnp.argsort(key, axis=1)[:, : min(m, kc)]
+    out = jnp.take_along_axis(ids_s, sel, axis=1)
+    out_ok = jnp.take_along_axis(valid_s, sel, axis=1)
+    out = jnp.where(out_ok, out, -1).astype(jnp.int32)
+    if kc < m:
+        out = jnp.pad(out, ((0, 0), (0, m - kc)), constant_values=-1)
+    return out
+
+
+def occlusion_prune(base: np.ndarray, knn: np.ndarray, m: int,
+                    block: int = 4096,
+                    assume_unique: bool = False) -> np.ndarray:
+    """Blocked occlusion pruning: (N, kc) candidates -> (N, m) int32 -1 pad.
+
+    Same keep-then-backfill semantics as ``occlusion_prune_ref`` (the seed's
+    per-node Python loop), executed as jitted node blocks. Large blocks
+    amortize dispatch overhead; the cap keeps the block's (Nb, kc, D)
+    candidate-vector gather inside a few hundred MB (an explicit smaller
+    ``block`` is always respected). ``assume_unique`` skips duplicate-id
+    masking — pass it when each knn row is known duplicate-free (true for
+    both kNN front-ends in ``build_l2_graph``).
+    """
+    n, kc = knn.shape
+    block = min(block, max(64, int(2e8 / (kc * base.shape[1]))))
+    base_j = jnp.asarray(base, jnp.float32)
+    knn = np.ascontiguousarray(knn, np.int32)
+    out = np.empty((n, m), np.int32)
+    for s in range(0, n, block):
+        e = min(s + block, n)
+        ids = np.arange(s, e, dtype=np.int32)
+        cand = knn[s:e]
+        if e - s < block:           # pad the tail block to the jitted shape
+            pad = block - (e - s)
+            ids = np.concatenate([ids, np.zeros(pad, np.int32)])
+            cand = np.concatenate(
+                [cand, np.full((pad, kc), -1, np.int32)])
+        res = _prune_block(base_j, jnp.asarray(ids), jnp.asarray(cand), m,
+                           assume_unique)
+        out[s:e] = np.asarray(res)[: e - s]
+    return out
+
+
+def symmetrize(neighbors: np.ndarray, m_max: int) -> np.ndarray:
+    """Add reverse edges up to ``m_max`` per node — counting-sort form.
+
+    Bit-identical to ``symmetrize_ref``: reverse edges are visited in
+    (source, slot) order there; a stable sort by destination preserves that
+    order within each destination, and the capacity rule (first
+    ``m_max - deg`` arrivals win) becomes a position-in-group threshold.
+    """
+    n, m = neighbors.shape
+    out = np.full((n, m_max), -1, np.int32)
+    # compact each row's valid entries into its prefix (rows from the pruner
+    # are already prefix-packed; general inputs may not be)
+    packed = np.argsort(neighbors < 0, axis=1, kind="stable")
+    fwd = np.take_along_axis(neighbors, packed, axis=1)
+    keep_m = min(m, m_max)
+    out[:, :keep_m] = fwd[:, :keep_m]
+    deg = np.minimum((neighbors >= 0).sum(1), m_max).astype(np.int64)
+
+    src = np.repeat(np.arange(n, dtype=np.int32), m)
+    dst = neighbors.reshape(-1)
+    ok = dst >= 0
+    src, dst = src[ok], dst[ok]
+    # drop reverse edges whose source is already a forward neighbor of dst,
+    # and repeated (src, dst) pairs (rows with duplicate ids) — the reference
+    # rejects both via its evolving membership lists. The membership gather
+    # is chunked over the edge list: (n·m, m) in one shot is multi-GB at
+    # million-node scale
+    present = np.empty(dst.size, bool)
+    estep = max(1, 4_000_000 // max(m, 1))
+    for s0 in range(0, dst.size, estep):
+        e0 = min(s0 + estep, dst.size)
+        present[s0:e0] = (neighbors[dst[s0:e0]]
+                          == src[s0:e0, None]).any(axis=1)
+    src, dst = src[~present], dst[~present]
+    _, first = np.unique(src.astype(np.int64) * n + dst, return_index=True)
+    first = np.sort(first)
+    src, dst = src[first], dst[first]
+    order = np.argsort(dst, kind="stable")
+    src, dst = src[order], dst[order]
+    counts = np.bincount(dst, minlength=n)
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot = deg[dst] + (np.arange(dst.size) - offsets[dst])
+    fits = slot < m_max
+    out[dst[fits], slot[fits]] = src[fits]
+    return out

@@ -1,0 +1,67 @@
+"""Index-build launcher: construct a GUITAR/SL2G index once, persist it with
+``repro.graph.io``, and reuse it from ``serve.py``, benchmarks, and tests —
+construction and serving are separate jobs at scale.
+
+    # single-partition index over a saved (N, D) .npy corpus
+    PYTHONPATH=src python -m repro.launch.build_index \
+        --base corpus.npy --m 24 --out runs/index
+
+    # corpus-sharded index (4 partitions) over a synthetic corpus
+    PYTHONPATH=src python -m repro.launch.build_index \
+        --items 20000 --dim 32 --shards 4 --out runs/sharded-index
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.sharded import build_sharded_index
+from repro.graph import build_l2_graph, save_index
+
+
+def main(argv: Optional[Sequence[str]] = None) -> str:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--base", type=str, default=None,
+                    help="path to an (N, D) .npy corpus; synthetic if unset")
+    ap.add_argument("--items", type=int, default=10000)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--m", type=int, default=24)
+    ap.add_argument("--k-construction", type=int, default=64)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="0 = single partition, else corpus-sharded build")
+    ap.add_argument("--impl", choices=["blocked", "ref"], default="blocked")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=str, required=True,
+                    help="output index directory")
+    args = ap.parse_args(argv)
+
+    if args.base:
+        base = np.load(args.base).astype(np.float32)
+    else:
+        rng = np.random.default_rng(args.seed)
+        base = rng.normal(size=(args.items, args.dim)).astype(np.float32)
+
+    t0 = time.perf_counter()
+    if args.shards > 0:
+        index = build_sharded_index(base, n_shards=args.shards, m=args.m,
+                                    k_construction=args.k_construction,
+                                    seed=args.seed, impl=args.impl)
+        desc = (f"{args.shards} shards x {index.base.shape[1]} rows, "
+                f"max degree {index.neighbors.shape[2]}")
+    else:
+        index = build_l2_graph(base, m=args.m,
+                               k_construction=args.k_construction,
+                               seed=args.seed, impl=args.impl)
+        desc = f"{index.n} nodes, avg degree {index.avg_degree:.1f}"
+    dt = time.perf_counter() - t0
+    meta_path = save_index(args.out, index)
+    print(f"[build_index] {base.shape[0]} items dim={base.shape[1]}: {desc}, "
+          f"built in {dt:.1f}s -> {args.out}")
+    return meta_path
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,9 @@
 """Serving launcher: stand up a GUITAR ranking service (measure + index) and
 run batched queries against it. ``--mode`` selects the pruning strategy,
 ``--searcher`` the execution path (staged expansion engine vs the legacy
-lane-major searcher).
+lane-major searcher). ``--index`` serves a prebuilt index directory
+(``python -m repro.launch.build_index``) instead of building in-process;
+``--save-index`` persists an in-process build for reuse.
 
     PYTHONPATH=src python -m repro.launch.serve --items 10000 --queries 128
 """
@@ -16,7 +18,7 @@ import numpy as np
 
 from repro.core import (SearchConfig, brute_force_topk, mlp_measure, recall,
                         search_legacy, search_measure)
-from repro.graph import build_l2_graph
+from repro.graph import GraphIndex, build_l2_graph, load_index, save_index
 
 
 def main() -> None:
@@ -32,16 +34,35 @@ def main() -> None:
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--alpha", type=float, default=1.01)
     ap.add_argument("--budget", type=int, default=8)
+    ap.add_argument("--index", type=str, default=None,
+                    help="serve a prebuilt index directory (graph/io.py)")
+    ap.add_argument("--save-index", type=str, default=None,
+                    help="persist the built index to this directory")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
-    base = rng.normal(size=(args.items, args.dim)).astype(np.float32)
+    if args.index:
+        graph = load_index(args.index)
+        if not isinstance(graph, GraphIndex):
+            raise SystemExit(f"--index {args.index} is not a single-partition "
+                             "graph index (serve a ShardedIndex via "
+                             "core.sharded / launch.dryrun)")
+        base = graph.base
+        args.items, args.dim = base.shape
+        print(f"[serve] index: loaded {args.index} ({graph.n} items, "
+              f"degree {graph.avg_degree:.1f})")
+    else:
+        base = rng.normal(size=(args.items, args.dim)).astype(np.float32)
+        t0 = time.time()
+        graph = build_l2_graph(base, m=16, k_construction=48)
+        print(f"[serve] index: {args.items} items, "
+              f"degree {graph.avg_degree:.1f}, "
+              f"built in {time.time() - t0:.1f}s")
+    if args.save_index:
+        save_index(args.save_index, graph)
+        print(f"[serve] index saved -> {args.save_index}")
     measure = mlp_measure(jax.random.PRNGKey(0), args.dim, args.dim,
                           hidden=(64, 64))
-    t0 = time.time()
-    graph = build_l2_graph(base, m=16, k_construction=48)
-    print(f"[serve] index: {args.items} items, degree {graph.avg_degree:.1f}, "
-          f"built in {time.time() - t0:.1f}s")
 
     cfg = SearchConfig(k=args.k, ef=args.ef, mode=args.mode,
                        budget=args.budget, alpha=args.alpha)

@@ -66,16 +66,22 @@ from repro.core import SearchConfig, mlp_measure, brute_force_topk, recall
 from repro.core.sharded import build_sharded_index, sharded_search_host
 
 rng = np.random.default_rng(0)
-base = rng.normal(size=(1024, 12)).astype(np.float32)
+# 1030 % 4 != 0 -> partitions are padded; padded rows alias shard row 0's
+# vector but must never alias its global id in the merged top-k
+base = rng.normal(size=(1030, 12)).astype(np.float32)
 queries = rng.normal(size=(8, 12)).astype(np.float32)
 measure = mlp_measure(jax.random.PRNGKey(2), 12, 12, hidden=(32,))
 true_ids, _ = brute_force_topk(measure, jnp.asarray(base), jnp.asarray(queries), 5)
 idx = build_sharded_index(base, n_shards=4, m=8, k_construction=24)
+assert (idx.global_ids < 0).sum() == 4 * 258 - 1030
 cfg = SearchConfig(k=5, ef=32, mode="guitar", budget=6, alpha=1.1)
 ids, scores = sharded_search_host(measure, idx, queries, cfg, mesh)
+for row in np.asarray(ids):
+    real = row[row >= 0]
+    assert len(set(real.tolist())) == real.size, f"duplicate ids in {row}"
 r = recall(jnp.asarray(ids), true_ids)
 assert r > 0.6, f"sharded search recall {r}"
-print("sharded search OK recall", r)
+print("sharded search OK recall", r, "duplicate-free")
 
 # ---- 4. gradient compression across pod axis (simulated) ------------------
 from repro.train import compress

@@ -1,0 +1,95 @@
+"""Index serialization round-trips + the build_index launcher."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.sharded import ShardedIndex, build_sharded_index
+from repro.graph import build_l2_graph, load_index, save_index
+from repro.graph.io import FORMAT_VERSION
+from repro.launch import build_index as build_index_cli
+
+
+def _graph(rng, n=300, dim=8):
+    base = rng.normal(size=(n, dim)).astype(np.float32)
+    return build_l2_graph(base, m=8, k_construction=20)
+
+
+def test_graph_index_round_trip(rng, tmp_path):
+    g = _graph(rng)
+    save_index(str(tmp_path / "idx"), g)
+    g2 = load_index(str(tmp_path / "idx"))
+    assert np.array_equal(g.neighbors, g2.neighbors)
+    assert np.array_equal(g.base, g2.base)
+    assert g.entry == g2.entry
+    assert g2.base.dtype == np.float32 and g2.neighbors.dtype == np.int32
+
+
+def test_sharded_index_round_trip(rng, tmp_path):
+    base = rng.normal(size=(515, 12)).astype(np.float32)  # 515 % 4 != 0
+    idx = build_sharded_index(base, n_shards=4, m=8, k_construction=24)
+    save_index(str(tmp_path / "sh"), idx)
+    idx2 = load_index(str(tmp_path / "sh"))
+    assert isinstance(idx2, ShardedIndex)
+    for f in ("base", "neighbors", "entries", "global_ids"):
+        assert np.array_equal(getattr(idx, f), getattr(idx2, f)), f
+    assert idx2.n_shards == 4
+
+
+def test_meta_json_is_inspectable(rng, tmp_path):
+    g = _graph(rng)
+    save_index(str(tmp_path / "idx"), g)
+    with open(tmp_path / "idx" / "meta.json") as f:
+        meta = json.load(f)
+    assert meta["format_version"] == FORMAT_VERSION
+    assert meta["kind"] == "graph"
+    assert meta["n"] == g.n and meta["max_degree"] == g.max_degree
+
+
+def test_load_rejects_future_version_and_unknown_kind(rng, tmp_path):
+    g = _graph(rng, n=120)
+    path = tmp_path / "idx"
+    save_index(str(path), g)
+    meta = json.load(open(path / "meta.json"))
+    json.dump({**meta, "format_version": FORMAT_VERSION + 1},
+              open(path / "meta.json", "w"))
+    with pytest.raises(ValueError, match="format_version"):
+        load_index(str(path))
+    json.dump({**meta, "kind": "mystery"}, open(path / "meta.json", "w"))
+    with pytest.raises(ValueError, match="unknown kind"):
+        load_index(str(path))
+
+
+def test_save_rejects_unknown_types(tmp_path):
+    with pytest.raises(TypeError):
+        save_index(str(tmp_path / "bad"), {"not": "an index"})
+
+
+def test_build_index_cli_single_and_sharded(tmp_path):
+    out = str(tmp_path / "cli-idx")
+    build_index_cli.main(["--items", "400", "--dim", "8", "--m", "8",
+                          "--k-construction", "20", "--out", out])
+    g = load_index(out)
+    assert g.n == 400 and g.avg_degree > 4
+
+    out2 = str(tmp_path / "cli-sharded")
+    build_index_cli.main(["--items", "410", "--dim", "8", "--m", "8",
+                          "--k-construction", "20", "--shards", "4",
+                          "--out", out2])
+    idx = load_index(str(out2))
+    assert isinstance(idx, ShardedIndex)
+    gids = idx.global_ids
+    assert (gids < 0).sum() > 0          # 410 % 4 != 0 -> padded rows
+    real = gids[gids >= 0]
+    assert len(np.unique(real)) == real.size == 410
+
+
+def test_build_index_cli_from_npy(tmp_path, rng):
+    corpus = rng.normal(size=(350, 8)).astype(np.float32)
+    npy = str(tmp_path / "corpus.npy")
+    np.save(npy, corpus)
+    out = str(tmp_path / "npy-idx")
+    build_index_cli.main(["--base", npy, "--m", "8", "--k-construction", "20",
+                          "--out", out])
+    g = load_index(out)
+    assert np.array_equal(g.base, corpus)
