@@ -201,3 +201,31 @@ def speedup_at_recall(pts_a: List[SweepPoint], pts_b: List[SweepPoint],
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.2f},{derived}"
+
+
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "int8": 1}
+
+
+def expansion_bytes_model(Q: int, B: int, C: int, D: int,
+                          corpus_dtype: str = "float32",
+                          fused: bool = False) -> int:
+    """Corpus-side HBM bytes moved per expansion step (DESIGN.md §8).
+
+    Pre-gathered path: the engine reads Q·B corpus rows, STAGES them as a
+    fp32 (Q, B, D) block (one HBM write + one read-back by the rank kernel),
+    then stages the selected (Q·C, D) fp32 candidate block for the measure
+    kernel the same way. Index-fused path: each kernel reads its rows once,
+    straight from the resident corpus, in residency width — no staged
+    intermediates. int8 adds 4 bytes/row of scale traffic.
+    """
+    s = _DTYPE_BYTES[corpus_dtype]
+    scale = 4 if corpus_dtype == "int8" else 0
+    if fused:
+        rank_bytes = Q * B * (D * s + scale)
+        measure_bytes = Q * C * (D * s + scale)
+        return rank_bytes + measure_bytes
+    # corpus read (residency width) + fp32 staging write+read, twice over
+    gather = Q * B * (D * s + scale)
+    stage_rank = 2 * Q * B * D * 4
+    stage_measure = 2 * Q * C * D * 4
+    return gather + stage_rank + stage_measure

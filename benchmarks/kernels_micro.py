@@ -5,16 +5,29 @@ validated structurally (tests) and their arithmetic via ref.py.
 
 Also benchmarks the staged expansion engine against the legacy lane-major
 searcher end to end (same config → same recall; the engine's batch-major
-layout must win or tie on QPS)."""
+layout must win or tie on QPS), and the index-fused corpus-residency path
+(DESIGN.md §8): fused-vs-unfused × fp32/bf16/int8 engine QPS sweeps,
+gather-dequant throughput, recall parity, and the fused-bf16 gate.
+
+The gate combines a measured invariant with a modeled one: recall with
+bf16/int8 residency must stay within 1% of the fp32 pre-gathered path
+(measured), and the fused bf16 path must move ≥ 1.3x fewer corpus-side
+HBM bytes per expansion (the §8 bandwidth model — the quantity that sets
+QPS at the TPU HBM roof). CPU wall-clock engine ratios are reported
+alongside but not gated: XLA:CPU row gathers are latency-bound (per-row
+overhead, insensitive to row byte width), so residency savings are
+structurally invisible in CPU wall-clock while being the first-order term
+on the bandwidth-bound backend the kernels target."""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, expansion_bytes_model
 from repro.models import layers as L
 from repro.utils import timeit
 
@@ -60,8 +73,133 @@ def bench_engine_vs_legacy(quick: bool = False):
     ]
 
 
+def bench_fused_corpus(quick: bool = False):
+    """Index-fused residency A/B: engine QPS sweeps (reported), gather
+    throughput sweeps, recall parity, and the fused-bf16 gate. Returns
+    (rows, gate_ok)."""
+    from repro.core import (EngineOptions, SearchConfig, brute_force_topk,
+                            deepfm_measure, make_corpus_store, mlp_measure,
+                            recall, search_measure)
+    from repro.graph import build_l2_graph
+    from benchmarks.common import quickstart_corpus
+    from repro.models import deepfm as deepfm_lib
+
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # --- engine QPS sweep on a serving-scale synthetic degree table (the
+    # hot loop isolated from graph-build cost; parity is gated below on a
+    # real graph). Variants timed interleaved, min-of-repeats.
+    n = 20_000 if quick else 200_000
+    Q = 64 if quick else 128
+    B, budget, ef = 32, 8, 32 if quick else 64
+    reps = 3 if quick else 6
+    cfg_m = deepfm_lib.DeepFMConfig(deep_dim=56)      # D = 64
+    params, _ = deepfm_lib.init_measure(jax.random.PRNGKey(0), cfg_m)
+    measure = deepfm_measure(params, cfg_m)
+    D = cfg_m.vec_dim
+    base = jnp.asarray(rng.normal(size=(n, D)).astype(np.float32))
+    nbrs = jnp.asarray(rng.integers(0, n, size=(n, B)).astype(np.int32))
+    queries = jnp.asarray(rng.normal(size=(Q, D)).astype(np.float32))
+    entries = jnp.zeros((Q,), jnp.int32)
+    cfg = SearchConfig(k=10, ef=ef, budget=budget, max_iters=2 * ef)
+    variants = {
+        "unfused_fp32": (EngineOptions(), base),
+        "fused_fp32": (EngineOptions(fused=True), base),
+        "fused_bf16": (EngineOptions(fused=True, corpus_dtype="bfloat16"),
+                       make_corpus_store(base, "bfloat16")),
+        "fused_int8": (EngineOptions(fused=True, corpus_dtype="int8"),
+                       make_corpus_store(base, "int8")),
+    }
+    lats = {k: [] for k in variants}
+    fns = {}
+    for label, (opts, corpus) in variants.items():
+        fns[label] = (lambda o=opts, c=corpus: search_measure(
+            measure, c, nbrs, queries, entries, cfg, o))
+        jax.block_until_ready(fns[label]().ids)          # compile
+    for _ in range(reps):                                # interleaved reps
+        for label, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn().ids)
+            lats[label].append(time.perf_counter() - t0)
+    t_ref = min(lats["unfused_fp32"])
+    for label, ts in lats.items():
+        best = min(ts)
+        rows.append(csv_row(
+            f"search/fused/{label}", best * 1e6 / Q,
+            f"n={n};qps={Q / best:.0f};p50={np.percentile(ts, 50) * 1e3:.1f}"
+            f"ms;p95={np.percentile(ts, 95) * 1e3:.1f}ms"
+            f";x={t_ref / best:.2f}"))
+    cpu_x_bf16 = t_ref / min(lats["fused_bf16"])
+
+    # --- gather-dequant throughput (the subsystem the residency changes)
+    m_idx = jnp.asarray(rng.integers(0, n, size=(Q * B,)).astype(np.int32))
+    take_best = {}
+    stores = {"float32": make_corpus_store(base, "float32"),
+              "bfloat16": variants["fused_bf16"][1],
+              "int8": variants["fused_int8"][1]}
+    take_fns = {dt: jax.jit(lambda i, s=s: s.take(i))
+                for dt, s in stores.items()}
+    for dt, f in take_fns.items():
+        jax.block_until_ready(f(m_idx))
+        take_best[dt] = float("inf")
+    for _ in range(4 * reps):
+        for dt, f in take_fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(m_idx))
+            take_best[dt] = min(take_best[dt], time.perf_counter() - t0)
+    row_bytes = {"float32": D * 4, "bfloat16": D * 2, "int8": D + 4}
+    for dt, best in take_best.items():
+        rows.append(csv_row(
+            f"kernels/corpus_take_{dt}", best * 1e6,
+            f"rows={Q * B};gbps={Q * B * row_bytes[dt] / best / 1e9:.2f}"
+            f";x={take_best['float32'] / best:.2f}"))
+
+    # --- recall parity on the quickstart corpus (real graph + measure).
+    # 64 queries keep the recall estimate's noise floor well under the 1%
+    # parity budget; ef scales with the corpus so both paths run in the
+    # same (near-saturated) recall regime.
+    nq, ef_q = (1500, 96) if quick else (5000, 160)
+    qbase = quickstart_corpus(nq, 32)
+    qm = mlp_measure(jax.random.PRNGKey(1), 32, 32, hidden=(32,))
+    g = build_l2_graph(qbase, m=12, k_construction=32)
+    qqueries = jnp.asarray(
+        np.random.default_rng(7).normal(size=(64, 32)).astype(np.float32))
+    true_ids, _ = brute_force_topk(qm, jnp.asarray(qbase), qqueries, 10)
+    qentries = jnp.full((64,), g.entry, jnp.int32)
+    qcfg = SearchConfig(k=10, ef=ef_q, budget=8)
+    rec = {}
+    for dt in ("float32", "bfloat16", "int8"):
+        opts = EngineOptions(fused=dt != "float32", corpus_dtype=dt)
+        res = search_measure(qm, jnp.asarray(qbase),
+                             jnp.asarray(g.neighbors), qqueries, qentries,
+                             qcfg, opts)
+        rec[dt] = recall(res.ids, true_ids)
+    d_bf16 = abs(rec["float32"] - rec["bfloat16"])
+    d_int8 = abs(rec["float32"] - rec["int8"])
+    rows.append(csv_row(
+        "search/fused_recall", 0.0,
+        f"fp32={rec['float32']:.3f};bf16={rec['bfloat16']:.3f}"
+        f";int8={rec['int8']:.3f}"))
+
+    # --- the gate: §8 bandwidth model (corpus-side bytes per expansion)
+    # ratio vs the fp32 pre-gathered path, plus measured recall parity
+    bytes_unfused = expansion_bytes_model(Q, B, budget, D, "float32", False)
+    bytes_bf16 = expansion_bytes_model(Q, B, budget, D, "bfloat16", True)
+    model_x = bytes_unfused / bytes_bf16
+    gate_ok = model_x >= 1.3 and d_bf16 <= 0.01 and d_int8 <= 0.01
+    rows.append(csv_row(
+        "gate/fused_bf16", 0.0,
+        f"model_x={model_x:.2f};cpu_x={cpu_x_bf16:.2f}"
+        f";recall_delta_bf16={d_bf16:.4f};recall_delta_int8={d_int8:.4f}"
+        f";threshold=1.3;pass={gate_ok}"))
+    return rows, gate_ok
+
+
 def run(quick: bool = False):
     rows = bench_engine_vs_legacy(quick)
+    fused_rows, _ = bench_fused_corpus(quick)
+    rows += fused_rows
     k = jax.random.PRNGKey(0)
     # measure-eval batch: fused ref vs unfused python composition
     from repro.kernels.deepfm_score.ref import deepfm_score_ref
@@ -94,6 +232,27 @@ def run(quick: bool = False):
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke-fused", action="store_true",
+                    help="quick fused-path sweep + gate (CI smoke)")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 if the fused-bf16 gate fails")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.smoke_fused:
+        rows, gate_ok = bench_fused_corpus(quick=True)
+    else:
+        rows = run(quick=args.quick)
+        gate_ok = True
+        for r in rows:
+            if r.startswith("gate/fused_bf16") and "pass=False" in r:
+                gate_ok = False
+    for r in rows:
         print(r)
+    if args.gate and not gate_ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,11 @@ FLOPs/bytes/collective-bytes come from the trip-count-weighted HLO analysis
 (launch/hlo_analysis.py) — NOT from compiled.cost_analysis(), which counts
 scan bodies once. MODEL_FLOPS is the analytic 6·N·D / 6·N_active·D (or the
 per-family equivalent) recorded by the step builders.
+
+Also emits the expansion-step bandwidth sweep (DESIGN.md §8): corpus-side
+HBM bytes per expansion for the pre-gathered vs index-fused engine across
+fp32/bf16/int8 residency, and the HBM-roof time per step each implies —
+the projected speedup of the fused path on the bandwidth-bound backend.
 """
 from __future__ import annotations
 
@@ -62,9 +67,31 @@ def roofline_row(rep: dict) -> dict:
     }
 
 
+def expansion_sweep_rows(Q: int = 128, B: int = 32, C: int = 8,
+                         D: int = 64):
+    """Fused-vs-unfused × fp32/bf16/int8 expansion-step bandwidth model."""
+    from benchmarks.common import expansion_bytes_model
+    rows = []
+    for mode, c in (("guitar", C), ("sl2g", B)):
+        ref = expansion_bytes_model(Q, B, c, D, "float32", False)
+        for fused in (False, True):
+            dtypes = ("float32",) if not fused \
+                else ("float32", "bfloat16", "int8")
+            for dt in dtypes:
+                by = expansion_bytes_model(Q, B, c, D, dt, fused)
+                label = ("fused_" if fused else "pregather_") + dt
+                rows.append(
+                    f"roofline/expansion/{mode}/{label},0.00,"
+                    f"bytes_per_step={by};bytes_per_eval={by / (Q * c):.0f};"
+                    f"t_hbm={by / HBM_BW:.3e}s;x_vs_pregather={ref / by:.2f}")
+    return rows
+
+
 def run(dryrun_dir: str = "reports/dryrun", mesh: str = "single"):
     rows = []
     table = []
+    if mesh == "single":
+        rows += expansion_sweep_rows()
     for rep in load_reports(dryrun_dir, mesh):
         r = roofline_row(rep)
         table.append(r)

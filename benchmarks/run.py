@@ -1,19 +1,80 @@
 """Benchmark orchestrator — one module per paper table/figure + roofline.
 
-Prints ``name,us_per_call,derived`` CSV rows (spec format). Default runs the
-quick profile (single dataset, reduced ef grid) so `python -m benchmarks.run`
-finishes on the single-core container; --full sweeps everything.
+Prints ``name,us_per_call,derived`` CSV rows (spec format) and writes a
+machine-readable ``BENCH_<suite>.json`` per suite at the repo root so the
+perf trajectory (QPS, recall, p50/p95, kernel throughput, gate status) is
+tracked across PRs — CI uploads them as workflow artifacts. Default runs
+the quick profile (single dataset, reduced ef grid) so
+`python -m benchmarks.run` finishes on the single-core container; --full
+sweeps everything.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+import time
 import traceback
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _parse_derived(derived: str) -> dict:
+    """'k=v;k=v' pairs -> dict with floats where they parse (units like
+    'ms'/'s' stripped); non k=v fragments are kept under 'notes'."""
+    out, notes = {}, []
+    for frag in derived.split(";"):
+        if "=" not in frag:
+            if frag:
+                notes.append(frag)
+            continue
+        k, v = frag.split("=", 1)
+        raw = v
+        for unit in ("ms", "us", "s"):
+            if v.endswith(unit) and v[: -len(unit)].replace(
+                    ".", "").replace("-", "").replace("e", "").isdigit():
+                v = v[: -len(unit)]
+                break
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = raw
+    if notes:
+        out["notes"] = ";".join(notes)
+    return out
+
+
+def _parse_row(row: str) -> dict:
+    name, us, derived = row.split(",", 2)
+    try:
+        us_f = float(us)
+    except ValueError:
+        us_f = None
+    return {"name": name, "us_per_call": us_f,
+            "derived": _parse_derived(derived), "raw": row}
+
+
+def write_suite_json(suite: str, rows, ok: bool, quick: bool,
+                     root: str = REPO_ROOT) -> str:
+    path = os.path.join(root, f"BENCH_{suite}.json")
+    payload = {
+        "suite": suite,
+        "ok": ok,
+        "quick": quick,
+        "unix_time": int(time.time()),
+        "rows": [_parse_row(r) for r in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_<suite>.json files")
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,table2,fig6,fig7,roofline,"
                          "kernels,graphbuild")
@@ -42,13 +103,19 @@ def main() -> None:
     for name, fn in jobs:
         if only and name not in only:
             continue
+        ok = True
         try:
-            for row in fn():
+            rows = list(fn())
+            for row in rows:
                 print(row, flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
-            print(f"{name},0.00,ERROR={e!r}", flush=True)
+            ok = False
+            rows = [f"{name},0.00,ERROR={e!r}"]
+            print(rows[0], flush=True)
             traceback.print_exc(file=sys.stderr)
+        if not args.no_json:
+            write_suite_json(name, rows, ok, quick)
     if failures:
         raise SystemExit(1)
 

@@ -1,5 +1,9 @@
 """GUITAR core: measures, graph searchers (SL2G / GUITAR / BEGIN), and the
 corpus-sharded distributed search."""
+from repro.core.corpus import (  # noqa: F401
+    CorpusStore, as_corpus_store, dequantize_rows_int8, make_corpus_store,
+    quantize_rows_int8,
+)
 from repro.core.measures import (  # noqa: F401
     Measure, deepfm_measure, deepfm_numpy_fns, inner_product_measure,
     l2_measure, mlp_measure,

@@ -1,0 +1,172 @@
+"""Quantized corpus residency for the expansion engine (DESIGN.md §8).
+
+The expansion step is bandwidth-bound: every iteration gathers (Q, B, D)
+neighbor rows for ranking and (Q·C, D) candidate rows for the measure — at
+fp32 that traffic dominates search cost long before the MXU saturates (the
+paper's whole premise is that measure evaluation is the bottleneck; at scale
+the *bytes behind it* are). ``CorpusStore`` holds the corpus resident in
+``float32``, ``bfloat16``, or per-row-scaled ``int8`` (the SPANN/DiskANN
+trick for billion-scale residency) and centralizes the dequantize-on-gather
+contract used by the index-fused kernels and the engine's ref fallbacks.
+
+The store is a registered pytree, so it crosses ``jit`` / ``shard_map``
+boundaries as an ordinary argument; the dtype tag is static aux data, so
+engines specialize per residency format.
+
+Quantization layout (int8): ``q8[i] = round(x[i] / scale[i])`` with
+``scale[i] = max|x[i]| / 127`` per row — reconstruction error is bounded by
+``scale/2 = max|x_i| / 254`` per element (pinned by tests). Row scales keep
+the format local: a single hot row with a large dynamic range cannot degrade
+the whole corpus.
+
+bfloat16 payloads are held as their **uint16 bit patterns**: XLA:CPU's
+native bf16 gather scalarizes (measured *slower* than the fp32 gather it
+was meant to halve), while a u16 gather + integer widen + shift + bitcast
+is a pure-SIMD pipeline ~2.3x faster than the fp32 gather. On TPU the
+kernels bitcast u16→bf16 in VMEM for free, so one storage format serves
+both backends.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+CORPUS_DTYPES = ("float32", "bfloat16", "int8")
+
+_EPS = 1e-8
+
+
+def quantize_rows_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8 quantization over the last axis.
+
+    x: (..., D) float -> (q8 (..., D) int8, scales (..., 1) float32)."""
+    x = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scales = jnp.maximum(amax, _EPS) / 127.0
+    q8 = jnp.clip(jnp.round(x / scales), -127, 127).astype(jnp.int8)
+    return q8, scales.astype(jnp.float32)
+
+
+def dequantize_rows_int8(q8: jax.Array, scales: jax.Array) -> jax.Array:
+    """Inverse of ``quantize_rows_int8`` (up to rounding error)."""
+    return q8.astype(jnp.float32) * scales
+
+
+def bf16_bits_to_f32(bits: jax.Array) -> jax.Array:
+    """uint16 bf16 bit patterns -> float32 (widen, shift, bitcast — exact,
+    and all-integer so it vectorizes on every backend)."""
+    return lax.bitcast_convert_type(bits.astype(jnp.uint32) << 16,
+                                    jnp.float32)
+
+
+def f32_to_bf16_bits(x: jax.Array) -> jax.Array:
+    """float32 -> uint16 bf16 bit patterns (round via the bf16 cast)."""
+    return lax.bitcast_convert_type(jnp.asarray(x).astype(jnp.bfloat16),
+                                    jnp.uint16)
+
+
+class CorpusStore:
+    """Dtype-tagged resident corpus: (N, D) payload + optional row scales.
+
+    ``data`` is float32, uint16 bf16 bit patterns, or int8; ``scales`` is
+    (N, 1) float32 for int8 (None otherwise). ``take(ids)`` gathers +
+    dequantizes to float32 rows for any integer ids shape — the reference
+    gather used everywhere the Pallas index-fused kernels don't run.
+    """
+
+    def __init__(self, data: jax.Array, scales: Optional[jax.Array],
+                 dtype: str):
+        if dtype not in CORPUS_DTYPES:
+            raise ValueError(f"corpus_dtype must be one of {CORPUS_DTYPES}, "
+                             f"got {dtype!r}")
+        self.data = data
+        self.scales = scales
+        self.dtype = dtype
+
+    @property
+    def n(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.data.shape[-1]
+
+    def take(self, ids: jax.Array) -> jax.Array:
+        """Gather rows by id (any ids shape) -> (..., D) float32."""
+        rows = jnp.take(self.data, ids, axis=0)
+        if self.dtype == "bfloat16":
+            return bf16_bits_to_f32(rows)
+        if self.dtype == "int8":
+            return rows.astype(jnp.float32) * jnp.take(self.scales, ids,
+                                                       axis=0)
+        return rows.astype(jnp.float32)
+
+    def take_raw(self, ids: jax.Array) -> jax.Array:
+        """Gather rows in residency format (no dequant) — bf16/int8 gathers
+        move half / a quarter of the fp32 bytes."""
+        return jnp.take(self.data, ids, axis=0)
+
+    def dequantize(self) -> jax.Array:
+        """The full (N, D) float32 corpus (materializes!)."""
+        if self.dtype == "bfloat16":
+            return bf16_bits_to_f32(self.data)
+        if self.dtype == "int8":
+            return dequantize_rows_int8(self.data, self.scales)
+        return self.data.astype(jnp.float32)
+
+    def nbytes(self) -> int:
+        """Resident payload bytes (data + scales)."""
+        total = self.data.size * self.data.dtype.itemsize
+        if self.scales is not None:
+            total += self.scales.size * self.scales.dtype.itemsize
+        return int(total)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"CorpusStore(n={self.data.shape[0]}, dim={self.dim}, "
+                f"dtype={self.dtype})")
+
+
+def _store_flatten(s: CorpusStore):
+    return (s.data, s.scales), s.dtype
+
+
+def _store_unflatten(dtype, children):
+    data, scales = children
+    return CorpusStore(data, scales, dtype)
+
+
+jax.tree_util.register_pytree_node(CorpusStore, _store_flatten,
+                                   _store_unflatten)
+
+
+def make_corpus_store(base: jax.Array, corpus_dtype: str = "float32"
+                      ) -> CorpusStore:
+    """Quantize/cast an (N, D) float corpus into residency format."""
+    base = jnp.asarray(base)
+    if corpus_dtype == "float32":
+        data = base.astype(jnp.float32)
+        scales = None
+    elif corpus_dtype == "bfloat16":
+        data = f32_to_bf16_bits(base)
+        scales = None
+    elif corpus_dtype == "int8":
+        data, scales = quantize_rows_int8(base)
+    else:
+        raise ValueError(f"corpus_dtype must be one of {CORPUS_DTYPES}, "
+                         f"got {corpus_dtype!r}")
+    return CorpusStore(data, scales, corpus_dtype)
+
+
+def as_corpus_store(base: Union[jax.Array, CorpusStore],
+                    corpus_dtype: str = "float32") -> CorpusStore:
+    """Coerce an array or an existing store to residency format. A store
+    already in the requested dtype passes through untouched (the serving
+    path quantizes once, up front)."""
+    if isinstance(base, CorpusStore):
+        if base.dtype != corpus_dtype:
+            return make_corpus_store(base.dequantize(), corpus_dtype)
+        return base
+    return make_corpus_store(base, corpus_dtype)

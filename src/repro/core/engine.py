@@ -26,6 +26,15 @@ Two execution paths share the exact same stage code:
 - ``ExpansionEngine.search_debug`` eager host loop, one Python call per
   iteration — stages are observable (call-counting doubles, tracing).
 
+Index-fused corpus residency (DESIGN.md §8): with ``EngineOptions(fused=
+True)`` the rank and measure stages take ``(store, idx)`` instead of
+pre-gathered vectors — the row gather happens inside the Pallas kernels
+(scalar-prefetch indexing) or fuses into the jnp ref — so the (Q, B, D)
+neighbor block and the flattened (Q·C, D) candidate block never hit HBM.
+``EngineOptions(corpus_dtype=...)`` holds the corpus resident in fp32,
+bf16, or per-row-scaled int8 (dequantize-on-gather); the fp32 fused path
+is bit-identical to the pre-gathered stages (tests pin it).
+
 Counter semantics match the legacy searcher: ``n_eval`` counts *effective*
 (α-mask-surviving) measure evaluations, ``n_grad`` gradient computations,
 ``n_iters`` expansions — the paper's Table-2 accounting
@@ -40,9 +49,12 @@ from typing import Any, Callable, NamedTuple, Optional, Protocol, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.corpus import CorpusStore, as_corpus_store
 from repro.kernels.deepfm_score import deepfm_score
+from repro.kernels.deepfm_score_fused import deepfm_score_fused
 from repro.kernels.neighbor_rank import neighbor_rank
 from repro.kernels.neighbor_rank.ref import neighbor_rank_ref
+from repro.kernels.neighbor_rank_fused import neighbor_rank_fused
 
 
 # ---------------------------------------------------------------------------
@@ -80,11 +92,18 @@ class EngineOptions:
     measure_impl: 'auto' (Pallas DeepFM kernel on TPU, vmap elsewhere)
                   | 'pallas' | 'vmap'
     interpret:    force Pallas interpret mode (None = auto per backend)
+    fused:        index-fused rank/measure stages — gathers happen inside
+                  the kernels (or fuse into the jnp ref); the (Q, B, D) /
+                  (Q·C, D) pre-gathered blocks are never materialized
+    corpus_dtype: 'float32' | 'bfloat16' | 'int8' corpus residency;
+                  non-fp32 dequantizes on gather (see core/corpus.py)
     """
     rank_impl: str = "auto"
     measure_impl: str = "auto"
     interpret: Optional[bool] = None
     block_q: int = 8
+    fused: bool = False
+    corpus_dtype: str = "float32"
 
 
 # ---------------------------------------------------------------------------
@@ -131,11 +150,20 @@ def bit_set_rows(bitmap: jax.Array, ids: jax.Array, mask: jax.Array) -> jax.Arra
 
 
 def _freeze_done(done: jax.Array, new: Any, old: Any) -> Any:
-    """Keep converged lanes' state frozen (lane-granular early exit)."""
+    """Keep converged lanes' state frozen (lane-granular early exit).
+
+    ``visited`` is exempt: a done lane pops with ``active=False``, so every
+    bit update is already masked to a no-op (``bit_set_rows`` adds zero
+    words) — the new bitmap is value-identical to the old one. Skipping the
+    select lets XLA keep the scatter-add in place instead of carrying two
+    (Q, N/32) bitmap buffers (plus a full-bitmap select) through every
+    ``while_loop`` iteration — at N=200k that's ~10 MB/step of pure copy
+    traffic removed from the serving hot loop."""
     def pick(n, o):
         d = done.reshape((-1,) + (1,) * (n.ndim - 1))
         return jnp.where(d, o, n)
-    return jax.tree_util.tree_map(pick, new, old)
+    frozen = jax.tree_util.tree_map(pick, new, old)
+    return frozen._replace(visited=new.visited)
 
 
 # ---------------------------------------------------------------------------
@@ -161,10 +189,27 @@ class RankStage(Protocol):
         (sel_idx (Q,C) i32 slots into B, sel_mask (Q,C) bool)."""
 
 
+class FusedRankStage(Protocol):
+    def __call__(self, x: jax.Array, grad: Optional[jax.Array],
+                 store: CorpusStore, idx: jax.Array, valid: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+        """Index-fused candidate pick: (Q,D), (Q,D)|None, store, (Q,B) ids,
+        (Q,B) -> (sel_idx (Q,C) i32 slots into B, sel_mask (Q,C) bool).
+        The neighbor rows are gathered inside the stage, never by the
+        engine."""
+
+
 class MeasureStage(Protocol):
     def __call__(self, params: Any, vecs: jax.Array, qs: jax.Array
                  ) -> jax.Array:
         """Flattened batch scorer: (M, D), (M, Dq) -> (M,) f32."""
+
+
+class FusedMeasureStage(Protocol):
+    def __call__(self, params: Any, store: CorpusStore, idx: jax.Array,
+                 qs: jax.Array) -> jax.Array:
+        """Index-fused flattened scorer: store, (M,) row ids, (M, Dq) ->
+        (M,) f32. Candidate rows are gathered (and dequantized) inside."""
 
 
 class InsertStage(Protocol):
@@ -198,27 +243,50 @@ def make_grad_stage(score_fn) -> GradStage:
     return stage
 
 
+def _use_pallas(impl: str) -> bool:
+    return impl == "pallas" or (impl == "auto"
+                                and jax.default_backend() == "tpu")
+
+
+def _select_top_c(key, in_range, valid, cfg: SearchConfig):
+    """Static top-C over ranking keys + the adaptive α·θ mask — the part of
+    the rank stage shared by the pre-gathered and index-fused variants."""
+    C = min(cfg.budget, key.shape[1])
+    neg_key = jnp.where(jnp.isfinite(key), -key, -jnp.inf)
+    _, sel_idx = jax.lax.top_k(neg_key, C)
+    base_mask = in_range if cfg.adaptive else valid
+    sel_mask = jnp.take_along_axis(base_mask, sel_idx, axis=1)
+    return sel_idx, sel_mask
+
+
 def make_guitar_rank_stage(cfg: SearchConfig,
                            options: EngineOptions = EngineOptions()
                            ) -> RankStage:
     """Eq. 3 (angle) / Eq. 4 (projection) + static top-C + adaptive α·θ mask.
     Backed by the Pallas ``neighbor_rank`` kernel or its jnp ref."""
     def stage(x, grad, nvecs, valid):
-        use_pallas = options.rank_impl == "pallas" or (
-            options.rank_impl == "auto" and jax.default_backend() == "tpu")
-        if use_pallas:
+        if _use_pallas(options.rank_impl):
             key, in_range = neighbor_rank(
                 x, grad, nvecs, valid, alpha=cfg.alpha, rank_by=cfg.rank_by,
                 block_q=options.block_q, interpret=options.interpret)
         else:
             key, in_range = neighbor_rank_ref(
                 x, grad, nvecs, valid, alpha=cfg.alpha, rank_by=cfg.rank_by)
-        C = min(cfg.budget, nvecs.shape[1])
-        neg_key = jnp.where(jnp.isfinite(key), -key, -jnp.inf)
-        _, sel_idx = jax.lax.top_k(neg_key, C)
-        base_mask = in_range if cfg.adaptive else valid
-        sel_mask = jnp.take_along_axis(base_mask, sel_idx, axis=1)
-        return sel_idx, sel_mask
+        return _select_top_c(key, in_range, valid, cfg)
+    return stage
+
+
+def make_guitar_rank_fused_stage(cfg: SearchConfig,
+                                 options: EngineOptions = EngineOptions()
+                                 ) -> FusedRankStage:
+    """Index-fused Eq. 3/4: ranking keys straight off the resident corpus
+    via the ``neighbor_rank_fused`` kernel (or its gather-fused jnp ref)."""
+    def stage(x, grad, store, idx, valid):
+        key, in_range = neighbor_rank_fused(
+            x, grad, store, idx, valid, alpha=cfg.alpha, rank_by=cfg.rank_by,
+            use_pallas=_use_pallas(options.rank_impl),
+            interpret=options.interpret)
+        return _select_top_c(key, in_range, valid, cfg)
     return stage
 
 
@@ -229,8 +297,26 @@ def select_all_rank_stage(x, grad, nvecs, valid):
     return sel_idx, valid
 
 
+def select_all_rank_fused_stage(x, grad, store, idx, valid):
+    """SL2G, index-fused: no pruning and no gather at all — the measure
+    stage scores every fresh neighbor by id."""
+    Q, B = idx.shape
+    sel_idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None, :], (Q, B))
+    return sel_idx, valid
+
+
 def make_vmap_measure_stage(score_fn) -> MeasureStage:
     def stage(params, vecs, qs):
+        return jax.vmap(
+            lambda x, q: score_fn(params, x, q))(vecs, qs).astype(jnp.float32)
+    return stage
+
+
+def make_vmap_measure_fused_stage(score_fn) -> FusedMeasureStage:
+    """Generic index-fused scorer: the gather-dequant fuses into the vmapped
+    measure under jit — no engine-level candidate block."""
+    def stage(params, store, idx, qs):
+        vecs = store.take(idx)
         return jax.vmap(
             lambda x, q: score_fn(params, x, q))(vecs, qs).astype(jnp.float32)
     return stage
@@ -245,6 +331,20 @@ def make_deepfm_measure_stage(fm_dim: int,
             options.measure_impl == "auto" and jax.default_backend() == "tpu")
         return deepfm_score(vecs, qs, params["mlp"], fm_dim=fm_dim,
                             use_pallas=use_pallas, interpret=options.interpret)
+    return stage
+
+
+def make_deepfm_measure_fused_stage(fm_dim: int,
+                                    options: EngineOptions = EngineOptions()
+                                    ) -> FusedMeasureStage:
+    """Index-fused DeepFM scorer: candidate ids in, scores out — the row
+    gather happens inside the Pallas kernel (or fuses into the jnp ref)."""
+    def stage(params, store, idx, qs):
+        use_pallas = options.measure_impl == "pallas" or (
+            options.measure_impl == "auto" and jax.default_backend() == "tpu")
+        return deepfm_score_fused(store, idx, qs, params["mlp"],
+                                  fm_dim=fm_dim, use_pallas=use_pallas,
+                                  interpret=options.interpret)
     return stage
 
 
@@ -307,6 +407,11 @@ class ExpansionEngine:
     """A staged, batch-major graph searcher. Stages are swappable callables;
     use ``dataclasses.replace(engine, measure=...)`` to instrument or extend.
     ``grad=None`` skips the gradient phase (SL2G and other no-prune modes).
+
+    When ``rank_fused`` / ``measure_fused`` are set (``EngineOptions(fused=
+    True)``) the engine hands those stages ``(store, idx)`` and never
+    materializes the (Q, B, D) neighbor or (Q·C, D) candidate blocks; the
+    corpus is held resident per ``corpus_dtype`` (see core/corpus.py).
     """
     cfg: SearchConfig
     pop: PopStage
@@ -314,6 +419,9 @@ class ExpansionEngine:
     measure: MeasureStage
     insert: InsertStage
     grad: Optional[GradStage] = None
+    rank_fused: Optional[FusedRankStage] = None
+    measure_fused: Optional[FusedMeasureStage] = None
+    corpus_dtype: str = "float32"
 
     # -- candidates per expansion (static; fixes the flattened batch shape)
     def n_candidates(self, max_degree: int) -> int:
@@ -322,13 +430,16 @@ class ExpansionEngine:
         return min(self.cfg.budget, max_degree)
 
     # -- state init: seed pools with the entry points (one measure call)
-    def init_state(self, params, base, neighbors, queries, entries
-                   ) -> EngineState:
+    def init_state(self, params, store: CorpusStore, neighbors, queries,
+                   entries) -> EngineState:
         Q = queries.shape[0]
-        N = base.shape[0]
+        N = store.n
         ef = self.cfg.ef
         nwords = (N + 31) // 32
-        e_scores = self.measure(params, base[entries], queries)      # (Q,)
+        if self.measure_fused is not None:
+            e_scores = self.measure_fused(params, store, entries, queries)
+        else:
+            e_scores = self.measure(params, store.take(entries), queries)
         pool_scores = jnp.full((Q, ef), -jnp.inf).at[:, 0].set(e_scores)
         pool_ids = jnp.full((Q, ef), -1, jnp.int32).at[:, 0].set(entries)
         pool_expanded = jnp.ones((Q, ef), jnp.bool_).at[:, 0].set(False)
@@ -341,18 +452,19 @@ class ExpansionEngine:
 
     # -- one iteration over the whole batch: pop → grad → rank → measure →
     #    insert. qs_flat is the (Q·C, Dq) repeated query block, hoisted out
-    #    of the loop because C is static.
-    def step(self, params, base, neighbors, queries, qs_flat,
+    #    of the loop because C is static. The fused variants hand (store,
+    #    idx) to the stages — neighbor/candidate rows are gathered (and
+    #    dequantized) inside them, never staged by the engine.
+    def step(self, params, store: CorpusStore, neighbors, queries, qs_flat,
              state: EngineState) -> EngineState:
         Q = queries.shape[0]
         s, pop = self.pop(state)
 
-        x = base[pop.fid]                              # (Q, D)
+        x = store.take(pop.fid)                        # (Q, D) f32
         nbr = neighbors[pop.fid]                       # (Q, B)
         nbr_safe = jnp.maximum(nbr, 0)
         valid = (nbr >= 0) & ~bit_test_rows(s.visited, nbr) \
             & pop.active[:, None]
-        nvecs = base[nbr_safe]                         # (Q, B, D)
 
         if self.grad is not None:
             _, g = self.grad(params, x, queries)
@@ -360,13 +472,23 @@ class ExpansionEngine:
         else:
             g, n_grad = None, s.n_grad
 
-        sel_idx, sel_mask = self.rank(x, g, nvecs, valid)     # (Q, C)
+        if self.rank_fused is not None:
+            sel_idx, sel_mask = self.rank_fused(x, g, store, nbr_safe, valid)
+            nvecs = None
+        else:
+            nvecs = store.take(nbr_safe)               # (Q, B, D)
+            sel_idx, sel_mask = self.rank(x, g, nvecs, valid)     # (Q, C)
         sel_ids = jnp.take_along_axis(nbr, sel_idx, axis=1)
-        sel_vecs = jnp.take_along_axis(nvecs, sel_idx[..., None], axis=1)
 
         C = sel_idx.shape[1]
-        flat_scores = self.measure(params, sel_vecs.reshape(Q * C, -1),
-                                   qs_flat)
+        if self.measure_fused is not None:
+            flat_scores = self.measure_fused(
+                params, store,
+                jnp.maximum(sel_ids, 0).reshape(Q * C), qs_flat)
+        else:
+            sel_vecs = jnp.take_along_axis(nvecs, sel_idx[..., None], axis=1)
+            flat_scores = self.measure(params, sel_vecs.reshape(Q * C, -1),
+                                       qs_flat)
         scores = jnp.where(sel_mask, flat_scores.reshape(Q, C), -jnp.inf)
 
         s = s._replace(
@@ -393,7 +515,9 @@ class ExpansionEngine:
     @functools.cached_property
     def _run_jit(self):
         def run(params, base, neighbors, queries, entries):
-            state = self.init_state(params, base, neighbors, queries, entries)
+            store = as_corpus_store(base, self.corpus_dtype)
+            state = self.init_state(params, store, neighbors, queries,
+                                    entries)
             C = self.n_candidates(neighbors.shape[1])
             qs_flat = jnp.repeat(queries, C, axis=0)
 
@@ -401,7 +525,7 @@ class ExpansionEngine:
                 return ~jnp.all(s.done)
 
             def body(s):
-                s2 = self.step(params, base, neighbors, queries, qs_flat, s)
+                s2 = self.step(params, store, neighbors, queries, qs_flat, s)
                 return _freeze_done(s.done, s2, s)
 
             return self._result(jax.lax.while_loop(cond, body, state))
@@ -409,8 +533,11 @@ class ExpansionEngine:
 
     def search(self, params, base, neighbors, queries, entries
                ) -> SearchResult:
-        """base: (N, D); neighbors: (N, B) int32 -1-padded; queries: (Q, Dq);
-        entries: (Q,) int32. Returns SearchResult with (Q, ...) leaves."""
+        """base: (N, D) array or a pre-built ``CorpusStore`` (the serving
+        path quantizes once up front; a raw array is converted — one fused
+        pass — per call); neighbors: (N, B) int32 -1-padded; queries:
+        (Q, Dq); entries: (Q,) int32. Returns SearchResult with (Q, ...)
+        leaves."""
         return self._run_jit(params, base, neighbors, queries, entries)
 
     # -- eager host loop: same stage code, one Python call per iteration.
@@ -421,13 +548,14 @@ class ExpansionEngine:
                      on_step: Optional[Callable[[int, EngineState], None]]
                      = None) -> SearchResult:
         entries = jnp.asarray(entries, jnp.int32)
-        state = self.init_state(params, base, neighbors, queries, entries)
+        store = as_corpus_store(base, self.corpus_dtype)
+        state = self.init_state(params, store, neighbors, queries, entries)
         C = self.n_candidates(neighbors.shape[1])
         qs_flat = jnp.repeat(queries, C, axis=0)
         limit = max_steps if max_steps is not None else self.cfg.iters() + 1
         steps = 0
         while steps < limit and not bool(jnp.all(state.done)):
-            s2 = self.step(params, base, neighbors, queries, qs_flat, state)
+            s2 = self.step(params, store, neighbors, queries, qs_flat, state)
             state = _freeze_done(state.done, s2, state)
             steps += 1
             if on_step is not None:
@@ -441,8 +569,9 @@ class ExpansionEngine:
 
 def _build(score_fn, meta, cfg: SearchConfig,
            options: EngineOptions) -> ExpansionEngine:
-    if meta is not None and len(meta) == 2 and meta[0] == "deepfm" \
-            and options.measure_impl != "vmap":
+    is_deepfm = meta is not None and len(meta) == 2 and meta[0] == "deepfm" \
+        and options.measure_impl != "vmap"
+    if is_deepfm:
         measure_stage = make_deepfm_measure_stage(int(meta[1]), options)
     else:
         measure_stage = make_vmap_measure_stage(score_fn)
@@ -452,9 +581,17 @@ def _build(score_fn, meta, cfg: SearchConfig,
     else:
         grad = None
         rank = select_all_rank_stage
+    rank_fused = measure_fused = None
+    if options.fused:
+        rank_fused = make_guitar_rank_fused_stage(cfg, options) \
+            if cfg.mode == "guitar" else select_all_rank_fused_stage
+        measure_fused = make_deepfm_measure_fused_stage(int(meta[1]), options) \
+            if is_deepfm else make_vmap_measure_fused_stage(score_fn)
     return ExpansionEngine(cfg=cfg, pop=default_pop_stage, rank=rank,
                            measure=measure_stage, insert=default_insert_stage,
-                           grad=grad)
+                           grad=grad, rank_fused=rank_fused,
+                           measure_fused=measure_fused,
+                           corpus_dtype=options.corpus_dtype)
 
 
 @functools.lru_cache(maxsize=128)

@@ -132,9 +132,14 @@ def make_sharded_search(score_fn, mesh: Mesh, cfg: SearchConfig,
 
 def sharded_search_host(measure: Measure, index: ShardedIndex,
                         queries: np.ndarray, cfg: SearchConfig,
-                        mesh: Mesh) -> Tuple[np.ndarray, np.ndarray]:
-    """Host convenience wrapper: place shards, run, fetch."""
-    fn = make_sharded_search(measure.score_fn, mesh, cfg)
+                        mesh: Mesh,
+                        options: EngineOptions = EngineOptions()
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host convenience wrapper: place shards, run, fetch. ``options``
+    passes straight through to the per-shard engine — index-fused stages
+    and bf16/int8 corpus residency apply per partition (each shard
+    quantizes its own rows; row scales keep the format partition-local)."""
+    fn = make_sharded_search(measure.score_fn, mesh, cfg, options)
     args = (measure.params, jnp.asarray(index.base),
             jnp.asarray(index.neighbors), jnp.asarray(index.entries),
             jnp.asarray(index.global_ids), jnp.asarray(queries))

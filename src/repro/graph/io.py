@@ -4,47 +4,92 @@ An index directory holds two files:
 
 - ``arrays.npz``  — the numeric payload (compressed npz);
 - ``meta.json``   — versioned metadata: ``format_version``, ``kind``
-  (``graph`` | ``sharded``), scalar fields (entry points, shard count) and
-  summary stats. The JSON is the human-readable half — ops can inspect an
-  index without loading arrays.
+  (``graph`` | ``sharded``), ``corpus_dtype``, scalar fields (entry points,
+  shard count) and summary stats. The JSON is the human-readable half —
+  ops can inspect an index without loading arrays.
 
 ``save_index`` / ``load_index`` round-trip ``GraphIndex`` and
 ``ShardedIndex`` exactly (tests pin array equality). Loading rejects
 unknown kinds and format versions newer than this reader — bump
 ``FORMAT_VERSION`` and keep a reader branch when the layout changes.
+
+Format v2 adds **quantized corpus residency**: ``save_index(...,
+corpus_dtype=...)`` stores the base vectors as bf16 (``base_bf16``, a
+uint16 bit-pattern view — npz has no native bfloat16) or per-row-scaled
+int8 (``base_q8`` + ``base_scales``, the scales layout of
+``core.corpus.quantize_rows_int8``). ``load_index`` always reconstructs a
+float32 ``base`` (quantization round-trip applied — what you serve is what
+you saved), while ``load_corpus_store`` loads the payload *without*
+dequantizing, handing the engine a bf16/int8-resident ``CorpusStore`` for
+the index-fused search path. v1 files (always fp32) remain readable.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Union
+from typing import Tuple, Union
 
 import numpy as np
 
+from repro.core.corpus import (CORPUS_DTYPES, CorpusStore,
+                               dequantize_rows_int8, make_corpus_store,
+                               quantize_rows_int8)
 from repro.graph.build import GraphIndex
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
 _ARRAYS = "arrays.npz"
 _META = "meta.json"
 
 
-def save_index(path: str, index) -> str:
-    """Write a GraphIndex or ShardedIndex under directory ``path``.
-    Returns the path to the meta file."""
+def _encode_base(base: np.ndarray, corpus_dtype: str) -> dict:
+    """float32 (N|S, ..., D) base -> npz payload arrays per residency."""
+    if corpus_dtype == "float32":
+        return {"base": np.asarray(base, np.float32)}
+    if corpus_dtype == "bfloat16":
+        import ml_dtypes
+        bf = np.asarray(base, np.float32).astype(ml_dtypes.bfloat16)
+        return {"base_bf16": bf.view(np.uint16)}
+    if corpus_dtype == "int8":
+        q8, scales = quantize_rows_int8(base)
+        return {"base_q8": np.asarray(q8), "base_scales": np.asarray(scales)}
+    raise ValueError(f"corpus_dtype must be one of {CORPUS_DTYPES}, "
+                     f"got {corpus_dtype!r}")
+
+
+def _decode_base(arrays: dict, corpus_dtype: str) -> np.ndarray:
+    """npz payload -> float32 base (the quantization round-trip applied)."""
+    if corpus_dtype == "float32":
+        return arrays["base"]
+    if corpus_dtype == "bfloat16":
+        import ml_dtypes
+        return arrays["base_bf16"].view(ml_dtypes.bfloat16).astype(np.float32)
+    if corpus_dtype == "int8":
+        return np.asarray(dequantize_rows_int8(arrays["base_q8"],
+                                               arrays["base_scales"]))
+    raise ValueError(f"index has unknown corpus_dtype {corpus_dtype!r}")
+
+
+def save_index(path: str, index, corpus_dtype: str = "float32") -> str:
+    """Write a GraphIndex or ShardedIndex under directory ``path``, with the
+    base vectors stored in ``corpus_dtype`` residency (fp32 exact; bf16 /
+    per-row int8 quantized — 2x / ~4x smaller payload). Returns the path to
+    the meta file."""
     from repro.core.sharded import ShardedIndex  # local: avoid import cycle
 
     os.makedirs(path, exist_ok=True)
     if isinstance(index, GraphIndex):
         kind = "graph"
-        arrays = {"neighbors": index.neighbors, "base": index.base}
+        arrays = {"neighbors": index.neighbors,
+                  **_encode_base(index.base, corpus_dtype)}
         meta = {"entry": int(index.entry), "n": int(index.n),
                 "dim": int(index.base.shape[1]),
                 "max_degree": int(index.max_degree),
                 "avg_degree": float(index.avg_degree)}
     elif isinstance(index, ShardedIndex):
         kind = "sharded"
-        arrays = {"base": index.base, "neighbors": index.neighbors,
-                  "entries": index.entries, "global_ids": index.global_ids}
+        arrays = {"neighbors": index.neighbors, "entries": index.entries,
+                  "global_ids": index.global_ids,
+                  **_encode_base(index.base, corpus_dtype)}
         meta = {"n_shards": int(index.n_shards),
                 "rows_per_shard": int(index.base.shape[1]),
                 "dim": int(index.base.shape[2]),
@@ -53,17 +98,15 @@ def save_index(path: str, index) -> str:
         raise TypeError(f"cannot serialize {type(index).__name__}")
 
     np.savez_compressed(os.path.join(path, _ARRAYS), **arrays)
-    meta = {"format_version": FORMAT_VERSION, "kind": kind, **meta}
+    meta = {"format_version": FORMAT_VERSION, "kind": kind,
+            "corpus_dtype": corpus_dtype, **meta}
     meta_path = os.path.join(path, _META)
     with open(meta_path, "w") as f:
         json.dump(meta, f, indent=2, sort_keys=True)
     return meta_path
 
 
-def load_index(path: str) -> Union[GraphIndex, "ShardedIndex"]:
-    """Load an index directory written by ``save_index``."""
-    from repro.core.sharded import ShardedIndex  # local: avoid import cycle
-
+def _read(path: str) -> Tuple[dict, dict]:
     with open(os.path.join(path, _META)) as f:
         meta = json.load(f)
     version = meta.get("format_version")
@@ -74,14 +117,51 @@ def load_index(path: str) -> Union[GraphIndex, "ShardedIndex"]:
             f"supports 1..{FORMAT_VERSION}")
     with np.load(os.path.join(path, _ARRAYS)) as z:
         arrays = {k: z[k] for k in z.files}
+    return meta, arrays
+
+
+def load_index(path: str) -> Union[GraphIndex, "ShardedIndex"]:
+    """Load an index directory written by ``save_index``. The returned
+    index always carries a float32 ``base`` (bf16/int8 payloads are
+    dequantized); use ``load_corpus_store`` for quantized residency."""
+    from repro.core.sharded import ShardedIndex  # local: avoid import cycle
+
+    meta, arrays = _read(path)
+    base = _decode_base(arrays, meta.get("corpus_dtype", "float32"))
     kind = meta.get("kind")
     if kind == "graph":
         return GraphIndex(neighbors=arrays["neighbors"],
-                          entry=int(meta["entry"]), base=arrays["base"])
+                          entry=int(meta["entry"]), base=base)
     if kind == "sharded":
-        return ShardedIndex(base=arrays["base"],
+        return ShardedIndex(base=base,
                             neighbors=arrays["neighbors"],
                             entries=arrays["entries"],
                             global_ids=arrays["global_ids"],
                             n_shards=int(meta["n_shards"]))
     raise ValueError(f"index at {path!r} has unknown kind {kind!r}")
+
+
+def load_corpus_store(path: str) -> CorpusStore:
+    """Load a graph index's base vectors as a resident ``CorpusStore`` in
+    the dtype they were saved in — bf16/int8 payloads stay quantized (no
+    fp32 materialization of the corpus; the engine dequantizes on gather)."""
+    meta, arrays = _read(path)
+    if meta.get("kind") != "graph":
+        raise ValueError(
+            f"load_corpus_store supports single-partition graph indexes; "
+            f"index at {path!r} has kind {meta.get('kind')!r} (sharded "
+            f"residency quantizes per partition via EngineOptions)")
+    corpus_dtype = meta.get("corpus_dtype", "float32")
+    import jax.numpy as jnp
+    if corpus_dtype == "float32":
+        return make_corpus_store(arrays["base"], "float32")
+    if corpus_dtype == "bfloat16":
+        # the store's residency format IS the uint16 bit pattern — load
+        # straight through (see core/corpus.py)
+        return CorpusStore(jnp.asarray(arrays["base_bf16"]), None,
+                           "bfloat16")
+    if corpus_dtype == "int8":
+        return CorpusStore(jnp.asarray(arrays["base_q8"]),
+                           jnp.asarray(arrays["base_scales"]), "int8")
+    raise ValueError(f"index at {path!r} has unknown corpus_dtype "
+                     f"{corpus_dtype!r}")

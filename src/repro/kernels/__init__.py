@@ -8,6 +8,12 @@ ops.py (jit'd public wrapper with interpret/fallback switches), ref.py
                  search inner loop — FM dot + 2-layer MLP in one VMEM pass)
   neighbor_rank  fused gradient ranking: diffs, norms, separation angle /
                  projection, adaptive α·θ mask (Eq. 3/4) per frontier
+  deepfm_score_fused / neighbor_rank_fused
+                 index-fused variants: (corpus, idx) in, scores out — the
+                 row gather runs inside the kernel via scalar-prefetch
+                 indexing over the (fp32/bf16/int8) resident corpus, so the
+                 pre-gathered (Q·C, D) / (Q, B, D) blocks never hit HBM
+                 (quant.py holds the shared in-kernel dequant)
   embedding_bag  FBGEMM-TBE-style gather + segment-sum bag lookup (recsys)
   decode_attn    flash-decode GQA attention over a KV cache (LM serving)
   flash_attn     causal flash-attention forward (FA-2 schedule) — the §Perf

@@ -23,10 +23,12 @@ from jax.experimental import pallas as pl
 def _kernel(cand_ref, query_ref, w0_ref, b0_ref, w1_ref, b1_ref, w2_ref,
             b2_ref, out_ref, *, fm_dim: int, deep_dim: int):
     cand = cand_ref[...]                       # (BN, D)
-    query = query_ref[...]                     # (BN, D)
+    query = query_ref[...]                     # (BN, D) or (1, D) shared
     fm = jnp.sum(cand[:, :fm_dim] * query[:, :fm_dim], axis=-1)  # (BN,)
+    q_deep = jnp.broadcast_to(query[:, fm_dim: fm_dim + deep_dim],
+                              (cand.shape[0], deep_dim))  # VMEM-only bcast
     deep_in = jnp.concatenate(
-        [query[:, fm_dim: fm_dim + deep_dim], cand[:, fm_dim: fm_dim + deep_dim]],
+        [q_deep, cand[:, fm_dim: fm_dim + deep_dim]],
         axis=-1)                               # (BN, 2*deep_dim)
     h = jnp.maximum(
         jnp.dot(deep_in, w0_ref[...], preferred_element_type=jnp.float32)
@@ -40,22 +42,25 @@ def _kernel(cand_ref, query_ref, w0_ref, b0_ref, w1_ref, b1_ref, w2_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("fm_dim", "deep_dim", "block_n",
-                                             "interpret"))
+                                             "q_shared", "interpret"))
 def deepfm_score_pallas(cand: jax.Array, query: jax.Array, w0, b0, w1, b1,
                         w2, b2, *, fm_dim: int = 8, deep_dim: int = 32,
-                        block_n: int = 256, interpret: bool = False
-                        ) -> jax.Array:
-    """cand/query: (N, D) with N % block_n == 0 (ops.py pads)."""
+                        block_n: int = 256, q_shared: bool = False,
+                        interpret: bool = False) -> jax.Array:
+    """cand: (N, D) with N % block_n == 0 (ops.py pads); query: (N, D) rows,
+    or (1, D) when ``q_shared`` — the kernel broadcasts the single row over
+    each block in VMEM, so no (N, D) query copy is ever materialized."""
     N, D = cand.shape
     H = w0.shape[1]
     grid = (N // block_n,)
     row_spec = pl.BlockSpec((block_n, D), lambda i: (i, 0))
+    q_spec = pl.BlockSpec((1, D), lambda i: (0, 0)) if q_shared else row_spec
     full = lambda *s: pl.BlockSpec(s, lambda i: tuple(0 for _ in s))
     return pl.pallas_call(
         functools.partial(_kernel, fm_dim=fm_dim, deep_dim=deep_dim),
         grid=grid,
         in_specs=[
-            row_spec, row_spec,
+            row_spec, q_spec,
             full(*w0.shape), full(*b0.shape),
             full(*w1.shape), full(*b1.shape),
             full(*w2.shape), full(*b2.shape),

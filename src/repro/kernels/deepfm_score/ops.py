@@ -15,13 +15,17 @@ def deepfm_score(cand: jax.Array, query: jax.Array, mlp_params: dict,
                  ) -> jax.Array:
     """cand: (N, D) candidates; query: (N, D) or (D,) user vector(s);
     mlp_params: {'w': [w0, w1, w2], 'b': [b0, b1, b2]} (the measure MLP).
-    Returns (N,) float32 scores."""
-    if query.ndim == 1:
-        query = jnp.broadcast_to(query[None, :], cand.shape)
+    Returns (N,) float32 scores.
+
+    A 1-D query stays 1-D through padding: the kernel receives it as a
+    single (1, D) block and broadcasts in VMEM, so the (N_padded, D) query
+    copy the old path materialized before padding is never built."""
     w = [jnp.asarray(x, jnp.float32) for x in mlp_params["w"]]
     b = [jnp.asarray(x, jnp.float32) for x in mlp_params["b"]]
     deep_dim = cand.shape[1] - fm_dim
     if not use_pallas:
+        if query.ndim == 1:
+            query = jnp.broadcast_to(query[None, :], cand.shape)
         return deepfm_score_ref(cand, query, w[0], b[0], w[1], b[1], w[2],
                                 b[2], fm_dim)
     if interpret is None:
@@ -30,10 +34,16 @@ def deepfm_score(cand: jax.Array, query: jax.Array, mlp_params: dict,
     pad = (-N) % block_n
     if pad:
         cand = jnp.pad(cand, ((0, pad), (0, 0)))
-        query = jnp.pad(query, ((0, pad), (0, 0)))
+    q_shared = query.ndim == 1
+    if q_shared:
+        q_arg = query[None, :]
+    elif pad:
+        q_arg = jnp.pad(query, ((0, pad), (0, 0)))
+    else:
+        q_arg = query
     out = deepfm_score_pallas(
-        cand.astype(jnp.float32), query.astype(jnp.float32),
+        cand.astype(jnp.float32), q_arg.astype(jnp.float32),
         w[0], b[0], w[1], b[1], w[2], b[2],
         fm_dim=fm_dim, deep_dim=deep_dim, block_n=block_n,
-        interpret=interpret)
+        q_shared=q_shared, interpret=interpret)
     return out[:N]

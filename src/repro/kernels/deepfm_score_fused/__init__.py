@@ -1,0 +1,1 @@
+from repro.kernels.deepfm_score_fused.ops import deepfm_score_fused  # noqa: F401

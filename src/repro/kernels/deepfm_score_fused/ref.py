@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the index-fused DeepFM scorer: gather rows from the
+resident corpus (dequantizing bf16/int8 on the fly) and defer to the
+pre-gathered DeepFM oracle — bit-exact with it for float32 residency."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.corpus import CorpusStore
+from repro.kernels.deepfm_score.ref import deepfm_score_ref
+
+
+def deepfm_score_fused_ref(store: CorpusStore, idx: jax.Array,
+                           query: jax.Array, w0, b0, w1, b1, w2, b2,
+                           fm_dim: int = 8) -> jax.Array:
+    """store: resident corpus; idx: (M,) int32 row ids (clamped >= 0);
+    query: (M, D) or (D,) user vector(s). Returns (M,) f32 scores."""
+    cand = store.take(idx)                       # (M, D) f32, dequantized
+    if query.ndim == 1:
+        query = jnp.broadcast_to(query[None, :], cand.shape)
+    return deepfm_score_ref(cand, query, w0, b0, w1, b1, w2, b2, fm_dim)

@@ -1,0 +1,1 @@
+from repro.kernels.neighbor_rank_fused.ops import neighbor_rank_fused  # noqa: F401

@@ -1,0 +1,17 @@
+"""Shared in-kernel dequantization for the index-fused kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def load_row_f32(row_ref):
+    """Dequantize one corpus row block to f32 in VMEM. uint16 blocks are
+    bf16 bit patterns (core/corpus.py residency format): widen-shift-bitcast
+    — free on TPU, SIMD-friendly everywhere. int8 callers multiply by the
+    per-row scale afterwards."""
+    row = row_ref[0, :]
+    if row.dtype == jnp.uint16:
+        return jax.lax.bitcast_convert_type(
+            row.astype(jnp.uint32) << 16, jnp.float32)
+    return row.astype(jnp.float32)

@@ -33,6 +33,13 @@ def main(argv: Optional[Sequence[str]] = None) -> str:
     ap.add_argument("--shards", type=int, default=0,
                     help="0 = single partition, else corpus-sharded build")
     ap.add_argument("--impl", choices=["blocked", "ref"], default="blocked")
+    ap.add_argument("--corpus-dtype",
+                    choices=["float32", "bfloat16", "int8"],
+                    default="float32",
+                    help="stored corpus residency: bf16 halves / int8 "
+                         "quarters the vector payload (per-row scales); "
+                         "serve.py loads it straight into the index-fused "
+                         "search path")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", type=str, required=True,
                     help="output index directory")
@@ -57,9 +64,10 @@ def main(argv: Optional[Sequence[str]] = None) -> str:
                                seed=args.seed, impl=args.impl)
         desc = f"{index.n} nodes, avg degree {index.avg_degree:.1f}"
     dt = time.perf_counter() - t0
-    meta_path = save_index(args.out, index)
+    meta_path = save_index(args.out, index, corpus_dtype=args.corpus_dtype)
     print(f"[build_index] {base.shape[0]} items dim={base.shape[1]}: {desc}, "
-          f"built in {dt:.1f}s -> {args.out}")
+          f"built in {dt:.1f}s -> {args.out} "
+          f"(corpus_dtype={args.corpus_dtype})")
     return meta_path
 
 

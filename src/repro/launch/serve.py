@@ -5,6 +5,18 @@ lane-major searcher). ``--index`` serves a prebuilt index directory
 (``python -m repro.launch.build_index``) instead of building in-process;
 ``--save-index`` persists an in-process build for reuse.
 
+Serving-path knobs (DESIGN.md §8):
+
+- ``--corpus-dtype {float32,bfloat16,int8}`` holds the corpus resident in
+  reduced precision (quantized ONCE up front; a quantized ``--index``
+  payload is loaded without ever materializing fp32) and routes search
+  through the index-fused rank/score stages — indices in, scores out, no
+  pre-gathered neighbor blocks. ``--fused`` forces the fused stages at
+  fp32 (bit-identical results, same HBM savings).
+- Incoming batches are **bucket-padded** to a small set of sizes so varying
+  batch shapes reuse jitted executables instead of recompiling; the report
+  prints compile-cache hits alongside p50/p95.
+
     PYTHONPATH=src python -m repro.launch.serve --items 10000 --queries 128
 """
 from __future__ import annotations
@@ -16,9 +28,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (SearchConfig, brute_force_topk, mlp_measure, recall,
+from repro.core import (EngineOptions, SearchConfig, brute_force_topk,
+                        make_corpus_store, mlp_measure, recall,
                         search_legacy, search_measure)
-from repro.graph import GraphIndex, build_l2_graph, load_index, save_index
+from repro.graph import (GraphIndex, build_l2_graph, load_corpus_store,
+                         load_index, save_index)
+
+# jit executables are cached per padded batch shape: a handful of buckets
+# bounds the number of compiles no matter what batch sizes traffic brings
+BATCH_BUCKETS = (8, 16, 32, 64, 128, 256, 512)
+
+
+def bucket_size(n: int) -> int:
+    """Smallest bucket >= n; beyond the ladder, the next multiple of the
+    largest bucket (shape set stays bounded, batches of any size fit)."""
+    for b in BATCH_BUCKETS:
+        if n <= b:
+            return b
+    top = BATCH_BUCKETS[-1]
+    return -(-n // top) * top
+
+
+def bucket_pad(queries: np.ndarray, entry: int):
+    """Pad a (n, D) query batch up to its bucket. Padding lanes rerun the
+    first query (results are sliced off); returns (qj, entries, n)."""
+    n = queries.shape[0]
+    b = bucket_size(n)
+    if b > n:
+        queries = np.concatenate(
+            [queries, np.repeat(queries[:1], b - n, axis=0)])
+    qj = jnp.asarray(queries)
+    entries = jnp.full((b,), entry, jnp.int32)
+    return qj, entries, n
 
 
 def main() -> None:
@@ -34,13 +75,26 @@ def main() -> None:
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--alpha", type=float, default=1.01)
     ap.add_argument("--budget", type=int, default=8)
+    ap.add_argument("--corpus-dtype",
+                    choices=["float32", "bfloat16", "int8"],
+                    default="float32",
+                    help="corpus residency; non-fp32 implies the "
+                         "index-fused search path")
+    ap.add_argument("--fused", action="store_true",
+                    help="index-fused rank/score stages at fp32 residency")
     ap.add_argument("--index", type=str, default=None,
                     help="serve a prebuilt index directory (graph/io.py)")
     ap.add_argument("--save-index", type=str, default=None,
                     help="persist the built index to this directory")
     args = ap.parse_args()
 
+    fused = args.fused or args.corpus_dtype != "float32"
+    if args.searcher == "legacy" and fused:
+        raise SystemExit("--searcher legacy has no index-fused/quantized "
+                         "path; use the engine searcher")
+
     rng = np.random.default_rng(0)
+    store = None
     if args.index:
         graph = load_index(args.index)
         if not isinstance(graph, GraphIndex):
@@ -49,6 +103,11 @@ def main() -> None:
                              "core.sharded / launch.dryrun)")
         base = graph.base
         args.items, args.dim = base.shape
+        if fused:
+            saved = load_corpus_store(args.index)
+            # reuse the stored payload when it matches the requested
+            # residency — no fp32 round-trip, no requantization
+            store = saved if saved.dtype == args.corpus_dtype else None
         print(f"[serve] index: loaded {args.index} ({graph.n} items, "
               f"degree {graph.avg_degree:.1f})")
     else:
@@ -59,37 +118,58 @@ def main() -> None:
               f"degree {graph.avg_degree:.1f}, "
               f"built in {time.time() - t0:.1f}s")
     if args.save_index:
-        save_index(args.save_index, graph)
-        print(f"[serve] index saved -> {args.save_index}")
+        save_index(args.save_index, graph, corpus_dtype=args.corpus_dtype)
+        print(f"[serve] index saved -> {args.save_index} "
+              f"(corpus_dtype={args.corpus_dtype})")
     measure = mlp_measure(jax.random.PRNGKey(0), args.dim, args.dim,
                           hidden=(64, 64))
 
     cfg = SearchConfig(k=args.k, ef=args.ef, mode=args.mode,
                        budget=args.budget, alpha=args.alpha)
+    options = EngineOptions(fused=fused, corpus_dtype=args.corpus_dtype)
+
+    base_j = jnp.asarray(base)
+    nbrs_j = jnp.asarray(graph.neighbors)
+    if store is None and fused:
+        # quantize once, up front — every batch then searches the resident
+        # (possibly bf16/int8) payload without per-call conversion
+        store = make_corpus_store(base_j, args.corpus_dtype)
+    corpus_arg = store if store is not None else base_j
+    if fused:
+        mib = store.nbytes() / 2**20
+        print(f"[serve] corpus resident: dtype={store.dtype} {mib:.1f} MiB "
+              f"(fused gather-rank-score path)")
 
     def run_batch(qj, entries):
         if args.searcher == "legacy":
             return search_legacy(measure.score_fn, measure.params, base_j,
                                  nbrs_j, qj, entries, cfg)
-        return search_measure(measure, base_j, nbrs_j, qj, entries, cfg)
+        return search_measure(measure, corpus_arg, nbrs_j, qj, entries, cfg,
+                              options)
 
-    base_j = jnp.asarray(base)
-    nbrs_j = jnp.asarray(graph.neighbors)
     lat_ms, evals = [], []
     first_recall = None
+    shapes_seen = set()
+    cache_hits = 0
+    n_batches = 0
     for s in range(0, args.queries, args.batch):
-        q = rng.normal(size=(args.batch, args.dim)).astype(np.float32)
-        qj = jnp.asarray(q)
-        entries = jnp.full((args.batch,), graph.entry, jnp.int32)
+        n = min(args.batch, args.queries - s)   # ragged tail exercises
+        q = rng.normal(size=(n, args.dim)).astype(np.float32)  # bucketing
+        qj, entries, n = bucket_pad(q, graph.entry)
+        n_batches += 1
+        if qj.shape in shapes_seen:
+            cache_hits += 1
+        shapes_seen.add(qj.shape)
         t0 = time.perf_counter()
         res = run_batch(qj, entries)
         jax.block_until_ready(res.ids)
         dt = time.perf_counter() - t0
         lat_ms.append(dt * 1e3)
-        evals.append(float(res.n_eval.mean()))
+        evals.append(float(res.n_eval[:n].mean()))
         if s == 0:
-            true_ids, _ = brute_force_topk(measure, base_j, qj[:16], args.k)
-            first_recall = recall(res.ids[:16], true_ids)
+            nr = min(16, n)
+            true_ids, _ = brute_force_topk(measure, base_j, qj[:nr], args.k)
+            first_recall = recall(res.ids[:nr], true_ids)
 
     # batch 0 pays compilation; use the rest for steady-state numbers, but
     # guard the single-batch (--queries <= --batch) case: re-run the warm
@@ -97,9 +177,9 @@ def main() -> None:
     steady = lat_ms[1:]
     if not steady:
         q = rng.normal(size=(args.batch, args.dim)).astype(np.float32)
-        entries = jnp.full((args.batch,), graph.entry, jnp.int32)
+        qj, entries, _ = bucket_pad(q, graph.entry)
         t0 = time.perf_counter()
-        res = run_batch(jnp.asarray(q), entries)
+        res = run_batch(qj, entries)
         jax.block_until_ready(res.ids)
         steady = [(time.perf_counter() - t0) * 1e3]
         evals.append(float(res.n_eval.mean()))
@@ -107,9 +187,12 @@ def main() -> None:
     p50 = float(np.percentile(steady, 50))
     p95 = float(np.percentile(steady, 95))
     print(f"[serve] searcher={args.searcher} mode={args.mode} "
+          f"corpus_dtype={args.corpus_dtype} fused={fused} "
           f"recall@{args.k}={first_recall:.3f} steady-state {qps:.0f} QPS "
           f"(batch={args.batch})")
     print(f"[serve] latency/batch p50={p50:.1f}ms p95={p95:.1f}ms "
+          f"compile-cache hits={cache_hits}/{n_batches} "
+          f"({len(shapes_seen)} bucket shapes) "
           f"effective-evals/query={np.mean(evals):.0f}")
 
 

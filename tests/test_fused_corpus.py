@@ -1,0 +1,348 @@
+"""Index-fused corpus-residency tests (DESIGN.md §8): CorpusStore quantize/
+dequant bounds, fused-kernel parity vs the pre-gathered references
+(interpret mode + ref backends), the fp32 fused engine bit-match, the
+int8/bf16 recall-delta guard, quantized index io round-trips, and the
+sharded/serve pass-throughs."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (EngineOptions, SearchConfig, brute_force_topk,
+                        deepfm_measure, make_corpus_store, mlp_measure,
+                        quantize_rows_int8, recall, search_measure)
+from repro.core.corpus import dequantize_rows_int8
+from repro.graph import (build_l2_graph, load_corpus_store, load_index,
+                         save_index)
+from repro.models import deepfm as deepfm_lib
+from repro.models import layers as L
+
+DTYPES = ("float32", "bfloat16", "int8")
+
+
+# ---------------------------------------------------------------------------
+# CorpusStore + quantization bounds
+# ---------------------------------------------------------------------------
+
+def test_int8_round_trip_error_bound(rng):
+    """Per-row int8: |x - dq(q(x))| <= scale/2 = max|row| / 254 elementwise."""
+    x = (rng.normal(size=(64, 24)) * rng.uniform(0.1, 10, size=(64, 1))
+         ).astype(np.float32)
+    q8, scales = quantize_rows_int8(jnp.asarray(x))
+    assert q8.dtype == jnp.int8 and scales.shape == (64, 1)
+    dq = np.asarray(dequantize_rows_int8(q8, scales))
+    bound = np.abs(x).max(axis=1, keepdims=True) / 254.0 + 1e-7
+    assert (np.abs(x - dq) <= bound).all()
+
+
+def test_bf16_bits_round_trip(rng):
+    """uint16 residency is exactly the bfloat16 rounding of the corpus."""
+    x = rng.normal(size=(32, 16)).astype(np.float32)
+    store = make_corpus_store(x, "bfloat16")
+    assert store.data.dtype == jnp.uint16
+    expect = jnp.asarray(x).astype(jnp.bfloat16).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(store.dequantize()),
+                                  np.asarray(expect))
+    ids = jnp.asarray([3, 0, 31, 3])
+    np.testing.assert_array_equal(np.asarray(store.take(ids)),
+                                  np.asarray(expect[ids]))
+
+
+def test_store_take_matches_dequantize(rng):
+    x = rng.normal(size=(50, 12)).astype(np.float32)
+    ids = jnp.asarray(rng.integers(0, 50, size=(4, 6)).astype(np.int32))
+    for dt in DTYPES:
+        store = make_corpus_store(x, dt)
+        full = np.asarray(store.dequantize())
+        np.testing.assert_array_equal(np.asarray(store.take(ids)),
+                                      full[np.asarray(ids)])
+        if dt == "float32":
+            np.testing.assert_array_equal(full, x)
+
+
+# ---------------------------------------------------------------------------
+# fused kernel parity vs pre-gathered references
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rank_by", ["angle", "projection"])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_neighbor_rank_fused_parity(rng, rank_by, dtype):
+    """Index-fused ranking == pre-gathered ref on the store's dequantized
+    rows: ref backend bit-exact, Pallas (interpret) within float tolerance."""
+    from repro.kernels.neighbor_rank import neighbor_rank
+    from repro.kernels.neighbor_rank.ref import neighbor_rank_ref
+    from repro.kernels.neighbor_rank_fused import neighbor_rank_fused
+    base = rng.normal(size=(150, 24)).astype(np.float32)
+    store = make_corpus_store(base, dtype)
+    Q, B = 5, 9
+    x = jnp.asarray(rng.normal(size=(Q, 24)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(Q, 24)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 150, size=(Q, B)).astype(np.int32))
+    valid = jnp.asarray(rng.random((Q, B)) < 0.8).at[:, 0].set(True)
+    nvecs = store.take(idx)
+    k_ref, m_ref = neighbor_rank_ref(x, g, nvecs, valid, 1.2, rank_by)
+    k_f, m_f = neighbor_rank_fused(x, g, store, idx, valid, 1.2, rank_by,
+                                   use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(k_f), np.asarray(k_ref))
+    np.testing.assert_array_equal(np.asarray(m_f), np.asarray(m_ref))
+    k_p, m_p = neighbor_rank_fused(x, g, store, idx, valid, 1.2, rank_by,
+                                   use_pallas=True, interpret=True)
+    fin = np.isfinite(np.asarray(k_ref))
+    np.testing.assert_allclose(np.asarray(k_p)[fin], np.asarray(k_ref)[fin],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(m_p), np.asarray(m_ref))
+    # pre-gathered Pallas kernel agrees too (fp32 only: it has no dequant)
+    if dtype == "float32":
+        k_g, m_g = neighbor_rank(x, g, nvecs, valid, 1.2, rank_by)
+        np.testing.assert_allclose(np.asarray(k_g)[fin],
+                                   np.asarray(k_ref)[fin],
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("q_shared", [False, True])
+def test_deepfm_score_fused_parity(rng, dtype, q_shared):
+    """Index-fused DeepFM scoring == pre-gathered ref on dequantized rows;
+    both the per-row and shared-query Pallas paths (interpret mode)."""
+    from repro.kernels.deepfm_score.ref import deepfm_score_ref
+    from repro.kernels.deepfm_score_fused import deepfm_score_fused
+    D, fm, M = 24, 8, 37
+    base = rng.normal(size=(120, D)).astype(np.float32)
+    store = make_corpus_store(base, dtype)
+    mlp, _ = L.init_mlp(jax.random.PRNGKey(0), [2 * (D - fm), 16, 16, 1],
+                        jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 120, size=(M,)).astype(np.int32))
+    if q_shared:
+        query = jnp.asarray(rng.normal(size=(D,)).astype(np.float32))
+        q_full = jnp.broadcast_to(query[None, :], (M, D))
+    else:
+        query = jnp.asarray(rng.normal(size=(M, D)).astype(np.float32))
+        q_full = query
+    ref = deepfm_score_ref(store.take(ids), q_full, mlp["w"][0], mlp["b"][0],
+                           mlp["w"][1], mlp["b"][1], mlp["w"][2],
+                           mlp["b"][2], fm)
+    out_r = deepfm_score_fused(store, ids, query, mlp, fm, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(out_r), np.asarray(ref))
+    out_p = deepfm_score_fused(store, ids, query, mlp, fm, use_pallas=True,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: fp32 fused bit-match, quantized recall guard
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_system():
+    cfg_m = deepfm_lib.DeepFMConfig()
+    params, _ = deepfm_lib.init_measure(jax.random.PRNGKey(0), cfg_m)
+    measure = deepfm_measure(params, cfg_m)
+    rng = np.random.default_rng(3)
+    base = rng.normal(size=(500, cfg_m.vec_dim)).astype(np.float32) * 0.5
+    queries = rng.normal(size=(8, cfg_m.vec_dim)).astype(np.float32) * 0.5
+    graph = build_l2_graph(base, m=10, k_construction=32)
+    return dict(measure=measure, base=jnp.asarray(base),
+                nbrs=jnp.asarray(graph.neighbors),
+                queries=jnp.asarray(queries),
+                entries=jnp.full((8,), graph.entry, jnp.int32))
+
+
+@pytest.mark.parametrize("mode", ["guitar", "sl2g"])
+def test_engine_fused_fp32_bit_matches_unfused(small_system, mode):
+    """The fp32 index-fused stages are the same float program as the
+    pre-gathered stages — ids AND scores bit-identical."""
+    s = small_system
+    cfg = SearchConfig(k=10, ef=32, mode=mode, budget=6, alpha=1.1)
+    r0 = search_measure(s["measure"], s["base"], s["nbrs"], s["queries"],
+                        s["entries"], cfg, EngineOptions())
+    r1 = search_measure(s["measure"], s["base"], s["nbrs"], s["queries"],
+                        s["entries"], cfg, EngineOptions(fused=True))
+    np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+    np.testing.assert_array_equal(np.asarray(r0.scores),
+                                  np.asarray(r1.scores))
+    np.testing.assert_array_equal(np.asarray(r0.n_eval),
+                                  np.asarray(r1.n_eval))
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+def test_engine_fused_quantized_overlap(small_system, dtype):
+    """Quantized residency stays on the fp32 search's results at small
+    scale (exact-overlap would be flaky; 0.9 bounds the perturbation)."""
+    s = small_system
+    cfg = SearchConfig(k=10, ef=32, mode="guitar", budget=6, alpha=1.1)
+    r0 = search_measure(s["measure"], s["base"], s["nbrs"], s["queries"],
+                        s["entries"], cfg, EngineOptions())
+    store = make_corpus_store(s["base"], dtype)
+    r1 = search_measure(s["measure"], store, s["nbrs"], s["queries"],
+                        s["entries"], cfg,
+                        EngineOptions(fused=True, corpus_dtype=dtype))
+    ids0, ids1 = np.asarray(r0.ids), np.asarray(r1.ids)
+    overlap = np.mean([len(set(ids0[i]) & set(ids1[i])) / cfg.k
+                       for i in range(ids0.shape[0])])
+    assert overlap >= 0.9, overlap
+
+
+def test_engine_fused_pallas_interpret_matches_ref(small_system):
+    """The scalar-prefetch Pallas kernels (interpret mode) inside a full
+    fused search == the jnp fused ref, for quantized residency."""
+    s = small_system
+    cfg = SearchConfig(k=5, ef=12, mode="guitar", budget=4, alpha=1.1,
+                       max_iters=16)
+    store = make_corpus_store(s["base"], "int8")
+    opts = dict(fused=True, corpus_dtype="int8")
+    r_ref = search_measure(s["measure"], store, s["nbrs"], s["queries"][:4],
+                           s["entries"][:4], cfg,
+                           EngineOptions(rank_impl="ref",
+                                         measure_impl="vmap", **opts))
+    r_pal = search_measure(s["measure"], store, s["nbrs"], s["queries"][:4],
+                           s["entries"][:4], cfg,
+                           EngineOptions(rank_impl="pallas",
+                                         measure_impl="pallas",
+                                         interpret=True, **opts))
+    ids_r, ids_p = np.asarray(r_ref.ids), np.asarray(r_pal.ids)
+    overlap = np.mean([len(set(ids_r[i]) & set(ids_p[i])) / cfg.k
+                       for i in range(ids_r.shape[0])])
+    assert overlap >= 0.9, overlap
+
+
+@pytest.mark.slow
+def test_recall_delta_guard_quickstart():
+    """Engine recall with bf16/int8 residency within 1% of fp32 on the
+    quickstart corpus (the serving-accuracy contract for quantization)."""
+    from benchmarks.common import quickstart_corpus
+    qbase = quickstart_corpus(1500, 32)
+    qm = mlp_measure(jax.random.PRNGKey(1), 32, 32, hidden=(32,))
+    g = build_l2_graph(qbase, m=12, k_construction=32)
+    queries = jnp.asarray(
+        np.random.default_rng(7).normal(size=(64, 32)).astype(np.float32))
+    true_ids, _ = brute_force_topk(qm, jnp.asarray(qbase), queries, 10)
+    entries = jnp.full((64,), g.entry, jnp.int32)
+    cfg = SearchConfig(k=10, ef=96, budget=8)
+    rec = {}
+    for dt in DTYPES:
+        opts = EngineOptions(fused=dt != "float32", corpus_dtype=dt)
+        res = search_measure(qm, jnp.asarray(qbase), jnp.asarray(g.neighbors),
+                             queries, entries, cfg, opts)
+        rec[dt] = recall(res.ids, true_ids)
+    assert abs(rec["float32"] - rec["bfloat16"]) <= 0.01, rec
+    assert abs(rec["float32"] - rec["int8"]) <= 0.01, rec
+
+
+# ---------------------------------------------------------------------------
+# io: quantized residency round-trips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+def test_save_load_quantized_graph_index(rng, tmp_path, dtype):
+    base = rng.normal(size=(300, 8)).astype(np.float32)
+    g = build_l2_graph(base, m=8, k_construction=20)
+    save_index(str(tmp_path / "idx"), g, corpus_dtype=dtype)
+    g2 = load_index(str(tmp_path / "idx"))
+    assert np.array_equal(g.neighbors, g2.neighbors)
+    assert g2.base.dtype == np.float32
+    # loaded base == quantization round-trip of the saved base
+    store = make_corpus_store(base, dtype)
+    np.testing.assert_allclose(g2.base, np.asarray(store.dequantize()),
+                               rtol=0, atol=1e-7)
+    # residency load: payload stays quantized, matches the store layout
+    st2 = load_corpus_store(str(tmp_path / "idx"))
+    assert st2.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(st2.data),
+                                  np.asarray(store.data))
+    if dtype == "int8":
+        np.testing.assert_array_equal(np.asarray(st2.scales),
+                                      np.asarray(store.scales))
+
+
+def test_meta_records_corpus_dtype(rng, tmp_path):
+    import json
+    base = rng.normal(size=(200, 8)).astype(np.float32)
+    g = build_l2_graph(base, m=8, k_construction=20)
+    save_index(str(tmp_path / "idx"), g, corpus_dtype="int8")
+    meta = json.load(open(tmp_path / "idx" / "meta.json"))
+    assert meta["corpus_dtype"] == "int8"
+    assert meta["format_version"] == 2
+
+
+def test_v1_indexes_still_load(rng, tmp_path):
+    """A v1 directory (pre-residency layout: fp32 'base', no corpus_dtype
+    key) must keep loading — the reader branch the version bump promised."""
+    import json
+    base = rng.normal(size=(150, 8)).astype(np.float32)
+    g = build_l2_graph(base, m=8, k_construction=20)
+    path = tmp_path / "idx"
+    save_index(str(path), g)       # v2 fp32 layout == v1 layout + new keys
+    meta = json.load(open(path / "meta.json"))
+    meta.pop("corpus_dtype")
+    meta["format_version"] = 1
+    json.dump(meta, open(path / "meta.json", "w"))
+    g2 = load_index(str(path))
+    assert np.array_equal(g2.base, g.base)
+    store = load_corpus_store(str(path))
+    assert store.dtype == "float32"
+
+
+def test_sharded_quantized_round_trip(rng, tmp_path):
+    from repro.core.sharded import ShardedIndex, build_sharded_index
+    base = rng.normal(size=(415, 12)).astype(np.float32)
+    idx = build_sharded_index(base, n_shards=4, m=8, k_construction=24)
+    save_index(str(tmp_path / "sh"), idx, corpus_dtype="int8")
+    idx2 = load_index(str(tmp_path / "sh"))
+    assert isinstance(idx2, ShardedIndex)
+    store = make_corpus_store(idx.base.reshape(-1, 12), "int8")
+    np.testing.assert_allclose(
+        idx2.base.reshape(-1, 12), np.asarray(store.dequantize()),
+        rtol=0, atol=1e-7)
+    assert np.array_equal(idx.global_ids, idx2.global_ids)
+
+
+# ---------------------------------------------------------------------------
+# sharded + serve pass-throughs
+# ---------------------------------------------------------------------------
+
+def test_sharded_options_pass_through(rng):
+    """EngineOptions (fused + int8 residency) reach the per-shard engine:
+    same duplicate-free contract, recall close to the fp32 sharded path."""
+    from jax.sharding import Mesh
+    from repro.core.sharded import build_sharded_index, sharded_search_host
+    base = rng.normal(size=(420, 12)).astype(np.float32)
+    queries = rng.normal(size=(6, 12)).astype(np.float32)
+    measure = mlp_measure(jax.random.PRNGKey(2), 12, 12, hidden=(16,))
+    idx = build_sharded_index(base, n_shards=2, m=8, k_construction=24)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("model",))
+    cfg = SearchConfig(k=5, ef=24, mode="guitar", budget=6, alpha=1.1)
+    ids0, _ = sharded_search_host(measure, idx, queries, cfg, mesh)
+    ids1, _ = sharded_search_host(
+        measure, idx, queries, cfg, mesh,
+        EngineOptions(fused=True, corpus_dtype="int8"))
+    for row in np.asarray(ids1):
+        real = row[row >= 0]
+        assert len(set(real.tolist())) == real.size
+    overlap = np.mean([
+        len(set(np.asarray(ids0)[i]) & set(np.asarray(ids1)[i])) / cfg.k
+        for i in range(ids0.shape[0])])
+    assert overlap >= 0.8, overlap
+
+
+def test_serve_bucket_pad():
+    from repro.launch.serve import BATCH_BUCKETS, bucket_pad, bucket_size
+    assert bucket_size(1) == BATCH_BUCKETS[0]
+    assert bucket_size(33) == 64
+    # beyond the ladder: next multiple of the top bucket, never smaller
+    # than the batch (a 600-query batch must not crash the server)
+    top = BATCH_BUCKETS[-1]
+    assert bucket_size(top + 1) == 2 * top
+    assert bucket_size(10 ** 6) == -(-10 ** 6 // top) * top
+    qbig = np.zeros((top + 88, 4), np.float32)
+    qj_big, entries_big, n_big = bucket_pad(qbig, entry=1)
+    assert qj_big.shape[0] == entries_big.shape[0] == 2 * top
+    assert n_big == top + 88
+    q = np.random.default_rng(0).normal(size=(33, 4)).astype(np.float32)
+    qj, entries, n = bucket_pad(q, entry=7)
+    assert qj.shape == (64, 4) and entries.shape == (64,) and n == 33
+    np.testing.assert_array_equal(np.asarray(qj[:33]), q)
+    np.testing.assert_array_equal(np.asarray(qj[33:]),
+                                  np.repeat(q[:1], 31, axis=0))
+    assert (np.asarray(entries) == 7).all()
