@@ -77,14 +77,14 @@ def main() -> None:
                     help="skip writing BENCH_<suite>.json files")
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,table2,fig6,fig7,roofline,"
-                         "kernels,graphbuild")
+                         "kernels,graphbuild,serving")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig4_recall_qps, fig5_alpha, fig6_projection,
                             fig7_begin, graph_build, kernels_micro, roofline,
-                            table2_breakdown)
+                            serving_load, table2_breakdown)
 
     jobs = [
         ("fig4", lambda: fig4_recall_qps.run(
@@ -96,6 +96,7 @@ def main() -> None:
         ("fig7", lambda: fig7_begin.run(quick=quick)),
         ("kernels", lambda: kernels_micro.run(quick=quick)),
         ("graphbuild", lambda: graph_build.run(quick=quick)),
+        ("serving", lambda: serving_load.run(quick=quick)),
         ("roofline", lambda: roofline.run(mesh="single") + roofline.run(mesh="multi")),
     ]
     print("name,us_per_call,derived")

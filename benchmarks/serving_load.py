@@ -1,0 +1,229 @@
+"""Serving-load benchmark: continuous batching vs oneshot under open-loop
+traffic (DESIGN.md §9).
+
+Workload: a straggler-heavy synthetic request stream — a bimodal mix of
+cheap-tier requests (``budget_iters`` capped low: approximate/anytime
+searches) and full-tier requests (frontier-exhaustion termination), i.e.
+high per-query iteration variance. Under oneshot serving every batch runs
+at the pace of its slowest lane; the lane-recycling runtime refills
+finished lanes from the admission queue, so steady-state throughput tracks
+the MEAN per-request work instead of the per-batch MAX.
+
+Two comparisons, emitted as the standard ``name,us_per_call,derived`` rows:
+
+1. **Backlogged capacity** — the whole stream arrives at t=0 (equal offered
+   load by construction); completed-QPS measures each discipline's
+   steady-state capacity. Gate (``--gate``): continuous >= oneshot.
+2. **Open-loop Poisson** — arrivals at a rate near the measured oneshot
+   capacity; reports p50/p99 latency, time-in-queue, and lane occupancy
+   for the continuous runtime.
+
+    PYTHONPATH=src python -m benchmarks.serving_load           # quick
+    PYTHONPATH=src python -m benchmarks.serving_load --smoke   # CI sizing
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import (EngineOptions, SearchConfig, build_engine,
+                        mlp_measure)
+from repro.graph import build_l2_graph
+from repro.serving import (ContinuousRuntime, Request, ServingMetrics,
+                           latency_summary, poisson_arrivals)
+
+
+def build_setup(n_items: int, dim: int, ef: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(n_items, dim)).astype(np.float32)
+    graph = build_l2_graph(base, m=12, k_construction=32)
+    measure = mlp_measure(jax.random.PRNGKey(seed), dim, dim, hidden=(32, 32))
+    cfg = SearchConfig(k=10, ef=ef, mode="guitar", budget=8, alpha=1.01)
+    engine = build_engine(measure, cfg, EngineOptions())
+    return base, graph, measure, cfg, engine
+
+
+def straggler_stream(n_requests: int, dim: int, arrivals: np.ndarray,
+                     cheap_frac: float = 0.75, cheap_iters: int = 8,
+                     seed: int = 1) -> List[Request]:
+    """Bimodal SLA-tier mix: ``cheap_frac`` of requests carry a tight
+    ``budget_iters`` cap, the rest run to frontier exhaustion — the
+    per-query iteration variance that makes oneshot batches straggle."""
+    rng = np.random.default_rng(seed)
+    queries = rng.normal(size=(n_requests, dim)).astype(np.float32)
+    cheap = rng.random(n_requests) < cheap_frac
+    return [Request(rid=i, query=queries[i], t_arrive=float(arrivals[i]),
+                    budget_iters=cheap_iters if cheap[i] else None)
+            for i in range(n_requests)]
+
+
+def run_oneshot(engine, measure, base_j, nbrs_j, entry, stream, lanes: int
+                ) -> dict:
+    """Batch-scoped serving over the same stream: requests are grouped into
+    arrival-order batches of ``lanes``; a batch starts when the previous
+    one finished AND its last member has arrived, then steps until every
+    lane converges. Virtual arrival clock + real measured search time; the
+    per-request iteration caps are honored via ``iter_caps`` (so both
+    disciplines do identical per-query work — only scheduling differs)."""
+    cap_full = engine.cfg.iters()
+
+    def search_batch(reqs):
+        n = len(reqs)
+        q = np.stack([r.query for r in reqs])
+        caps = np.asarray([cap_full if r.budget_iters is None
+                           else r.budget_iters for r in reqs], np.int32)
+        if n < lanes:  # pad the ragged tail; padding lanes cap at 1 iter
+            q = np.concatenate([q, np.repeat(q[:1], lanes - n, axis=0)])
+            caps = np.concatenate(
+                [caps, np.ones((lanes - n,), np.int32)])
+        res = engine.search(measure.params, base_j, nbrs_j, jnp.asarray(q),
+                            jnp.full((lanes,), entry, jnp.int32),
+                            iter_caps=jnp.asarray(caps))
+        jax.block_until_ready(res.ids)
+        return res
+
+    search_batch(stream[:lanes])  # warm the jit off the clock
+    t = 0.0
+    lat_ms, iters = [], []
+    t_first = min(r.t_arrive for r in stream)
+    for s in range(0, len(stream), lanes):
+        batch = stream[s: s + lanes]
+        t_start = max(t, max(r.t_arrive for r in batch))
+        t0 = time.perf_counter()
+        res = search_batch(batch)
+        dt = time.perf_counter() - t0
+        t = t_start + dt
+        for j, r in enumerate(batch):
+            lat_ms.append((t - r.t_arrive) * 1e3)
+            iters.append(int(res.n_iters[j]))
+    out = latency_summary(lat_ms)
+    out["qps"] = len(stream) / (t - t_first)
+    out["iters_mean"] = float(np.mean(iters))
+    out["iters_max"] = float(np.max(iters))
+    return out
+
+
+def run_continuous(rt: ContinuousRuntime, stream,
+                   realtime: bool = True) -> dict:
+    """One measured pass over a warmed runtime. The caller constructs (and
+    ``warmup``s) the runtime ONCE and reuses it across repeats — a fresh
+    runtime per repeat would recompile the jitted reset/tick pair every
+    time."""
+    rt.pop_completions()
+    rt.metrics = ServingMetrics(rt.n_lanes)
+    rt.run_stream(stream, realtime=realtime)
+    return rt.metrics.summary()
+
+
+def _fmt(s: dict) -> str:
+    return (f"qps={s['qps']:.1f};p50={s['p50_ms']:.1f}ms;"
+            f"p99={s['p99_ms']:.1f}ms")
+
+
+def _run_impl(quick: bool, n_items: int, dim: int, n_requests: int,
+              lanes: int, steps_per_tick: int, repeats: int = 3):
+    if quick:
+        n_items, n_requests, lanes = 6000, 128, 16
+    base, graph, measure, cfg, engine = build_setup(n_items, dim, ef=48)
+    base_j, nbrs_j = jnp.asarray(base), jnp.asarray(graph.neighbors)
+    rows = []
+
+    # 1) backlogged capacity: everything arrives at t=0 — equal offered
+    #    load for both disciplines, completed QPS == steady-state capacity.
+    #    Best-of-repeats on BOTH sides: the container is cpu-share
+    #    throttled, single drains carry ±20% wall-clock noise (the
+    #    graph_build suite de-noises the same way).
+    backlog = straggler_stream(n_requests, dim, np.zeros(n_requests))
+    rt = ContinuousRuntime(engine, measure.params, base_j, nbrs_j,
+                           n_lanes=lanes, query_dim=dim, entry=graph.entry,
+                           steps_per_tick=steps_per_tick)
+    rt.warmup(backlog[0].query)
+    one = max((run_oneshot(engine, measure, base_j, nbrs_j, graph.entry,
+                           backlog, lanes) for _ in range(repeats)),
+              key=lambda s: s["qps"])
+    cont = max((run_continuous(rt, backlog, realtime=False)
+                for _ in range(repeats)),
+               key=lambda s: s["qps"])
+    speedup = cont["qps"] / one["qps"]
+    straggle = one["iters_max"] / one["iters_mean"]
+    rows.append(csv_row(
+        f"serving_oneshot_backlog_q{n_requests}_l{lanes}",
+        1e6 / one["qps"], _fmt(one)
+        + f";iters_mean={one['iters_mean']:.0f}"
+        + f";iters_max={one['iters_max']:.0f}"))
+    rows.append(csv_row(
+        f"serving_continuous_backlog_q{n_requests}_l{lanes}",
+        1e6 / cont["qps"], _fmt(cont)
+        + f";occupancy={cont['occupancy']:.2f}"
+        + f";evals_per_query={cont['evals_per_query']:.0f}"))
+    rows.append(csv_row(
+        "serving_speedup_backlog", 0.0,
+        f"continuous_vs_oneshot={speedup:.2f}x"
+        f";straggler_ratio={straggle:.1f}x"
+        f";gate_continuous_ge_oneshot={speedup >= 1.0}"))
+
+    # 2) open-loop Poisson at ~80% of the measured oneshot capacity: the
+    #    regime the ISSUE's 'equal offered load' QPS comparison lives in
+    offered = 0.8 * one["qps"]
+    arrivals = poisson_arrivals(n_requests, offered, seed=2)
+    pstream = straggler_stream(n_requests, dim, arrivals, seed=3)
+    pone = run_oneshot(engine, measure, base_j, nbrs_j, graph.entry,
+                       pstream, lanes)
+    pcont = run_continuous(rt, pstream)
+    rows.append(csv_row(
+        f"serving_oneshot_poisson_{offered:.0f}qps",
+        1e6 / pone["qps"], _fmt(pone)))
+    rows.append(csv_row(
+        f"serving_continuous_poisson_{offered:.0f}qps",
+        1e6 / pcont["qps"], _fmt(pcont)
+        + f";queue_p50={pcont['queue_p50_ms']:.1f}ms"
+        + f";occupancy={pcont['occupancy']:.2f}"))
+    failures = []
+    if speedup < 1.0:
+        failures.append(
+            f"continuous backlog QPS {cont['qps']:.1f} < oneshot "
+            f"{one['qps']:.1f} ({speedup:.2f}x)")
+    return rows, failures
+
+
+def run(quick: bool = True, n_items: int = 20_000, dim: int = 32,
+        n_requests: int = 256, lanes: int = 32,
+        steps_per_tick: int = 8) -> List[str]:
+    """Row-generator entry point (benchmarks/run.py contract)."""
+    rows, failures = _run_impl(quick, n_items, dim, n_requests, lanes,
+                               steps_per_tick)
+    if failures:
+        raise RuntimeError("serving gates failed: " + ", ".join(failures))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing (same as the quick profile)")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail if continuous < oneshot backlog QPS")
+    ap.add_argument("--n-items", type=int, default=20_000)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--lanes", type=int, default=32)
+    ap.add_argument("--steps-per-tick", type=int, default=8)
+    args = ap.parse_args()
+    rows, failures = _run_impl(args.smoke, args.n_items, args.dim,
+                               args.requests, args.lanes,
+                               args.steps_per_tick)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row, flush=True)
+    if failures and args.gate:
+        raise SystemExit("serving gates failed: " + ", ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

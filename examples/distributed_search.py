@@ -25,13 +25,16 @@ def main():
     print("partitioning corpus over 4 model shards ...")
     index = build_sharded_index(base, n_shards=4, m=12, k_construction=32)
     cfg = SearchConfig(k=10, ef=48, mode="guitar", budget=8, alpha=1.01)
-    ids, scores = sharded_search_host(measure, index, queries, cfg, mesh)
+    res = sharded_search_host(measure, index, queries, cfg, mesh)
+    ids = res.ids
 
     true_ids, _ = brute_force_topk(measure, jnp.asarray(base),
                                    jnp.asarray(queries), 10)
     print(f"sharded GUITAR recall@10 = {recall(jnp.asarray(ids), true_ids):.3f} "
           f"on mesh {dict(mesh.shape)}")
     print("per-query top-3 global ids:", ids[:4, :3].tolist())
+    print(f"per-query work: evals mean={res.n_eval.mean():.0f} "
+          f"iters max={res.n_iters.max()}")
 
 
 if __name__ == "__main__":

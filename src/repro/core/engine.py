@@ -119,6 +119,8 @@ class EngineState(NamedTuple):
     n_grad: jax.Array         # (Q,) i32
     n_iters: jax.Array        # (Q,) i32
     done: jax.Array           # (Q,) bool
+    iter_cap: jax.Array       # (Q,) i32 per-lane expansion budget (SLA
+    #                           tiers / anytime search; cfg.iters() default)
 
 
 class PopOut(NamedTuple):
@@ -429,9 +431,11 @@ class ExpansionEngine:
             return max_degree
         return min(self.cfg.budget, max_degree)
 
-    # -- state init: seed pools with the entry points (one measure call)
+    # -- state init: seed pools with the entry points (one measure call).
+    #    iter_caps: optional (Q,) per-lane expansion budgets (defaults to
+    #    cfg.iters() — the pre-existing uniform cap).
     def init_state(self, params, store: CorpusStore, neighbors, queries,
-                   entries) -> EngineState:
+                   entries, iter_caps=None) -> EngineState:
         Q = queries.shape[0]
         N = store.n
         ef = self.cfg.ef
@@ -440,15 +444,65 @@ class ExpansionEngine:
             e_scores = self.measure_fused(params, store, entries, queries)
         else:
             e_scores = self.measure(params, store.take(entries), queries)
-        pool_scores = jnp.full((Q, ef), -jnp.inf).at[:, 0].set(e_scores)
+        pool_scores = jnp.full((Q, ef), -jnp.inf,
+                               jnp.float32).at[:, 0].set(e_scores)
         pool_ids = jnp.full((Q, ef), -1, jnp.int32).at[:, 0].set(entries)
         pool_expanded = jnp.ones((Q, ef), jnp.bool_).at[:, 0].set(False)
         visited = bit_set_rows(jnp.zeros((Q, nwords), jnp.uint32),
                                entries[:, None], jnp.ones((Q, 1), jnp.bool_))
         zeros = jnp.zeros((Q,), jnp.int32)
+        if iter_caps is None:
+            iter_caps = jnp.full((Q,), self.cfg.iters(), jnp.int32)
+        else:
+            iter_caps = jnp.asarray(iter_caps, jnp.int32)
         return EngineState(pool_scores, pool_ids, pool_expanded, visited,
                            zeros + 1, zeros, zeros,
-                           jnp.zeros((Q,), jnp.bool_))
+                           jnp.zeros((Q,), jnp.bool_), iter_caps)
+
+    # -- lane-scoped lifecycle: re-initialize a subset of lanes in place.
+    #    The continuous-batching runtime (serving/runtime.py) treats the Q
+    #    lanes as slots — when a lane's query converges, a freshly admitted
+    #    query is swapped in WITHOUT recompiling: same shapes, the masked
+    #    lanes get exactly the state ``init_state`` would give them (entry
+    #    seed score, reset pool, zeroed visited slice, reset counters),
+    #    every other lane's state passes through untouched. Idle lanes are
+    #    parked with ``done=True`` (``idle_state``): pop sees active=False,
+    #    so they cost no measure evaluations and stay frozen.
+    def reset_lanes(self, params, store: CorpusStore, queries, entries,
+                    state: EngineState, mask: jax.Array,
+                    iter_caps=None) -> EngineState:
+        """queries/entries (and optional per-lane ``iter_caps``): full
+        (Q, Dq)/(Q,) arrays with the NEW values already merged into the
+        masked rows; mask: (Q,) bool — True lanes are re-initialized, False
+        lanes keep ``state``. Lane-for-lane equivalent to ``init_state`` on
+        the masked rows (the parity the serving tests pin)."""
+        fresh = self.init_state(params, store, None, queries, entries,
+                                iter_caps)
+
+        def pick(n, o):
+            m = mask.reshape((-1,) + (1,) * (n.ndim - 1))
+            return jnp.where(m, n, o)
+
+        return jax.tree_util.tree_map(pick, fresh, state)
+
+    def idle_state(self, n_lanes: int, n_corpus: int) -> EngineState:
+        """An all-lanes-parked state (done=True everywhere): the runtime's
+        starting point before any query is admitted. Shapes match
+        ``init_state`` so ``reset_lanes`` / ``step`` apply unchanged."""
+        ef = self.cfg.ef
+        nwords = (n_corpus + 31) // 32
+        # explicit dtypes everywhere: these leaves must carry the same
+        # (strongly-typed) avals as jitted step/reset outputs, or the
+        # runtime's first steady-state call retraces — a one-off ~quarter
+        # second compile spike in the middle of serving traffic
+        zeros = jnp.zeros((n_lanes,), jnp.int32)
+        return EngineState(
+            pool_scores=jnp.full((n_lanes, ef), -jnp.inf, jnp.float32),
+            pool_ids=jnp.full((n_lanes, ef), -1, jnp.int32),
+            pool_expanded=jnp.ones((n_lanes, ef), jnp.bool_),
+            visited=jnp.zeros((n_lanes, nwords), jnp.uint32),
+            n_eval=zeros, n_grad=zeros, n_iters=zeros,
+            done=jnp.ones((n_lanes,), jnp.bool_), iter_cap=zeros)
 
     # -- one iteration over the whole batch: pop → grad → rank → measure →
     #    insert. qs_flat is the (Q·C, Dq) repeated query block, hoisted out
@@ -500,7 +554,7 @@ class ExpansionEngine:
 
         exhausted = ~jnp.any(~s.pool_expanded & jnp.isfinite(s.pool_scores),
                              axis=1)
-        done = state.done | exhausted | (s.n_iters >= self.cfg.iters()) \
+        done = state.done | exhausted | (s.n_iters >= s.iter_cap) \
             | ~pop.active
         return s._replace(done=done)
 
@@ -514,10 +568,10 @@ class ExpansionEngine:
     # -- jitted whole-search path (serving / benchmarks)
     @functools.cached_property
     def _run_jit(self):
-        def run(params, base, neighbors, queries, entries):
+        def run(params, base, neighbors, queries, entries, iter_caps):
             store = as_corpus_store(base, self.corpus_dtype)
             state = self.init_state(params, store, neighbors, queries,
-                                    entries)
+                                    entries, iter_caps)
             C = self.n_candidates(neighbors.shape[1])
             qs_flat = jnp.repeat(queries, C, axis=0)
 
@@ -531,14 +585,19 @@ class ExpansionEngine:
             return self._result(jax.lax.while_loop(cond, body, state))
         return jax.jit(run)
 
-    def search(self, params, base, neighbors, queries, entries
-               ) -> SearchResult:
+    def search(self, params, base, neighbors, queries, entries,
+               iter_caps=None) -> SearchResult:
         """base: (N, D) array or a pre-built ``CorpusStore`` (the serving
         path quantizes once up front; a raw array is converted — one fused
         pass — per call); neighbors: (N, B) int32 -1-padded; queries:
-        (Q, Dq); entries: (Q,) int32. Returns SearchResult with (Q, ...)
-        leaves."""
-        return self._run_jit(params, base, neighbors, queries, entries)
+        (Q, Dq); entries: (Q,) int32; iter_caps: optional (Q,) per-query
+        expansion budgets (anytime/SLA-tier search — defaults to the
+        uniform cfg cap). Returns SearchResult with (Q, ...) leaves."""
+        if iter_caps is None:
+            iter_caps = jnp.full((queries.shape[0],), self.cfg.iters(),
+                                 jnp.int32)
+        return self._run_jit(params, base, neighbors, queries, entries,
+                             jnp.asarray(iter_caps, jnp.int32))
 
     # -- eager host loop: same stage code, one Python call per iteration.
     #    Stages are observable — wrap them (e.g. a call-counting double via
@@ -546,13 +605,21 @@ class ExpansionEngine:
     def search_debug(self, params, base, neighbors, queries, entries,
                      max_steps: Optional[int] = None,
                      on_step: Optional[Callable[[int, EngineState], None]]
-                     = None) -> SearchResult:
+                     = None, iter_caps=None) -> SearchResult:
         entries = jnp.asarray(entries, jnp.int32)
         store = as_corpus_store(base, self.corpus_dtype)
-        state = self.init_state(params, store, neighbors, queries, entries)
+        state = self.init_state(params, store, neighbors, queries, entries,
+                                iter_caps)
         C = self.n_candidates(neighbors.shape[1])
         qs_flat = jnp.repeat(queries, C, axis=0)
-        limit = max_steps if max_steps is not None else self.cfg.iters() + 1
+        if max_steps is not None:
+            limit = max_steps
+        else:
+            # per-lane caps above the uniform config cap must extend the
+            # eager loop too, or debug would silently diverge from search()
+            limit = self.cfg.iters() + 1
+            if iter_caps is not None:
+                limit = max(limit, int(jnp.max(jnp.asarray(iter_caps))) + 1)
         steps = 0
         while steps < limit and not bool(jnp.all(state.done)):
             s2 = self.step(params, store, neighbors, queries, qs_flat, state)

@@ -94,9 +94,11 @@ def merge_topk(all_ids: jax.Array, all_scores: jax.Array, k: int
 def make_sharded_search(score_fn, mesh: Mesh, cfg: SearchConfig,
                         options: EngineOptions = EngineOptions()):
     """Returns a jitted fn(measure_params, sh_base, sh_nbrs, sh_entries,
-    sh_gids, queries) -> (global_ids (Q, k), scores (Q, k)) under shard_map.
-    ``measure_params`` is an ordinary (replicated) pytree argument so the
-    whole service step can be lowered abstractly for the dry-run."""
+    sh_gids, queries) -> SearchResult under shard_map: merged global ids /
+    scores (Q, k) plus per-query counters (n_eval/n_grad summed over
+    shards, n_iters max — see ``local_search``). ``measure_params`` is an
+    ordinary (replicated) pytree argument so the whole service step can be
+    lowered abstractly for the dry-run."""
     axis = "model"
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     engine = build_engine_from_fn(score_fn, cfg, options)
@@ -112,7 +114,15 @@ def make_sharded_search(score_fn, mesh: Mesh, cfg: SearchConfig,
         # gather candidates from all corpus shards, merge top-k
         all_ids = jax.lax.all_gather(local_ids, axis, axis=1)     # (Q, S, k)
         all_scores = jax.lax.all_gather(res.scores, axis, axis=1)
-        return merge_topk(all_ids, all_scores, cfg.k)
+        ids, scores = merge_topk(all_ids, all_scores, cfg.k)
+        # per-query counters survive the merge (SLA metrics / straggler
+        # analysis): evals and grads SUM over shards (total work billed to
+        # the query), iterations take the MAX (shards expand in parallel —
+        # the per-query critical path)
+        n_eval = jax.lax.psum(res.n_eval, axis)
+        n_grad = jax.lax.psum(res.n_grad, axis)
+        n_iters = jax.lax.pmax(res.n_iters, axis)
+        return SearchResult(ids, scores, n_eval, n_grad, n_iters)
 
     def specs_like(tree):
         return jax.tree_util.tree_map(lambda _: P(), tree)
@@ -123,7 +133,10 @@ def make_sharded_search(score_fn, mesh: Mesh, cfg: SearchConfig,
             in_specs=(specs_like(measure_params),
                       P(axis, None, None), P(axis, None, None), P(axis),
                       P(axis, None), P(batch_axes, None)),
-            out_specs=(P(batch_axes, None), P(batch_axes, None)),
+            out_specs=SearchResult(
+                ids=P(batch_axes, None), scores=P(batch_axes, None),
+                n_eval=P(batch_axes), n_grad=P(batch_axes),
+                n_iters=P(batch_axes)),
             check=False)
         return wrapped(measure_params, base, nbrs, entries, gids, queries)
 
@@ -134,14 +147,15 @@ def sharded_search_host(measure: Measure, index: ShardedIndex,
                         queries: np.ndarray, cfg: SearchConfig,
                         mesh: Mesh,
                         options: EngineOptions = EngineOptions()
-                        ) -> Tuple[np.ndarray, np.ndarray]:
-    """Host convenience wrapper: place shards, run, fetch. ``options``
-    passes straight through to the per-shard engine — index-fused stages
-    and bf16/int8 corpus residency apply per partition (each shard
-    quantizes its own rows; row scales keep the format partition-local)."""
+                        ) -> SearchResult:
+    """Host convenience wrapper: place shards, run, fetch. Returns a full
+    ``SearchResult`` (numpy leaves) — merged ids/scores plus the per-query
+    counters. ``options`` passes straight through to the per-shard engine —
+    index-fused stages and bf16/int8 corpus residency apply per partition
+    (each shard quantizes its own rows; row scales keep the format
+    partition-local)."""
     fn = make_sharded_search(measure.score_fn, mesh, cfg, options)
     args = (measure.params, jnp.asarray(index.base),
             jnp.asarray(index.neighbors), jnp.asarray(index.entries),
             jnp.asarray(index.global_ids), jnp.asarray(queries))
-    ids, scores = fn(*args)
-    return np.asarray(ids), np.asarray(scores)
+    return SearchResult(*[np.asarray(x) for x in fn(*args)])

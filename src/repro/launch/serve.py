@@ -1,23 +1,25 @@
 """Serving launcher: stand up a GUITAR ranking service (measure + index) and
-run batched queries against it. ``--mode`` selects the pruning strategy,
+run queries against it. ``--mode`` selects the pruning strategy,
 ``--searcher`` the execution path (staged expansion engine vs the legacy
-lane-major searcher). ``--index`` serves a prebuilt index directory
-(``python -m repro.launch.build_index``) instead of building in-process;
-``--save-index`` persists an in-process build for reuse.
+lane-major searcher), ``--runtime`` the serving discipline:
 
-Serving-path knobs (DESIGN.md §8):
+- ``oneshot``      closed-loop batch jobs: queries arrive in whole batches,
+  each batch steps until every lane converges. Batches are bucket-padded to
+  the ``serving/batching.py`` size ladder so jit executables are reused.
+- ``continuous``   open-loop traffic (DESIGN.md §9): Poisson arrivals at
+  ``--offered-qps`` feed an admission queue; the lane-recycling scheduler
+  (``serving/runtime.py``) swaps queued queries into lanes as they free up,
+  and per-request completions stream out with full SLA metrics
+  (p50/p95/p99 latency, time-in-queue, lane occupancy, evals/query).
 
-- ``--corpus-dtype {float32,bfloat16,int8}`` holds the corpus resident in
-  reduced precision (quantized ONCE up front; a quantized ``--index``
-  payload is loaded without ever materializing fp32) and routes search
-  through the index-fused rank/score stages — indices in, scores out, no
-  pre-gathered neighbor blocks. ``--fused`` forces the fused stages at
-  fp32 (bit-identical results, same HBM savings).
-- Incoming batches are **bucket-padded** to a small set of sizes so varying
-  batch shapes reuse jitted executables instead of recompiling; the report
-  prints compile-cache hits alongside p50/p95.
+``--index`` serves a prebuilt index directory (``python -m
+repro.launch.build_index``) instead of building in-process; ``--save-index``
+persists an in-process build for reuse. ``--corpus-dtype`` / ``--fused``
+select index-fused quantized residency (DESIGN.md §8).
 
     PYTHONPATH=src python -m repro.launch.serve --items 10000 --queries 128
+    PYTHONPATH=src python -m repro.launch.serve --runtime continuous \
+        --lanes 32 --offered-qps 200 --queries 256
 """
 from __future__ import annotations
 
@@ -29,37 +31,108 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (EngineOptions, SearchConfig, brute_force_topk,
-                        make_corpus_store, mlp_measure, recall,
+                        build_engine, make_corpus_store, mlp_measure, recall,
                         search_legacy, search_measure)
 from repro.graph import (GraphIndex, build_l2_graph, load_corpus_store,
                          load_index, save_index)
-
-# jit executables are cached per padded batch shape: a handful of buckets
-# bounds the number of compiles no matter what batch sizes traffic brings
-BATCH_BUCKETS = (8, 16, 32, 64, 128, 256, 512)
-
-
-def bucket_size(n: int) -> int:
-    """Smallest bucket >= n; beyond the ladder, the next multiple of the
-    largest bucket (shape set stays bounded, batches of any size fit)."""
-    for b in BATCH_BUCKETS:
-        if n <= b:
-            return b
-    top = BATCH_BUCKETS[-1]
-    return -(-n // top) * top
+from repro.serving import (BATCH_BUCKETS, ContinuousRuntime, Request,  # noqa: F401  (re-export compat)
+                           bucket_pad, bucket_size, latency_summary,
+                           poisson_arrivals)
 
 
-def bucket_pad(queries: np.ndarray, entry: int):
-    """Pad a (n, D) query batch up to its bucket. Padding lanes rerun the
-    first query (results are sliced off); returns (qj, entries, n)."""
-    n = queries.shape[0]
-    b = bucket_size(n)
-    if b > n:
-        queries = np.concatenate(
-            [queries, np.repeat(queries[:1], b - n, axis=0)])
-    qj = jnp.asarray(queries)
-    entries = jnp.full((b,), entry, jnp.int32)
-    return qj, entries, n
+def serve_oneshot(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
+                  base_j, rng) -> None:
+    """Closed-loop batch serving: whole bucket-padded batches, each stepped
+    to full convergence (the pre-§9 path, still best for batch jobs)."""
+    def run_batch(qj, entries):
+        if args.searcher == "legacy":
+            return search_legacy(measure.score_fn, measure.params, base_j,
+                                 nbrs_j, qj, entries, cfg)
+        return search_measure(measure, corpus_arg, nbrs_j, qj, entries, cfg,
+                              options)
+
+    lat_ms, evals, iters_all = [], [], []
+    first_recall = None
+    shapes_seen = set()
+    cache_hits = 0
+    n_batches = 0
+    for s in range(0, args.queries, args.batch):
+        n = min(args.batch, args.queries - s)   # ragged tail exercises
+        q = rng.normal(size=(n, args.dim)).astype(np.float32)  # bucketing
+        qj, entries, n = bucket_pad(q, graph.entry)
+        n_batches += 1
+        if qj.shape in shapes_seen:
+            cache_hits += 1
+        shapes_seen.add(qj.shape)
+        t0 = time.perf_counter()
+        res = run_batch(qj, entries)
+        jax.block_until_ready(res.ids)
+        dt = time.perf_counter() - t0
+        lat_ms.append(dt * 1e3)
+        evals.append(float(res.n_eval[:n].mean()))
+        iters_all.extend(np.asarray(res.n_iters[:n]).tolist())
+        if s == 0:
+            nr = min(16, n)
+            true_ids, _ = brute_force_topk(measure, base_j, qj[:nr], args.k)
+            first_recall = recall(res.ids[:nr], true_ids)
+
+    # batch 0 pays compilation; use the rest for steady-state numbers, but
+    # guard the single-batch (--queries <= --batch) case: re-run the warm
+    # batch so the report never divides by zero or quotes compile time.
+    steady = lat_ms[1:]
+    if not steady:
+        q = rng.normal(size=(args.batch, args.dim)).astype(np.float32)
+        qj, entries, _ = bucket_pad(q, graph.entry)
+        t0 = time.perf_counter()
+        res = run_batch(qj, entries)
+        jax.block_until_ready(res.ids)
+        steady = [(time.perf_counter() - t0) * 1e3]
+        evals.append(float(res.n_eval.mean()))
+    qps = args.batch * len(steady) / (sum(steady) / 1e3)
+    lat = latency_summary(steady)
+    iters = np.asarray(iters_all) if iters_all else np.asarray([0])
+    print(f"[serve] searcher={args.searcher} mode={args.mode} "
+          f"corpus_dtype={args.corpus_dtype} fused={options.fused} "
+          f"recall@{args.k}={first_recall:.3f} steady-state {qps:.0f} QPS "
+          f"(batch={args.batch})")
+    print(f"[serve] latency/batch p50={lat['p50_ms']:.1f}ms "
+          f"p95={lat['p95_ms']:.1f}ms "
+          f"compile-cache hits={cache_hits}/{n_batches} "
+          f"({len(shapes_seen)} bucket shapes) "
+          f"effective-evals/query={np.mean(evals):.0f} "
+          f"iters mean={iters.mean():.0f} max={iters.max()}")
+
+
+def serve_continuous(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
+                     base_j, rng) -> None:
+    """Open-loop continuous batching: Poisson arrivals at --offered-qps
+    into the lane-recycling runtime; per-request SLA metrics out."""
+    engine = build_engine(measure, cfg, options)
+    runtime = ContinuousRuntime(engine, measure.params, corpus_arg, nbrs_j,
+                                n_lanes=args.lanes, query_dim=args.dim,
+                                entry=graph.entry,
+                                steps_per_tick=args.steps_per_tick)
+    queries = rng.normal(size=(args.queries, args.dim)).astype(np.float32)
+    runtime.warmup(queries[0])  # compile reset + tick off the clock
+
+    arrivals = poisson_arrivals(args.queries, args.offered_qps, seed=1)
+    stream = [Request(rid=i, query=queries[i], t_arrive=float(arrivals[i]),
+                      deadline=args.deadline)
+              for i in range(args.queries)]
+    completions = runtime.run_stream(stream)
+
+    by_rid = {c.rid: c for c in completions}
+    nr = min(16, args.queries)
+    true_ids, _ = brute_force_topk(measure, base_j,
+                                   jnp.asarray(queries[:nr]), args.k)
+    got = jnp.asarray(np.stack([by_rid[i].ids for i in range(nr)]))
+    r = recall(got, true_ids)
+    print(f"[serve] runtime=continuous lanes={args.lanes} "
+          f"steps_per_tick={args.steps_per_tick} "
+          f"offered={args.offered_qps:.0f} QPS mode={args.mode} "
+          f"corpus_dtype={args.corpus_dtype} fused={options.fused} "
+          f"recall@{args.k}={r:.3f}")
+    print(runtime.metrics.report())
 
 
 def main() -> None:
@@ -71,6 +144,19 @@ def main() -> None:
     ap.add_argument("--mode", choices=["guitar", "sl2g"], default="guitar")
     ap.add_argument("--searcher", choices=["engine", "legacy"],
                     default="engine")
+    ap.add_argument("--runtime", choices=["oneshot", "continuous"],
+                    default="oneshot",
+                    help="batch-scoped vs lane-recycling serving (§9)")
+    ap.add_argument("--lanes", type=int, default=32,
+                    help="continuous runtime: engine lanes (slots)")
+    ap.add_argument("--offered-qps", type=float, default=200.0,
+                    help="continuous runtime: open-loop Poisson arrival rate")
+    ap.add_argument("--steps-per-tick", type=int, default=8,
+                    help="continuous runtime: engine steps per scheduler "
+                         "round (latency quantum vs host overhead)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="continuous runtime: max seconds in queue before a "
+                         "request is dropped as timed out")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--alpha", type=float, default=1.01)
@@ -92,6 +178,9 @@ def main() -> None:
     if args.searcher == "legacy" and fused:
         raise SystemExit("--searcher legacy has no index-fused/quantized "
                          "path; use the engine searcher")
+    if args.runtime == "continuous" and args.searcher == "legacy":
+        raise SystemExit("--runtime continuous is engine-only (lane "
+                         "recycling needs the per-lane reset API)")
 
     rng = np.random.default_rng(0)
     store = None
@@ -140,60 +229,12 @@ def main() -> None:
         print(f"[serve] corpus resident: dtype={store.dtype} {mib:.1f} MiB "
               f"(fused gather-rank-score path)")
 
-    def run_batch(qj, entries):
-        if args.searcher == "legacy":
-            return search_legacy(measure.score_fn, measure.params, base_j,
-                                 nbrs_j, qj, entries, cfg)
-        return search_measure(measure, corpus_arg, nbrs_j, qj, entries, cfg,
-                              options)
-
-    lat_ms, evals = [], []
-    first_recall = None
-    shapes_seen = set()
-    cache_hits = 0
-    n_batches = 0
-    for s in range(0, args.queries, args.batch):
-        n = min(args.batch, args.queries - s)   # ragged tail exercises
-        q = rng.normal(size=(n, args.dim)).astype(np.float32)  # bucketing
-        qj, entries, n = bucket_pad(q, graph.entry)
-        n_batches += 1
-        if qj.shape in shapes_seen:
-            cache_hits += 1
-        shapes_seen.add(qj.shape)
-        t0 = time.perf_counter()
-        res = run_batch(qj, entries)
-        jax.block_until_ready(res.ids)
-        dt = time.perf_counter() - t0
-        lat_ms.append(dt * 1e3)
-        evals.append(float(res.n_eval[:n].mean()))
-        if s == 0:
-            nr = min(16, n)
-            true_ids, _ = brute_force_topk(measure, base_j, qj[:nr], args.k)
-            first_recall = recall(res.ids[:nr], true_ids)
-
-    # batch 0 pays compilation; use the rest for steady-state numbers, but
-    # guard the single-batch (--queries <= --batch) case: re-run the warm
-    # batch so the report never divides by zero or quotes compile time.
-    steady = lat_ms[1:]
-    if not steady:
-        q = rng.normal(size=(args.batch, args.dim)).astype(np.float32)
-        qj, entries, _ = bucket_pad(q, graph.entry)
-        t0 = time.perf_counter()
-        res = run_batch(qj, entries)
-        jax.block_until_ready(res.ids)
-        steady = [(time.perf_counter() - t0) * 1e3]
-        evals.append(float(res.n_eval.mean()))
-    qps = args.batch * len(steady) / (sum(steady) / 1e3)
-    p50 = float(np.percentile(steady, 50))
-    p95 = float(np.percentile(steady, 95))
-    print(f"[serve] searcher={args.searcher} mode={args.mode} "
-          f"corpus_dtype={args.corpus_dtype} fused={fused} "
-          f"recall@{args.k}={first_recall:.3f} steady-state {qps:.0f} QPS "
-          f"(batch={args.batch})")
-    print(f"[serve] latency/batch p50={p50:.1f}ms p95={p95:.1f}ms "
-          f"compile-cache hits={cache_hits}/{n_batches} "
-          f"({len(shapes_seen)} bucket shapes) "
-          f"effective-evals/query={np.mean(evals):.0f}")
+    if args.runtime == "continuous":
+        serve_continuous(args, graph, measure, cfg, options, corpus_arg,
+                         nbrs_j, base_j, rng)
+    else:
+        serve_oneshot(args, graph, measure, cfg, options, corpus_arg,
+                      nbrs_j, base_j, rng)
 
 
 if __name__ == "__main__":

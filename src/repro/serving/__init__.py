@@ -1,0 +1,12 @@
+"""Serving runtime (DESIGN.md §9): continuous batching over the expansion
+engine — admission queue, lane-recycling scheduler, per-request metrics."""
+from repro.serving.batching import (  # noqa: F401
+    BATCH_BUCKETS, bucket_pad, bucket_size,
+)
+from repro.serving.metrics import (  # noqa: F401
+    RequestRecord, ServingMetrics, latency_summary, percentile,
+)
+from repro.serving.runtime import (  # noqa: F401
+    Completion, ContinuousRuntime, Request, ShardedContinuousRuntime,
+    poisson_arrivals,
+)

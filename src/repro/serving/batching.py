@@ -1,0 +1,38 @@
+"""Batch-shape policy shared by every serve path (DESIGN.md §8/§9).
+
+jit executables are cached per padded batch shape; snapping incoming batch
+sizes to a small ladder bounds the number of compiles no matter what batch
+sizes traffic brings. The oneshot launcher pads whole query batches with
+``bucket_pad``; the continuous runtime fixes its shape once (Q = lane
+count) and never pads, but reuses ``bucket_size`` to pick a lane count for
+``--lanes auto``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+BATCH_BUCKETS = (8, 16, 32, 64, 128, 256, 512)
+
+
+def bucket_size(n: int) -> int:
+    """Smallest bucket >= n; beyond the ladder, the next multiple of the
+    largest bucket (shape set stays bounded, batches of any size fit)."""
+    for b in BATCH_BUCKETS:
+        if n <= b:
+            return b
+    top = BATCH_BUCKETS[-1]
+    return -(-n // top) * top
+
+
+def bucket_pad(queries: np.ndarray, entry: int):
+    """Pad a (n, D) query batch up to its bucket. Padding lanes rerun the
+    first query (results are sliced off); returns (qj, entries, n)."""
+    n = queries.shape[0]
+    b = bucket_size(n)
+    if b > n:
+        queries = np.concatenate(
+            [queries, np.repeat(queries[:1], b - n, axis=0)])
+    qj = jnp.asarray(queries)
+    entries = jnp.full((b,), entry, jnp.int32)
+    return qj, entries, n

@@ -1,0 +1,124 @@
+"""Serving SLA metrics (DESIGN.md §9) — the single accounting surface for
+both serve paths. The continuous runtime records one ``RequestRecord`` per
+completed request (arrival → admission → completion timestamps plus the
+engine's per-lane counters); the oneshot launcher feeds per-batch latencies
+through ``latency_summary``. Everything here is plain numpy on host
+timestamps — nothing touches the device.
+
+Occupancy is step-weighted: each engine tick contributes
+``busy_lanes · steps`` live-lane-steps out of ``n_lanes · steps`` possible,
+so the number is exactly the fraction of lane-steps that carried a live
+query — the quantity the lane-recycling scheduler exists to maximize (a
+oneshot batch's occupancy decays as stragglers pin the batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def percentile(xs, q: float) -> float:
+    """float(np.percentile) with an empty-input guard (nan, not a crash)."""
+    if len(xs) == 0:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def latency_summary(lat_ms) -> Dict[str, float]:
+    """p50/p95/p99 over a latency sample (ms) — shared by both runtimes."""
+    return {"p50_ms": percentile(lat_ms, 50),
+            "p95_ms": percentile(lat_ms, 95),
+            "p99_ms": percentile(lat_ms, 99)}
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    t_arrive: float
+    t_admit: float
+    t_done: float
+    n_eval: int = 0
+    n_grad: int = 0
+    n_iters: int = 0
+    timed_out: bool = False
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.t_done - self.t_arrive) * 1e3
+
+    @property
+    def queue_ms(self) -> float:
+        return (self.t_admit - self.t_arrive) * 1e3
+
+
+class ServingMetrics:
+    """Accumulates per-request records + per-tick lane occupancy samples."""
+
+    def __init__(self, n_lanes: int = 0):
+        self.n_lanes = n_lanes
+        self.records: List[RequestRecord] = []
+        self._busy_steps = 0
+        self._lane_steps = 0
+
+    def observe(self, rec: RequestRecord) -> None:
+        self.records.append(rec)
+
+    def observe_occupancy(self, busy: int, n_lanes: int, steps: int = 1
+                          ) -> None:
+        self._busy_steps += busy * steps
+        self._lane_steps += n_lanes * steps
+
+    def sync_occupancy(self, busy_steps: int, lane_steps: int) -> None:
+        """Overwrite the occupancy totals from an external aggregation —
+        the sharded runtime mirrors its sub-runtimes' samples here."""
+        self._busy_steps = busy_steps
+        self._lane_steps = lane_steps
+
+    @property
+    def occupancy(self) -> float:
+        return self._busy_steps / self._lane_steps if self._lane_steps else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        done = [r for r in self.records if not r.timed_out]
+        lat = [r.latency_ms for r in done]
+        queue = [r.queue_ms for r in done]
+        iters = np.asarray([r.n_iters for r in done], np.float64)
+        evals = np.asarray([r.n_eval for r in done], np.float64)
+        out = {"n_completed": float(len(done)),
+               "n_timed_out": float(len(self.records) - len(done)),
+               "occupancy": self.occupancy,
+               "queue_p50_ms": percentile(queue, 50),
+               "queue_p95_ms": percentile(queue, 95),
+               "evals_per_query": float(evals.mean()) if done else float("nan"),
+               "iters_mean": float(iters.mean()) if done else float("nan"),
+               "iters_max": float(iters.max()) if done else float("nan"),
+               "iters_std": float(iters.std()) if done else float("nan")}
+        out.update(latency_summary(lat))
+        if done:
+            t0 = min(r.t_arrive for r in done)
+            t1 = max(r.t_done for r in done)
+            out["qps"] = len(done) / (t1 - t0) if t1 > t0 else float("nan")
+        else:
+            out["qps"] = float("nan")
+        return out
+
+    def report(self, prefix: str = "[serve]") -> str:
+        s = self.summary()
+        straggle = (s["iters_max"] / s["iters_mean"]
+                    if s["iters_mean"] else float("nan"))
+        lines = [
+            f"{prefix} completed={s['n_completed']:.0f} "
+            f"timed_out={s['n_timed_out']:.0f} "
+            f"steady-state {s['qps']:.0f} QPS "
+            f"lane-occupancy={s['occupancy']:.2f}",
+            f"{prefix} latency p50={s['p50_ms']:.1f}ms "
+            f"p95={s['p95_ms']:.1f}ms p99={s['p99_ms']:.1f}ms "
+            f"time-in-queue p50={s['queue_p50_ms']:.1f}ms "
+            f"p95={s['queue_p95_ms']:.1f}ms",
+            f"{prefix} evals/query={s['evals_per_query']:.0f} "
+            f"iters mean={s['iters_mean']:.0f} max={s['iters_max']:.0f} "
+            f"(straggler ratio {straggle:.1f}x)",
+        ]
+        return "\n".join(lines)

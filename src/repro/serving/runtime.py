@@ -1,0 +1,435 @@
+"""Continuous-batching serving runtime (DESIGN.md §9).
+
+The batch-major engine steps a whole (Q, ...) state until ``jnp.all(done)``
+— fine for closed-loop batch jobs, but under open-loop traffic the batch
+finishes at the pace of its slowest lane while finished lanes burn frozen
+steps. This runtime changes the engine's lifecycle from batch-scoped to
+lane-scoped: the Q lanes are *slots*. An admission queue holds arriving
+requests (arrival-time + deadline tagged); each scheduler round is
+
+    admit    swap queued queries into free lanes via the engine's
+             ``reset_lanes`` (lane-masked re-init: entry seed, pool,
+             visited slice, counters — same shapes, no recompile)
+    tick     ``steps_per_tick`` engine steps under one jitted fori_loop
+             (finished lanes stay frozen by ``_freeze_done`` until
+             harvested, exactly as in the one-shot while_loop)
+    harvest  lanes whose query converged stream out per-request
+             ``Completion``s and become free slots
+
+Per-request results are bit-identical to one-shot ``engine.search`` on the
+same query (the stages are lane-row-independent; tests pin ids AND scores).
+``ShardedContinuousRuntime`` runs one runtime per corpus partition and
+merges per-request top-k with the same ``merge_topk`` as the one-shot
+sharded path.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.corpus import as_corpus_store
+from repro.core.engine import ExpansionEngine, _freeze_done
+from repro.serving.metrics import RequestRecord, ServingMetrics
+
+
+@dataclasses.dataclass
+class Request:
+    """One query for the admission queue. ``t_arrive`` is seconds relative
+    to the start of the stream (``run_stream``) or an absolute ``now_fn``
+    timestamp (direct ``submit``); ``deadline`` is seconds of queueing the
+    request tolerates before it is dropped as timed out; ``budget_iters``
+    caps this request's expansions (SLA tier / anytime search — None means
+    the engine config's uniform cap)."""
+    rid: int
+    query: np.ndarray
+    t_arrive: float = 0.0
+    entry: Optional[int] = None
+    deadline: Optional[float] = None
+    budget_iters: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    ids: np.ndarray        # (k,) int32
+    scores: np.ndarray     # (k,) float32
+    n_eval: int
+    n_grad: int
+    n_iters: int
+    lane: int
+    record: RequestRecord
+
+
+def poisson_arrivals(n: int, qps: float, seed: int = 0) -> np.ndarray:
+    """Open-loop Poisson arrival offsets (seconds): cumsum of Exp(1/qps)."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / qps, size=n))
+
+
+class ContinuousRuntime:
+    """Lane-recycling scheduler over one ``ExpansionEngine``.
+
+    Shapes are fixed at construction (n_lanes × corpus) so every jitted
+    callable — the lane-masked reset and the multi-step tick — compiles
+    exactly once and is reused for the life of the runtime.
+    """
+
+    def __init__(self, engine: ExpansionEngine, params, corpus, neighbors,
+                 n_lanes: int, query_dim: int, entry: int = 0,
+                 steps_per_tick: int = 4,
+                 now_fn: Callable[[], float] = time.perf_counter,
+                 shared_fns: Optional[tuple] = None):
+        if n_lanes < 1:
+            raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+        if steps_per_tick < 1:
+            raise ValueError(
+                f"steps_per_tick must be >= 1, got {steps_per_tick}")
+        self.engine = engine
+        self.params = params
+        self.store = as_corpus_store(corpus, engine.corpus_dtype)
+        self.neighbors = jnp.asarray(neighbors)
+        self.n_lanes = n_lanes
+        self.default_entry = entry
+        self.steps_per_tick = steps_per_tick
+        self._now = now_fn
+
+        self.queue: collections.deque[Request] = collections.deque()
+        self._lane_req: List[Optional[Request]] = [None] * n_lanes
+        self._admit_time: List[float] = [0.0] * n_lanes
+        self._queries_np = np.zeros((n_lanes, query_dim), np.float32)
+        self._entries_np = np.full((n_lanes,), entry, np.int32)
+        self._caps_np = np.full((n_lanes,), engine.cfg.iters(), np.int32)
+        self._queries_j = jnp.asarray(self._queries_np)
+        self._state = engine.idle_state(n_lanes, self.store.n)
+        self.completions: List[Completion] = []
+        self.metrics = ServingMetrics(n_lanes)
+        self._rid_gen = itertools.count()
+
+        if shared_fns is not None:
+            # same engine + same shapes => same traced program; sharing the
+            # jitted callables (ShardedContinuousRuntime does, across its
+            # per-shard runtimes) avoids S identical compiles — jax.jit
+            # caches per closure identity, not per computation
+            self._reset_fn, self._tick_fn = shared_fns
+            return
+
+        eng = engine
+        spt = steps_per_tick
+
+        def reset(params, store, queries, entries, state, mask, caps):
+            return eng.reset_lanes(params, store, queries, entries, state,
+                                   mask, caps)
+
+        def tick(params, store, neighbors, queries, state):
+            C = eng.n_candidates(neighbors.shape[1])
+            qs_flat = jnp.repeat(queries, C, axis=0)
+
+            def body(_, s):
+                s2 = eng.step(params, store, neighbors, queries, qs_flat, s)
+                return _freeze_done(s.done, s2, s)
+
+            return jax.lax.fori_loop(0, spt, body, state)
+
+        self._reset_fn = jax.jit(reset)
+        self._tick_fn = jax.jit(tick)
+
+    # -- queue side ---------------------------------------------------------
+
+    @property
+    def in_flight(self) -> int:
+        return sum(r is not None for r in self._lane_req)
+
+    def submit(self, query: np.ndarray, rid: Optional[int] = None,
+               entry: Optional[int] = None, deadline: Optional[float] = None,
+               t_arrive: Optional[float] = None,
+               budget_iters: Optional[int] = None) -> int:
+        rid = rid if rid is not None else next(self._rid_gen)
+        t = t_arrive if t_arrive is not None else self._now()
+        self.queue.append(Request(rid, np.asarray(query, np.float32), t,
+                                  entry, deadline, budget_iters))
+        return rid
+
+    # -- scheduler round ----------------------------------------------------
+
+    def _admit(self, now: float) -> List[Completion]:
+        dropped: List[Completion] = []
+        free = [l for l in range(self.n_lanes) if self._lane_req[l] is None]
+        if not free or not self.queue:
+            return dropped
+        mask = np.zeros((self.n_lanes,), bool)
+        while free and self.queue:
+            req = self.queue.popleft()
+            if req.deadline is not None and now - req.t_arrive > req.deadline:
+                # dropped, but still completed: downstream consumers (the
+                # sharded merge, the stream driver) must see every rid
+                # resolve exactly once
+                k = self.engine.cfg.k
+                rec = RequestRecord(req.rid, req.t_arrive, now, now,
+                                    timed_out=True)
+                self.metrics.observe(rec)
+                c = Completion(req.rid, np.full((k,), -1, np.int32),
+                               np.full((k,), -np.inf, np.float32),
+                               0, 0, 0, -1, rec)
+                self.completions.append(c)
+                dropped.append(c)
+                continue
+            lane = free.pop(0)
+            mask[lane] = True
+            self._lane_req[lane] = req
+            self._admit_time[lane] = now
+            self._queries_np[lane] = req.query
+            self._entries_np[lane] = (req.entry if req.entry is not None
+                                      else self.default_entry)
+            self._caps_np[lane] = (req.budget_iters
+                                   if req.budget_iters is not None
+                                   else self.engine.cfg.iters())
+        if not mask.any():
+            return dropped
+        self._queries_j = jnp.asarray(self._queries_np)
+        self._state = self._reset_fn(
+            self.params, self.store, self._queries_j,
+            jnp.asarray(self._entries_np), self._state, jnp.asarray(mask),
+            jnp.asarray(self._caps_np))
+        return dropped
+
+    def _tick(self) -> None:
+        busy = self.in_flight
+        if not busy:
+            return
+        self._state = self._tick_fn(self.params, self.store, self.neighbors,
+                                    self._queries_j, self._state)
+        self.metrics.observe_occupancy(busy, self.n_lanes,
+                                       self.steps_per_tick)
+
+    def _harvest(self, now: float) -> List[Completion]:
+        occupied = [l for l in range(self.n_lanes)
+                    if self._lane_req[l] is not None]
+        if not occupied:
+            return []
+        # one fused transfer per round: done + results + counters together
+        # (the sync on this fetch is what absorbs the tick's compute; a
+        # separate done-probe would just pay the round-trip twice)
+        k = self.engine.cfg.k
+        done, ids, scores, n_eval, n_grad, n_iters = jax.device_get(
+            (self._state.done, self._state.pool_ids[:, :k],
+             self._state.pool_scores[:, :k], self._state.n_eval,
+             self._state.n_grad, self._state.n_iters))
+        ready = [l for l in occupied if done[l]]
+        if not ready:
+            return []
+        out = []
+        for lane in ready:
+            req = self._lane_req[lane]
+            rec = RequestRecord(req.rid, req.t_arrive,
+                                self._admit_time[lane], now,
+                                int(n_eval[lane]), int(n_grad[lane]),
+                                int(n_iters[lane]))
+            c = Completion(req.rid, ids[lane].copy(), scores[lane].copy(),
+                           int(n_eval[lane]), int(n_grad[lane]),
+                           int(n_iters[lane]), lane, rec)
+            self.metrics.observe(rec)
+            self.completions.append(c)
+            self._lane_req[lane] = None
+            out.append(c)
+        return out
+
+    def step_once(self) -> List[Completion]:
+        """One admit → tick → harvest round; returns every request that
+        resolved this round — harvested results AND deadline drops."""
+        dropped = self._admit(self._now())
+        self._tick()
+        return dropped + self._harvest(self._now())
+
+    def pop_completions(self) -> List[Completion]:
+        out, self.completions = self.completions, []
+        return out
+
+    def warmup(self, query: np.ndarray) -> None:
+        """Compile the jitted reset + tick off the clock: run one sentinel
+        request to completion, then discard its completion and metrics.
+        Both serve paths call this before timing anything."""
+        self.run_stream([Request(rid=-1, query=np.asarray(query))],
+                        realtime=False)
+        self.pop_completions()
+        self.metrics = ServingMetrics(self.n_lanes)
+
+    # -- open-loop driver ---------------------------------------------------
+
+    def run_stream(self, requests: Sequence[Request],
+                   realtime: bool = True) -> List[Completion]:
+        """Drive a pre-scheduled stream to completion. ``t_arrive`` offsets
+        are seconds from the start of the run; arrivals are open-loop —
+        independent of completions. ``realtime=False`` collapses the
+        schedule — every request is due immediately and is stamped as
+        arriving at submission (honoring future offsets in the records
+        would make latency/queue times negative); arrival ORDER still
+        follows the offsets, which is all the deterministic tests need."""
+        pending = collections.deque(
+            sorted(requests, key=lambda r: r.t_arrive))
+        t0 = self._now()
+        while pending or self.queue or self.in_flight:
+            now = self._now() - t0
+            while pending and (not realtime or pending[0].t_arrive <= now):
+                r = pending.popleft()
+                self.submit(r.query, rid=r.rid, entry=r.entry,
+                            deadline=r.deadline,
+                            t_arrive=(t0 + r.t_arrive) if realtime
+                            else self._now(),
+                            budget_iters=r.budget_iters)
+            if realtime and not self.queue and not self.in_flight and pending:
+                dt = pending[0].t_arrive - (self._now() - t0)
+                if dt > 0:
+                    time.sleep(min(dt, 0.005))
+                continue
+            self.step_once()
+        return self.pop_completions()
+
+
+class ShardedContinuousRuntime:
+    """Continuous batching over a partitioned corpus: one lane-recycling
+    runtime per shard, a request fans out to every shard, and the harvest
+    side merges per-shard top-k with the SAME ``merge_topk`` as the
+    one-shot sharded path (bit-identical merged results). Counters follow
+    the sharded accounting: ``n_eval``/``n_grad`` sum over shards (total
+    work), ``n_iters`` is the max (shards step in parallel — the critical
+    path)."""
+
+    def __init__(self, engine: ExpansionEngine, params, index, n_lanes: int,
+                 query_dim: int, steps_per_tick: int = 4,
+                 now_fn: Callable[[], float] = time.perf_counter):
+        self.engine = engine
+        self.index = index
+        self.runtimes: List[ContinuousRuntime] = []
+        for s in range(index.n_shards):
+            # partitions are equal-shape by construction, so every shard
+            # runtime reuses the first one's jitted reset/tick — one
+            # compile, not n_shards identical ones
+            shared = (None if not self.runtimes else
+                      (self.runtimes[0]._reset_fn, self.runtimes[0]._tick_fn))
+            self.runtimes.append(ContinuousRuntime(
+                engine, params, index.base[s], index.neighbors[s], n_lanes,
+                query_dim, entry=int(index.entries[s]),
+                steps_per_tick=steps_per_tick, now_fn=now_fn,
+                shared_fns=shared))
+        self.metrics = ServingMetrics(n_lanes * index.n_shards)
+        self.completions: List[Completion] = []
+        self._partial: Dict[int, List[Completion]] = {}
+        self._rid_gen = itertools.count()
+        self._merge = jax.jit(_merge_one, static_argnames=("k",))
+
+    @property
+    def in_flight(self) -> int:
+        return max(rt.in_flight for rt in self.runtimes)
+
+    @property
+    def queued(self) -> int:
+        return max(len(rt.queue) for rt in self.runtimes)
+
+    def submit(self, query: np.ndarray, rid: Optional[int] = None,
+               deadline: Optional[float] = None,
+               t_arrive: Optional[float] = None,
+               budget_iters: Optional[int] = None) -> int:
+        """No per-request ``entry`` here (unlike the single-partition
+        runtime): entry ids are partition-LOCAL rows, so one global value
+        cannot mean anything across shards — each shard searches from its
+        own entry point."""
+        rid = rid if rid is not None else next(self._rid_gen)
+        for rt in self.runtimes:
+            rt.submit(query, rid=rid, deadline=deadline, t_arrive=t_arrive,
+                      budget_iters=budget_iters)
+        return rid
+
+    def step_once(self) -> List[Completion]:
+        for rt in self.runtimes:
+            rt.step_once()
+        # merged occupancy mirrors the per-shard tick observations (the
+        # sub-runtimes own the raw samples; without this the sharded
+        # report would always read occupancy 0)
+        self.metrics.sync_occupancy(
+            sum(rt.metrics._busy_steps for rt in self.runtimes),
+            sum(rt.metrics._lane_steps for rt in self.runtimes))
+        return self._merge_ready()
+
+    def _merge_ready(self) -> List[Completion]:
+        S = len(self.runtimes)
+        for s, rt in enumerate(self.runtimes):
+            for c in rt.pop_completions():
+                self._partial.setdefault(c.rid, [None] * S)[s] = c
+        out = []
+        for rid in [r for r, ps in self._partial.items()
+                    if all(p is not None for p in ps)]:
+            parts = self._partial.pop(rid)
+            k = self.engine.cfg.k
+            timed_out = any(p.record.timed_out for p in parts)
+            if timed_out:
+                # per-shard queues can disagree about a deadline (admit
+                # times differ per shard); a merged answer missing a whole
+                # partition's candidates is NOT a valid top-k, so the
+                # single-runtime contract holds end to end: timed out =>
+                # ids all -1
+                ids = np.full((k,), -1, np.int32)
+                scores = np.full((k,), -np.inf, np.float32)
+            else:
+                gl = [np.where(p.ids >= 0,
+                               self.index.global_ids[s][np.maximum(p.ids, 0)],
+                               -1) for s, p in enumerate(parts)]
+                ids, scores = self._merge(
+                    jnp.asarray(np.stack(gl))[None],
+                    jnp.asarray(np.stack([p.scores for p in parts]))[None],
+                    k=k)
+                ids, scores = np.asarray(ids)[0], np.asarray(scores)[0]
+            rec = RequestRecord(
+                rid, parts[0].record.t_arrive,
+                max(p.record.t_admit for p in parts),
+                max(p.record.t_done for p in parts),
+                sum(p.n_eval for p in parts), sum(p.n_grad for p in parts),
+                max(p.n_iters for p in parts), timed_out=timed_out)
+            c = Completion(rid, ids, scores,
+                           rec.n_eval, rec.n_grad, rec.n_iters, -1, rec)
+            self.metrics.observe(rec)
+            self.completions.append(c)
+            out.append(c)
+        return out
+
+    def pop_completions(self) -> List[Completion]:
+        out, self.completions = self.completions, []
+        return out
+
+    def run_stream(self, requests: Sequence[Request],
+                   realtime: bool = True) -> List[Completion]:
+        now_fn = self.runtimes[0]._now
+        pending = collections.deque(
+            sorted(requests, key=lambda r: r.t_arrive))
+        t0 = now_fn()
+        while pending or self.queued or self.in_flight or self._partial:
+            now = now_fn() - t0
+            while pending and (not realtime or pending[0].t_arrive <= now):
+                r = pending.popleft()
+                if r.entry is not None:
+                    raise ValueError(
+                        "Request.entry is partition-local and cannot be "
+                        "honored by the sharded runtime; leave it None")
+                self.submit(r.query, rid=r.rid, deadline=r.deadline,
+                            t_arrive=(t0 + r.t_arrive) if realtime
+                            else now_fn(),
+                            budget_iters=r.budget_iters)
+            if realtime and not self.queued and not self.in_flight \
+                    and not self._partial and pending:
+                dt = pending[0].t_arrive - (now_fn() - t0)
+                if dt > 0:
+                    time.sleep(min(dt, 0.005))
+                continue
+            self.step_once()
+        return self.pop_completions()
+
+
+def _merge_one(all_ids, all_scores, k: int):
+    from repro.core.sharded import merge_topk
+    return merge_topk(all_ids, all_scores, k)

@@ -75,13 +75,36 @@ true_ids, _ = brute_force_topk(measure, jnp.asarray(base), jnp.asarray(queries),
 idx = build_sharded_index(base, n_shards=4, m=8, k_construction=24)
 assert (idx.global_ids < 0).sum() == 4 * 258 - 1030
 cfg = SearchConfig(k=5, ef=32, mode="guitar", budget=6, alpha=1.1)
-ids, scores = sharded_search_host(measure, idx, queries, cfg, mesh)
+sres = sharded_search_host(measure, idx, queries, cfg, mesh)
+ids, scores = sres.ids, sres.scores
+assert sres.n_eval.shape == (8,) and (sres.n_eval >= 4).all()
+assert (sres.n_iters >= 1).all()
 for row in np.asarray(ids):
     real = row[row >= 0]
     assert len(set(real.tolist())) == real.size, f"duplicate ids in {row}"
 r = recall(jnp.asarray(ids), true_ids)
 assert r > 0.6, f"sharded search recall {r}"
 print("sharded search OK recall", r, "duplicate-free")
+
+# ---- 3b. continuous sharded runtime == one-shot sharded merge -------------
+# (per-shard lane recycling + merged harvest must be result-identical to the
+# shard_map all-gather merge, counters included)
+from repro.core import EngineOptions, build_engine
+from repro.serving import Request, ShardedContinuousRuntime
+
+eng = build_engine(measure, cfg, EngineOptions())
+rt = ShardedContinuousRuntime(eng, measure.params, idx, n_lanes=3,
+                              query_dim=12, steps_per_tick=2)
+order = np.random.default_rng(1).permutation(8)
+comps = rt.run_stream([Request(rid=int(i), query=queries[i]) for i in order],
+                      realtime=False)
+by = {c.rid: c for c in comps}
+for i in range(8):
+    assert np.array_equal(by[i].ids, np.asarray(ids)[i]), i
+    assert np.array_equal(by[i].scores, np.asarray(scores)[i]), i
+    assert by[i].n_eval == int(sres.n_eval[i]), i
+    assert by[i].n_iters == int(sres.n_iters[i]), i
+print("continuous sharded == oneshot sharded OK")
 
 # ---- 4. gradient compression across pod axis (simulated) ------------------
 from repro.train import compress

@@ -313,10 +313,14 @@ def test_sharded_options_pass_through(rng):
     idx = build_sharded_index(base, n_shards=2, m=8, k_construction=24)
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("model",))
     cfg = SearchConfig(k=5, ef=24, mode="guitar", budget=6, alpha=1.1)
-    ids0, _ = sharded_search_host(measure, idx, queries, cfg, mesh)
-    ids1, _ = sharded_search_host(
+    res0 = sharded_search_host(measure, idx, queries, cfg, mesh)
+    res1 = sharded_search_host(
         measure, idx, queries, cfg, mesh,
         EngineOptions(fused=True, corpus_dtype="int8"))
+    ids0, ids1 = res0.ids, res1.ids
+    # per-lane counters survive the sharded merge (SLA accounting)
+    assert res0.n_eval.shape == (queries.shape[0],)
+    assert (res0.n_eval >= 1).all() and (res0.n_iters >= 1).all()
     for row in np.asarray(ids1):
         real = row[row >= 0]
         assert len(set(real.tolist())) == real.size

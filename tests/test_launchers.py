@@ -31,3 +31,13 @@ def test_serve_launcher():
     out = _run("repro.launch.serve", "--items", "2000", "--queries", "64",
                "--batch", "32")
     assert "recall@10" in out
+
+
+@pytest.mark.slow
+def test_serve_launcher_continuous():
+    out = _run("repro.launch.serve", "--runtime", "continuous",
+               "--items", "2000", "--queries", "32", "--lanes", "8",
+               "--offered-qps", "300", "--ef", "32")
+    assert "recall@10" in out
+    assert "lane-occupancy" in out
+    assert "time-in-queue" in out
