@@ -25,8 +25,8 @@ import numpy as np
 from repro.configs.guitar_deepfm import (AMAZON_BENCH, TWITCH_BENCH,
                                          GuitarExperiment, measure_config)
 from repro.core import (Measure, SearchConfig, brute_force_topk,
-                        deepfm_measure, deepfm_numpy_fns, recall,
-                        search_legacy, search_measure)
+                        deepfm_measure, deepfm_numpy_fns, mlp_measure,
+                        recall, search_legacy, search_measure)
 from repro.data import make_interactions
 from repro.graph import GraphIndex, build_l2_graph
 from repro.models import deepfm as deepfm_lib
@@ -54,14 +54,70 @@ class BenchSystem:
     queries: np.ndarray
     graph: GraphIndex
     true_ids: Dict[int, np.ndarray]   # k -> (Q, k) ground truth
+    measure_family: str = "deepfm"    # registry family the sweeps run on
     # NOTE: the Measure (jit closure) is rebuilt via rebuild_measure() —
     # closures don't pickle into the bench cache.
 
 
+def _family_measure(family: str, params: dict,
+                    cfg: deepfm_lib.DeepFMConfig) -> Measure:
+    """The bench measure for a registry family over the system's vectors.
+    deepfm uses the trained measure MLP; mlp is a fresh deterministic
+    (PRNGKey(0)) 'heavier f' network over the same vectors — ground truth
+    is recomputed per family, so relative sweep claims stay valid."""
+    if family == "deepfm":
+        return deepfm_measure(params, cfg)
+    if family == "mlp":
+        import jax
+        return mlp_measure(jax.random.PRNGKey(0), cfg.vec_dim, cfg.vec_dim,
+                           hidden=(64, 64))
+    raise ValueError(f"unknown bench measure family {family!r}")
+
+
+def _base_fingerprint(sys: "BenchSystem") -> str:
+    """Identity of the trained system a derived-family cache was computed
+    from — derived pickles store it and are rebuilt when the base system
+    changes underneath them (cross-family sweeps must share one corpus)."""
+    import hashlib
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(sys.base).tobytes())
+    h.update(np.ascontiguousarray(sys.queries).tobytes())
+    h.update(np.ascontiguousarray(sys.graph.neighbors).tobytes())
+    return h.hexdigest()
+
+
 def build_system(exp: GuitarExperiment, train_steps: int = 60,
                  ks=(1, 10, 50, 100), seed: int = 0,
-                 cache: bool = True) -> BenchSystem:
+                 cache: bool = True,
+                 measure_family: str = "deepfm") -> BenchSystem:
     os.makedirs(CACHE_DIR, exist_ok=True)
+    if measure_family != "deepfm":
+        # non-deepfm families reuse the trained vectors + graph of the
+        # deepfm system (cached) and only relabel the ground truth under
+        # their own measure; the derived pickle is keyed to the base
+        # system's fingerprint so it can never outlive a retrain
+        base_sys = build_system(exp, train_steps, ks, seed, cache)
+        fp = _base_fingerprint(base_sys)
+        cpath = os.path.join(CACHE_DIR,
+                             f"{exp.name}-{measure_family}.pkl")
+        if cache and os.path.exists(cpath):
+            with open(cpath, "rb") as f:
+                payload = pickle.load(f)
+            if isinstance(payload, dict) and payload.get("base_fp") == fp:
+                return payload["sys"]
+        measure = _family_measure(measure_family, base_sys.params,
+                                  base_sys.cfg)
+        kmax = max(ks)
+        ids, _ = brute_force_topk(measure, jnp.asarray(base_sys.base),
+                                  jnp.asarray(base_sys.queries), kmax)
+        ids = np.asarray(ids)
+        sys = dataclasses.replace(
+            base_sys, true_ids={k: ids[:, :k] for k in ks},
+            measure_family=measure_family)
+        if cache:
+            with open(cpath, "wb") as f:
+                pickle.dump({"sys": sys, "base_fp": fp}, f)
+        return sys
     cpath = os.path.join(CACHE_DIR, f"{exp.name}.pkl")
     if cache and os.path.exists(cpath):
         with open(cpath, "rb") as f:
@@ -111,8 +167,10 @@ def build_system(exp: GuitarExperiment, train_steps: int = 60,
 
 def rebuild_measure(sys: BenchSystem) -> Measure:
     """Measure objects don't survive pickling of jitted closures cleanly —
-    rebuild from params."""
-    return deepfm_measure(sys.params, sys.cfg)
+    rebuild from params (+ the system's measure family; pre-family cache
+    pickles lack the field and default to deepfm)."""
+    family = getattr(sys, "measure_family", "deepfm")
+    return _family_measure(family, sys.params, sys.cfg)
 
 
 @dataclasses.dataclass
@@ -229,3 +287,21 @@ def expansion_bytes_model(Q: int, B: int, C: int, D: int,
     stage_rank = 2 * Q * B * D * 4
     stage_measure = 2 * Q * C * D * 4
     return gather + stage_rank + stage_measure
+
+
+def grad_stage_bytes_model(Q: int, D: int, corpus_dtype: str = "float32",
+                           fused: bool = False) -> int:
+    """Corpus-side HBM bytes the GRAD stage moves per expansion step
+    (DESIGN.md §8, grad extension). Pre-gathered path: the engine gathers
+    the (Q, D) frontier (residency-width corpus read), stages it as a fp32
+    block (one HBM write), and the grad stage reads it back — 3 passes.
+    Index-fused path (``grad_fused``): the kernel reads each frontier row
+    once, straight from the resident corpus, in residency width, plus ONE
+    fp32 write of the dequantized rows it hands the rank stage (charged
+    honestly — that write replaces the engine's whole gather+stage+read
+    cycle). int8 adds 4 bytes/row of scale traffic."""
+    s = _DTYPE_BYTES[corpus_dtype]
+    scale = 4 if corpus_dtype == "int8" else 0
+    if fused:
+        return Q * (D * s + scale) + Q * D * 4
+    return Q * (D * s + scale) + 2 * Q * D * 4

@@ -14,11 +14,15 @@ from benchmarks.common import (build_system, csv_row, frontier, run_sweep,
 
 
 def run(datasets=("twitch",), ks=(1, 10, 100), quick: bool = False,
-        searcher: str = "engine"):
+        searcher: str = "engine", measures=("deepfm",)):
+    """``measures``: registry measure families to sweep (benchmarks/common
+    rebuilds ground truth per family — the frontier comparison is
+    like-for-like within a family)."""
     rows = []
     exps = {"twitch": TWITCH_BENCH, "amazon": AMAZON_BENCH}
-    for ds in datasets:
-        sys = build_system(exps[ds])
+    for ds, family in ((d, m) for d in datasets for m in measures):
+        sys = build_system(exps[ds], measure_family=family)
+        label = ds if family == "deepfm" else f"{ds}+{family}"
         for k in ks:
             efs = [max(k, e) for e in ((16, 64) if quick else (8, 16, 32, 64, 128, 256))]
             sl2g = frontier(run_sweep(sys, "sl2g", k, efs=efs,
@@ -27,17 +31,17 @@ def run(datasets=("twitch",), ks=(1, 10, 100), quick: bool = False,
                                         searcher=searcher))
             for p in sl2g:
                 rows.append(csv_row(
-                    f"fig4/{ds}/top{k}/sl2g/ef{p.ef}", 1e6 / max(p.qps, 1e-9),
+                    f"fig4/{label}/top{k}/sl2g/ef{p.ef}", 1e6 / max(p.qps, 1e-9),
                     f"recall={p.recall:.3f};total={p.total_evals:.0f}"))
             for p in guitar:
                 rows.append(csv_row(
-                    f"fig4/{ds}/top{k}/guitar/ef{p.ef}", 1e6 / max(p.qps, 1e-9),
+                    f"fig4/{label}/top{k}/guitar/ef{p.ef}", 1e6 / max(p.qps, 1e-9),
                     f"recall={p.recall:.3f};total={p.total_evals:.0f}"))
             for level in (0.8, 0.9):
                 s = speedup_at_recall(guitar, sl2g, level)
                 if s:
                     rows.append(csv_row(
-                        f"fig4/{ds}/top{k}/speedup@{level:.0%}", 0.0,
+                        f"fig4/{label}/top{k}/speedup@{level:.0%}", 0.0,
                         f"guitar_total_advantage={s:.2f}x"))
     return rows
 

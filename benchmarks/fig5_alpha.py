@@ -5,8 +5,11 @@ from __future__ import annotations
 from benchmarks.common import build_system, csv_row, frontier, run_sweep, TWITCH_BENCH
 
 
-def run(quick: bool = False):
-    sys = build_system(TWITCH_BENCH)
+def run(quick: bool = False, measure: str = "deepfm"):
+    """``measure``: registry measure family — the alpha frontier runs on
+    any bundle (ground truth rebuilt per family by benchmarks/common)."""
+    sys = build_system(TWITCH_BENCH, measure_family=measure)
+    label = "twitch" if measure == "deepfm" else f"twitch+{measure}"
     rows = []
     efs = (16, 64) if quick else (8, 16, 32, 64, 128, 256)
     for k in (1, 100):
@@ -16,7 +19,8 @@ def run(quick: bool = False):
                                      alpha=alpha))
             best = max(pts, key=lambda p: p.recall)
             rows.append(csv_row(
-                f"fig5/twitch/top{k}/alpha{alpha}", 1e6 / max(best.qps, 1e-9),
+                f"fig5/{label}/top{k}/alpha{alpha}",
+                1e6 / max(best.qps, 1e-9),
                 f"best_recall={best.recall:.3f};total={best.total_evals:.0f};"
                 f"evals={best.n_eval:.0f};grads={best.n_grad:.0f}"))
     return rows

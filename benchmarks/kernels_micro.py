@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, expansion_bytes_model
+from benchmarks.common import (csv_row, expansion_bytes_model,
+                               grad_stage_bytes_model)
 from repro.models import layers as L
 from repro.utils import timeit
 
@@ -196,10 +197,147 @@ def bench_fused_corpus(quick: bool = False):
     return rows, gate_ok
 
 
+def bench_grad_kernels(quick: bool = False):
+    """The kernel-backed gradient stage (the stage the cost model charges
+    double): analytic forward+backward kernels vs the generic
+    vmap(jax.value_and_grad) stage, pre-gathered and index-fused, plus the
+    §8-style grad bytes-model gate. CPU wall-clock is reported, not gated
+    (same latency-bound-gather caveat as the fused score gate). Returns
+    (rows, gate_ok)."""
+    from repro.core import deepfm_measure, make_corpus_store, mlp_measure
+    from repro.kernels.deepfm_grad import deepfm_value_and_grad
+    from repro.kernels.deepfm_grad_fused import deepfm_grad_fused
+    from repro.kernels.mlp_grad import mlp_value_and_grad
+    from repro.models import deepfm as deepfm_lib
+
+    rows = []
+    rng = np.random.default_rng(0)
+    Q = 512 if quick else 2048
+    reps = 4 if quick else 8
+    cfg_m = deepfm_lib.DeepFMConfig()
+    params, _ = deepfm_lib.init_measure(jax.random.PRNGKey(0), cfg_m)
+    measure = deepfm_measure(params, cfg_m)
+    D = cfg_m.vec_dim
+    x = jnp.asarray(rng.normal(size=(Q, D)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(Q, D)).astype(np.float32))
+
+    f = lambda xx, qq: measure.score_fn(measure.params, xx, qq)
+    vmap_fn = jax.jit(jax.vmap(jax.value_and_grad(f)))
+    kern_fn = jax.jit(lambda a, b: deepfm_value_and_grad(
+        a, b, params["mlp"], cfg_m.fm_dim, use_pallas=False))
+    base = jnp.asarray(rng.normal(size=(20_000, D)).astype(np.float32))
+    store = make_corpus_store(base, "float32")
+    fid = jnp.asarray(rng.integers(0, 20_000, size=(Q,)).astype(np.int32))
+    fused_fn = jax.jit(lambda i, b: deepfm_grad_fused(
+        store, i, b, params["mlp"], cfg_m.fm_dim, use_pallas=False))
+
+    mm = mlp_measure(jax.random.PRNGKey(1), D, D, hidden=(64, 64))
+    fm = lambda xx, qq: mm.score_fn(mm.params, xx, qq)
+    mlp_vmap_fn = jax.jit(jax.vmap(jax.value_and_grad(fm)))
+    mlp_kern_fn = jax.jit(lambda a, b: mlp_value_and_grad(
+        a, b, mm.params, use_pallas=False))
+
+    def bench(fn, *args):
+        jax.block_until_ready(fn(*args))                 # compile
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_vmap = bench(vmap_fn, x, q)
+    t_kern = bench(kern_fn, x, q)
+    t_fused = bench(fused_fn, fid, q)
+    t_mvmap = bench(mlp_vmap_fn, x, q)
+    t_mkern = bench(mlp_kern_fn, x, q)
+    # measured invariant behind the bit-match pins: the analytic kernels
+    # reproduce autodiff exactly at fp32
+    _, g_v = vmap_fn(x, q)
+    _, g_k = kern_fn(x, q)
+    exact = bool(np.array_equal(np.asarray(g_v), np.asarray(g_k)))
+    rows += [
+        csv_row("kernels/deepfm_grad_vmap", t_vmap * 1e6 / Q, f"Q={Q}"),
+        csv_row("kernels/deepfm_grad_kernel", t_kern * 1e6 / Q,
+                f"Q={Q};x={t_vmap / t_kern:.2f};fp32_bitmatch={exact}"),
+        csv_row("kernels/deepfm_grad_fused", t_fused * 1e6 / Q,
+                f"Q={Q};x={t_vmap / t_fused:.2f}"),
+        csv_row("kernels/mlp_grad_vmap", t_mvmap * 1e6 / Q, f"Q={Q}"),
+        csv_row("kernels/mlp_grad_kernel", t_mkern * 1e6 / Q,
+                f"Q={Q};x={t_mvmap / t_mkern:.2f}"),
+    ]
+    # the gate: §8-style grad bytes model — fused grad vs the fp32
+    # pre-gathered grad stage (plus the bf16-residency ratio, reported)
+    bytes_unfused = grad_stage_bytes_model(Q, D, "float32", False)
+    model_x = bytes_unfused / grad_stage_bytes_model(Q, D, "float32", True)
+    model_x_bf16 = bytes_unfused / grad_stage_bytes_model(Q, D, "bfloat16",
+                                                          True)
+    gate_ok = model_x >= 1.3 and exact
+    rows.append(csv_row(
+        "gate/fused_grad", 0.0,
+        f"model_x={model_x:.2f};model_x_bf16={model_x_bf16:.2f}"
+        f";cpu_x={t_vmap / t_fused:.2f};fp32_bitmatch={exact}"
+        f";threshold=1.3;pass={gate_ok}"))
+    return rows, gate_ok
+
+
+def bench_multi_measure(quick: bool = True):
+    """Registry smoke: for every servable family, the bundle-routed engine
+    (fused, kernel grad on) must reproduce the generic vmap/autodiff
+    engine bit-for-bit at fp32 — the invariant that makes kernel routing a
+    pure performance decision. Returns (rows, gate_ok)."""
+    from repro.core import (EngineOptions, SearchConfig, list_families,
+                            make_family_measure, search_measure)
+    from repro.graph import build_l2_graph
+
+    n, Q, dim = (3000, 32, 32) if quick else (20_000, 64, 40)
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(n, dim)).astype(np.float32)
+    graph = build_l2_graph(base, m=12, k_construction=32)
+    queries = jnp.asarray(rng.normal(size=(Q, dim)).astype(np.float32))
+    entries = jnp.full((Q,), graph.entry, jnp.int32)
+    base_j, nbrs_j = jnp.asarray(base), jnp.asarray(graph.neighbors)
+    cfg = SearchConfig(k=10, ef=48, budget=8, alpha=1.01)
+    rows, gate_ok = [], True
+    for family in ("deepfm", "mlp"):
+        assert family in list_families()
+        measure = make_family_measure(family, jax.random.PRNGKey(0), dim)
+        variants = {
+            "generic": EngineOptions(measure_impl="vmap", grad_impl="vmap"),
+            "bundle": EngineOptions(),
+            "bundle_fused": EngineOptions(fused=True),
+        }
+        res, lat = {}, {}
+        for label, opts in variants.items():
+            fn = lambda o=opts: search_measure(measure, base_j, nbrs_j,
+                                               queries, entries, cfg, o)
+            jax.block_until_ready(fn().ids)              # compile
+            t0 = time.perf_counter()
+            r = fn()
+            jax.block_until_ready(r.ids)
+            res[label], lat[label] = r, time.perf_counter() - t0
+        ok = all(
+            np.array_equal(np.asarray(res["generic"].ids),
+                           np.asarray(res[v].ids))
+            and np.array_equal(np.asarray(res["generic"].scores),
+                               np.asarray(res[v].scores))
+            for v in ("bundle", "bundle_fused"))
+        gate_ok = gate_ok and ok
+        for label, t in lat.items():
+            rows.append(csv_row(
+                f"measures/{family}/{label}", t * 1e6 / Q,
+                f"n={n};qps={Q / t:.0f};parity={ok}"))
+    rows.append(csv_row("gate/multi_measure", 0.0,
+                        f"families=deepfm+mlp;fused_grad=on;pass={gate_ok}"))
+    return rows, gate_ok
+
+
 def run(quick: bool = False):
     rows = bench_engine_vs_legacy(quick)
     fused_rows, _ = bench_fused_corpus(quick)
     rows += fused_rows
+    grad_rows, _ = bench_grad_kernels(quick)
+    rows += grad_rows
     k = jax.random.PRNGKey(0)
     # measure-eval batch: fused ref vs unfused python composition
     from repro.kernels.deepfm_score.ref import deepfm_score_ref
@@ -235,18 +373,27 @@ def run(quick: bool = False):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke-fused", action="store_true",
-                    help="quick fused-path sweep + gate (CI smoke)")
+                    help="quick fused-path sweep + gates (CI smoke; "
+                         "includes the grad-kernel rows)")
+    ap.add_argument("--smoke-measures", action="store_true",
+                    help="registry-resolved multi-measure engine parity "
+                         "smoke (deepfm + mlp, fused grad on)")
     ap.add_argument("--gate", action="store_true",
-                    help="exit 1 if the fused-bf16 gate fails")
+                    help="exit 1 if any gate row fails")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     if args.smoke_fused:
         rows, gate_ok = bench_fused_corpus(quick=True)
+        grad_rows, grad_ok = bench_grad_kernels(quick=True)
+        rows += grad_rows
+        gate_ok = gate_ok and grad_ok
+    elif args.smoke_measures:
+        rows, gate_ok = bench_multi_measure(quick=True)
     else:
         rows = run(quick=args.quick)
         gate_ok = True
         for r in rows:
-            if r.startswith("gate/fused_bf16") and "pass=False" in r:
+            if r.startswith("gate/") and "pass=False" in r:
                 gate_ok = False
     for r in rows:
         print(r)

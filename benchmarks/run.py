@@ -89,8 +89,12 @@ def main() -> None:
     jobs = [
         ("fig4", lambda: fig4_recall_qps.run(
             datasets=("twitch",) if quick else ("twitch", "amazon"),
-            ks=(1, 10) if quick else (1, 10, 50, 100), quick=quick)),
-        ("fig5", lambda: fig5_alpha.run(quick=quick)),
+            ks=(1, 10) if quick else (1, 10, 50, 100), quick=quick,
+            # multi-measure frontier: the registry-resolved mlp bundle
+            # sweeps alongside deepfm (quick keeps the reduced ef grid)
+            measures=("deepfm", "mlp"))),
+        ("fig5", lambda: fig5_alpha.run(quick=quick)
+         + fig5_alpha.run(quick=quick, measure="mlp")),
         ("table2", lambda: table2_breakdown.run(quick=quick)),
         ("fig6", lambda: fig6_projection.run(quick=quick)),
         ("fig7", lambda: fig7_begin.run(quick=quick)),

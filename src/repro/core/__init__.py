@@ -5,8 +5,12 @@ from repro.core.corpus import (  # noqa: F401
     quantize_rows_int8,
 )
 from repro.core.measures import (  # noqa: F401
-    Measure, deepfm_measure, deepfm_numpy_fns, inner_product_measure,
-    l2_measure, mlp_measure,
+    MEASURE_FAMILIES, Measure, deepfm_measure, deepfm_numpy_fns,
+    inner_product_measure, l2_measure, make_family_measure, mlp_measure,
+)
+from repro.core.bundles import (  # noqa: F401
+    MeasureKernelBundle, get_bundle, list_families, register_bundle,
+    resolve_stages,
 )
 from repro.core.engine import (  # noqa: F401
     EngineOptions, ExpansionEngine, build_engine, build_engine_from_fn,

@@ -1,0 +1,281 @@
+"""Measure-kernel bundle registry (DESIGN.md §10).
+
+Kernel routing used to be an if-statement: ``engine._build`` sniffed
+``meta == ('deepfm', fm_dim)`` and hardwired the DeepFM scoring kernel,
+so every other measure — including the MLP measure the serving demo runs —
+fell through to vmap fallbacks, and every future measure meant an engine
+patch. This module makes measure→stage dispatch an architecture instead:
+
+- A **``MeasureKernelBundle``** declares, for one measure *family*, the
+  stage factories the engine may route through: ``score`` (flattened
+  (M, D) candidate scorer), ``score_fused`` (index-fused: store + ids in),
+  ``grad`` ((Q, D) frontier value+gradient), and ``grad_fused``
+  (index-fused grad: store + frontier ids in, (vals, grads, x) out — the
+  dequantized frontier rows ride along so the rank stage needs no second
+  gather). Each factory is ``(meta, options) -> stage``; any slot may be
+  ``None``.
+- A ``Measure`` joins a family by advertising ``meta = (family, *args)``
+  (e.g. ``('deepfm', fm_dim)`` — the historical tuple keeps resolving);
+  extra meta entries parameterize the factories.
+- ``resolve_stages`` is the ONLY dispatch path: it looks the family up in
+  the registry and fills every missing slot (unknown family, absent
+  factory, or an explicit ``measure_impl='vmap'`` / ``grad_impl='vmap'``
+  override) with the universal fallback bundle — the generic
+  ``vmap(score_fn)`` / ``vmap(jax.value_and_grad(score_fn))`` stages that
+  work for ANY JAX-expressible measure.
+
+New measures (DCN-v2, a BST cross-encoder, ...) arrive as a
+``register_bundle`` call plus kernels — never as an engine change.
+
+Every resolved stage carries a ``bundle_family`` attribute ("generic" for
+fallbacks) so launchers and tests can see how routing resolved.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.deepfm_grad import deepfm_value_and_grad
+from repro.kernels.deepfm_grad_fused import deepfm_grad_fused
+from repro.kernels.deepfm_score import deepfm_score
+from repro.kernels.deepfm_score_fused import deepfm_score_fused
+from repro.kernels.mlp_grad import mlp_grad_fused, mlp_value_and_grad
+from repro.kernels.mlp_score import mlp_score, mlp_score_fused
+
+# (meta, options) -> stage callable. ``options`` is the engine's
+# EngineOptions (duck-typed here to keep this module import-light).
+StageFactory = Callable[[Tuple, Any], Callable]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasureKernelBundle:
+    """Stage factories for one measure family. Slots left ``None`` fall
+    back to the generic vmap/autodiff stages at resolution time (partial
+    bundles are first-class: register only what you have kernels for)."""
+    family: str
+    score: Optional[StageFactory] = None
+    score_fused: Optional[StageFactory] = None
+    grad: Optional[StageFactory] = None
+    grad_fused: Optional[StageFactory] = None
+
+    def slots(self) -> Dict[str, bool]:
+        return {s: getattr(self, s) is not None
+                for s in ("score", "score_fused", "grad", "grad_fused")}
+
+
+_REGISTRY: Dict[str, MeasureKernelBundle] = {}
+
+
+def register_bundle(bundle: MeasureKernelBundle,
+                    overwrite: bool = False) -> MeasureKernelBundle:
+    if not overwrite and bundle.family in _REGISTRY:
+        raise ValueError(f"bundle family {bundle.family!r} already "
+                         "registered (pass overwrite=True to replace)")
+    _REGISTRY[bundle.family] = bundle
+    return bundle
+
+
+def get_bundle(family: str) -> Optional[MeasureKernelBundle]:
+    return _REGISTRY.get(family)
+
+
+def resolve_bundle(meta: Optional[Tuple]) -> Optional[MeasureKernelBundle]:
+    """meta is a Measure's ``(family, *args)`` tuple (or None)."""
+    if not meta or not isinstance(meta, tuple):
+        return None
+    return _REGISTRY.get(meta[0])
+
+
+def list_families() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# the universal fallback bundle: generic vmap / autodiff stages
+# ---------------------------------------------------------------------------
+
+def make_vmap_measure_stage(score_fn):
+    def stage(params, vecs, qs):
+        return jax.vmap(
+            lambda x, q: score_fn(params, x, q))(vecs, qs).astype(jnp.float32)
+    return stage
+
+
+def make_vmap_measure_fused_stage(score_fn):
+    """Generic index-fused scorer: the gather-dequant fuses into the vmapped
+    measure under jit — no engine-level candidate block."""
+    def stage(params, store, idx, qs):
+        vecs = store.take(idx)
+        return jax.vmap(
+            lambda x, q: score_fn(params, x, q))(vecs, qs).astype(jnp.float32)
+    return stage
+
+
+def make_grad_stage(score_fn):
+    def stage(params, x, q):
+        f = lambda xx, qq: score_fn(params, xx, qq)
+        vals, grads = jax.vmap(jax.value_and_grad(f))(x, q)
+        return vals.astype(jnp.float32), grads
+    return stage
+
+
+def _tag(stage, family: str):
+    stage.bundle_family = family
+    return stage
+
+
+class ResolvedStages(NamedTuple):
+    """What ``resolve_stages`` hands the engine builder. ``measure_fused``
+    and ``grad_fused`` are None unless ``options.fused``; ``grad_fused`` is
+    additionally None when the family has no fused grad kernel — the engine
+    then gathers the frontier itself and runs the plain ``grad`` stage (the
+    generic fused fallback, bit-identical at fp32 residency)."""
+    measure: Callable
+    measure_fused: Optional[Callable]
+    grad: Callable
+    grad_fused: Optional[Callable]
+
+
+def _use_kernel(impl: str) -> bool:
+    # 'vmap' is the explicit generic-fallback override; 'auto'/'pallas'
+    # route through the registry (the stage itself picks Pallas vs its jnp
+    # ref per backend, exactly like the rank stages)
+    return impl != "vmap"
+
+
+def resolve_stages(score_fn, meta: Optional[Tuple],
+                   options: Any) -> ResolvedStages:
+    """The single measure→stage dispatch path (no measure-name conditionals
+    anywhere else). score_fn backs every fallback slot; ``options`` is the
+    engine's EngineOptions (``measure_impl`` gates score slots,
+    ``grad_impl`` gates grad slots, ``fused`` enables the fused slots)."""
+    bundle = resolve_bundle(meta)
+    fam = bundle.family if bundle is not None else "generic"
+
+    def pick(slot: str, impl: str, fallback):
+        factory = getattr(bundle, slot, None) if bundle is not None else None
+        if factory is not None and _use_kernel(impl):
+            return _tag(factory(meta, options), fam)
+        return _tag(fallback(), "generic") if fallback is not None else None
+
+    measure = pick("score", options.measure_impl,
+                   lambda: make_vmap_measure_stage(score_fn))
+    grad = pick("grad", options.grad_impl,
+                lambda: make_grad_stage(score_fn))
+    measure_fused = grad_fused = None
+    if options.fused:
+        measure_fused = pick("score_fused", options.measure_impl,
+                             lambda: make_vmap_measure_fused_stage(score_fn))
+        grad_fused = pick("grad_fused", options.grad_impl, None)
+    return ResolvedStages(measure, measure_fused, grad, grad_fused)
+
+
+# ---------------------------------------------------------------------------
+# concrete bundles: DeepFM (the paper's measure) and the generic MLP measure
+# ---------------------------------------------------------------------------
+
+def use_pallas_impl(impl: str) -> bool:
+    """The one backend-routing predicate (engine rank stages share it):
+    'pallas' forces the kernel, 'auto' uses it on TPU only."""
+    return impl == "pallas" or (impl == "auto"
+                                and jax.default_backend() == "tpu")
+
+
+def _deepfm_score_stage(meta, options):
+    fm_dim = int(meta[1])
+
+    def stage(params, vecs, qs):
+        return deepfm_score(
+            vecs, qs, params["mlp"], fm_dim=fm_dim,
+            use_pallas=use_pallas_impl(options.measure_impl),
+            interpret=options.interpret)
+    return stage
+
+
+def _deepfm_score_fused_stage(meta, options):
+    fm_dim = int(meta[1])
+
+    def stage(params, store, idx, qs):
+        return deepfm_score_fused(
+            store, idx, qs, params["mlp"], fm_dim=fm_dim,
+            use_pallas=use_pallas_impl(options.measure_impl),
+            interpret=options.interpret)
+    return stage
+
+
+def _deepfm_grad_stage(meta, options):
+    fm_dim = int(meta[1])
+
+    def stage(params, x, q):
+        return deepfm_value_and_grad(
+            x, q, params["mlp"], fm_dim=fm_dim,
+            use_pallas=use_pallas_impl(options.grad_impl),
+            interpret=options.interpret)
+    return stage
+
+
+def _deepfm_grad_fused_stage(meta, options):
+    fm_dim = int(meta[1])
+
+    def stage(params, store, fid, q):
+        return deepfm_grad_fused(
+            store, fid, q, params["mlp"], fm_dim=fm_dim,
+            use_pallas=use_pallas_impl(options.grad_impl),
+            interpret=options.interpret)
+    return stage
+
+
+def _mlp_score_stage(meta, options):
+    def stage(params, vecs, qs):
+        return mlp_score(
+            vecs, qs, params,
+            use_pallas=use_pallas_impl(options.measure_impl),
+            interpret=options.interpret)
+    return stage
+
+
+def _mlp_score_fused_stage(meta, options):
+    def stage(params, store, idx, qs):
+        return mlp_score_fused(
+            store, idx, qs, params,
+            use_pallas=use_pallas_impl(options.measure_impl),
+            interpret=options.interpret)
+    return stage
+
+
+def _mlp_grad_stage(meta, options):
+    def stage(params, x, q):
+        return mlp_value_and_grad(
+            x, q, params,
+            use_pallas=use_pallas_impl(options.grad_impl),
+            interpret=options.interpret)
+    return stage
+
+
+def _mlp_grad_fused_stage(meta, options):
+    def stage(params, store, fid, q):
+        return mlp_grad_fused(
+            store, fid, q, params,
+            use_pallas=use_pallas_impl(options.grad_impl),
+            interpret=options.interpret)
+    return stage
+
+
+register_bundle(MeasureKernelBundle(
+    family="deepfm",
+    score=_deepfm_score_stage,
+    score_fused=_deepfm_score_fused_stage,
+    grad=_deepfm_grad_stage,
+    grad_fused=_deepfm_grad_fused_stage,
+))
+
+register_bundle(MeasureKernelBundle(
+    family="mlp",
+    score=_mlp_score_stage,
+    score_fused=_mlp_score_fused_stage,
+    grad=_mlp_grad_stage,
+    grad_fused=_mlp_grad_fused_stage,
+))

@@ -8,12 +8,22 @@ restructures the search as ONE iteration-major loop over the whole query
 batch, with each algorithmic phase a swappable *stage*:
 
     pop      batched frontier pop over the (Q, ef) pools
-    grad     one batched value_and_grad over the (Q, D) frontier (GUITAR)
+    grad     one batched value+gradient over the (Q, D) frontier (GUITAR) —
+             an analytic forward+backward kernel when the measure family
+             registers one (bit-identical to ``vmap(jax.value_and_grad)``
+             at fp32), the generic autodiff stage otherwise
     rank     Eq. 3/4 neighbor ranking — Pallas ``neighbor_rank`` kernel on
              TPU, pure-jnp ``ref`` fallback elsewhere
-    measure  a single flattened (Q·C, D) evaluation per step — the Pallas
-             ``deepfm_score`` kernel when the measure is DeepFM
+    measure  a single flattened (Q·C, D) evaluation per step — a Pallas
+             scoring kernel when the measure family registers one
     insert   batched pool insert + packed visited-bitmap update
+
+Measure→stage dispatch flows exclusively through the ``MeasureKernelBundle``
+registry (core/bundles.py): a measure advertises ``meta = (family, *args)``
+and ``_build`` resolves its score/grad stages (and their index-fused
+variants) from the registered bundle, with the generic vmap/``jax.grad``
+stages as the universal fallback. New measures arrive as a bundle
+registration, never as an engine change.
 
 Strategies are *configurations* of the same engine rather than branches in
 the loop body: SL2G = no grad stage + select-all rank; GUITAR = grad stage +
@@ -27,10 +37,11 @@ Two execution paths share the exact same stage code:
   iteration — stages are observable (call-counting doubles, tracing).
 
 Index-fused corpus residency (DESIGN.md §8): with ``EngineOptions(fused=
-True)`` the rank and measure stages take ``(store, idx)`` instead of
-pre-gathered vectors — the row gather happens inside the Pallas kernels
-(scalar-prefetch indexing) or fuses into the jnp ref — so the (Q, B, D)
-neighbor block and the flattened (Q·C, D) candidate block never hit HBM.
+True)`` the rank, measure, and (when the bundle registers one) grad stages
+take ``(store, idx)`` instead of pre-gathered vectors — the row gather
+happens inside the Pallas kernels (scalar-prefetch indexing) or fuses into
+the jnp ref — so the (Q, B, D) neighbor block, the flattened (Q·C, D)
+candidate block, and the (Q, D) frontier block never hit HBM.
 ``EngineOptions(corpus_dtype=...)`` holds the corpus resident in fp32,
 bf16, or per-row-scaled int8 (dequantize-on-gather); the fp32 fused path
 is bit-identical to the pre-gathered stages (tests pin it).
@@ -49,9 +60,12 @@ from typing import Any, Callable, NamedTuple, Optional, Protocol, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.bundles import (  # noqa: F401  (re-exported compat surface)
+    MeasureKernelBundle, make_grad_stage, make_vmap_measure_fused_stage,
+    make_vmap_measure_stage, register_bundle, resolve_stages,
+    use_pallas_impl,
+)
 from repro.core.corpus import CorpusStore, as_corpus_store
-from repro.kernels.deepfm_score import deepfm_score
-from repro.kernels.deepfm_score_fused import deepfm_score_fused
 from repro.kernels.neighbor_rank import neighbor_rank
 from repro.kernels.neighbor_rank.ref import neighbor_rank_ref
 from repro.kernels.neighbor_rank_fused import neighbor_rank_fused
@@ -89,12 +103,20 @@ class EngineOptions:
     """Backend knobs; hashable so engines can be cached per (fn, cfg, opts).
 
     rank_impl:    'auto' (Pallas on TPU, ref elsewhere) | 'pallas' | 'ref'
-    measure_impl: 'auto' (Pallas DeepFM kernel on TPU, vmap elsewhere)
-                  | 'pallas' | 'vmap'
+    measure_impl: routing for the score stages: 'auto' resolves the
+                  measure's registered kernel bundle (Pallas on TPU, its
+                  jnp ref elsewhere), 'pallas' forces the Pallas path,
+                  'vmap' forces the generic vmapped-score fallback
+                  (bypasses the bundle)
+    grad_impl:    same trichotomy for the gradient stages: 'auto' resolves
+                  the bundle's analytic forward+backward kernel
+                  (bit-identical to vmap(jax.value_and_grad) at fp32),
+                  'pallas' forces Pallas, 'vmap' forces generic autodiff
     interpret:    force Pallas interpret mode (None = auto per backend)
-    fused:        index-fused rank/measure stages — gathers happen inside
-                  the kernels (or fuse into the jnp ref); the (Q, B, D) /
-                  (Q·C, D) pre-gathered blocks are never materialized
+    fused:        index-fused rank/measure/grad stages — gathers happen
+                  inside the kernels (or fuse into the jnp ref); the
+                  (Q, B, D) / (Q·C, D) / (Q, D) pre-gathered blocks are
+                  never materialized
     corpus_dtype: 'float32' | 'bfloat16' | 'int8' corpus residency;
                   non-fp32 dequantizes on gather (see core/corpus.py)
     """
@@ -104,6 +126,7 @@ class EngineOptions:
     block_q: int = 8
     fused: bool = False
     corpus_dtype: str = "float32"
+    grad_impl: str = "auto"
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +206,16 @@ class GradStage(Protocol):
         """(Q, D) frontier, (Q, Dq) queries -> ((Q,) values, (Q, D) grads)."""
 
 
+class FusedGradStage(Protocol):
+    def __call__(self, params: Any, store: CorpusStore, fid: jax.Array,
+                 q: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Index-fused gradient: store, (Q,) frontier ids, (Q, Dq) queries
+        -> ((Q,) values, (Q, D) grads, (Q, D) dequantized frontier rows).
+        The frontier gather happens inside the stage (scalar-prefetch +
+        dequant-on-gather); the returned ``x`` rows feed the rank stage so
+        the engine never gathers the frontier itself."""
+
+
 class RankStage(Protocol):
     def __call__(self, x: jax.Array, grad: Optional[jax.Array],
                  nvecs: jax.Array, valid: jax.Array
@@ -237,17 +270,8 @@ def default_pop_stage(state: EngineState) -> Tuple[EngineState, PopOut]:
     return state._replace(pool_expanded=expanded), PopOut(slot, fid, active)
 
 
-def make_grad_stage(score_fn) -> GradStage:
-    def stage(params, x, q):
-        f = lambda xx, qq: score_fn(params, xx, qq)
-        vals, grads = jax.vmap(jax.value_and_grad(f))(x, q)
-        return vals.astype(jnp.float32), grads
-    return stage
-
-
-def _use_pallas(impl: str) -> bool:
-    return impl == "pallas" or (impl == "auto"
-                                and jax.default_backend() == "tpu")
+# the shared backend-routing predicate (core/bundles.py owns it)
+_use_pallas = use_pallas_impl
 
 
 def _select_top_c(key, in_range, valid, cfg: SearchConfig):
@@ -305,49 +329,6 @@ def select_all_rank_fused_stage(x, grad, store, idx, valid):
     Q, B = idx.shape
     sel_idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None, :], (Q, B))
     return sel_idx, valid
-
-
-def make_vmap_measure_stage(score_fn) -> MeasureStage:
-    def stage(params, vecs, qs):
-        return jax.vmap(
-            lambda x, q: score_fn(params, x, q))(vecs, qs).astype(jnp.float32)
-    return stage
-
-
-def make_vmap_measure_fused_stage(score_fn) -> FusedMeasureStage:
-    """Generic index-fused scorer: the gather-dequant fuses into the vmapped
-    measure under jit — no engine-level candidate block."""
-    def stage(params, store, idx, qs):
-        vecs = store.take(idx)
-        return jax.vmap(
-            lambda x, q: score_fn(params, x, q))(vecs, qs).astype(jnp.float32)
-    return stage
-
-
-def make_deepfm_measure_stage(fm_dim: int,
-                              options: EngineOptions = EngineOptions()
-                              ) -> MeasureStage:
-    """Fused DeepFM scorer over the flattened (Q·C, D) candidate block."""
-    def stage(params, vecs, qs):
-        use_pallas = options.measure_impl == "pallas" or (
-            options.measure_impl == "auto" and jax.default_backend() == "tpu")
-        return deepfm_score(vecs, qs, params["mlp"], fm_dim=fm_dim,
-                            use_pallas=use_pallas, interpret=options.interpret)
-    return stage
-
-
-def make_deepfm_measure_fused_stage(fm_dim: int,
-                                    options: EngineOptions = EngineOptions()
-                                    ) -> FusedMeasureStage:
-    """Index-fused DeepFM scorer: candidate ids in, scores out — the row
-    gather happens inside the Pallas kernel (or fuses into the jnp ref)."""
-    def stage(params, store, idx, qs):
-        use_pallas = options.measure_impl == "pallas" or (
-            options.measure_impl == "auto" and jax.default_backend() == "tpu")
-        return deepfm_score_fused(store, idx, qs, params["mlp"],
-                                  fm_dim=fm_dim, use_pallas=use_pallas,
-                                  interpret=options.interpret)
-    return stage
 
 
 def default_insert_stage(state: EngineState, ids: jax.Array,
@@ -410,10 +391,12 @@ class ExpansionEngine:
     use ``dataclasses.replace(engine, measure=...)`` to instrument or extend.
     ``grad=None`` skips the gradient phase (SL2G and other no-prune modes).
 
-    When ``rank_fused`` / ``measure_fused`` are set (``EngineOptions(fused=
-    True)``) the engine hands those stages ``(store, idx)`` and never
-    materializes the (Q, B, D) neighbor or (Q·C, D) candidate blocks; the
-    corpus is held resident per ``corpus_dtype`` (see core/corpus.py).
+    When ``rank_fused`` / ``measure_fused`` / ``grad_fused`` are set
+    (``EngineOptions(fused=True)``) the engine hands those stages ``(store,
+    idx)`` and never materializes the (Q, B, D) neighbor, (Q·C, D)
+    candidate, or (Q, D) frontier blocks; the corpus is held resident per
+    ``corpus_dtype`` (see core/corpus.py). ``grad_fused`` also returns the
+    dequantized frontier rows, so the engine skips its own frontier gather.
     """
     cfg: SearchConfig
     pop: PopStage
@@ -424,6 +407,7 @@ class ExpansionEngine:
     rank_fused: Optional[FusedRankStage] = None
     measure_fused: Optional[FusedMeasureStage] = None
     corpus_dtype: str = "float32"
+    grad_fused: Optional[FusedGradStage] = None
 
     # -- candidates per expansion (static; fixes the flattened batch shape)
     def n_candidates(self, max_degree: int) -> int:
@@ -514,16 +498,23 @@ class ExpansionEngine:
         Q = queries.shape[0]
         s, pop = self.pop(state)
 
-        x = store.take(pop.fid)                        # (Q, D) f32
         nbr = neighbors[pop.fid]                       # (Q, B)
         nbr_safe = jnp.maximum(nbr, 0)
         valid = (nbr >= 0) & ~bit_test_rows(s.visited, nbr) \
             & pop.active[:, None]
 
-        if self.grad is not None:
+        if self.grad_fused is not None:
+            # the fused grad stage gathers (and dequantizes) the frontier
+            # rows in-kernel and hands them back for the rank stage — the
+            # (Q, D) block never stages through fp32 HBM
+            _, g, x = self.grad_fused(params, store, pop.fid, queries)
+            n_grad = s.n_grad + pop.active.astype(jnp.int32)
+        elif self.grad is not None:
+            x = store.take(pop.fid)                    # (Q, D) f32
             _, g = self.grad(params, x, queries)
             n_grad = s.n_grad + pop.active.astype(jnp.int32)
         else:
+            x = store.take(pop.fid)                    # (Q, D) f32
             g, n_grad = None, s.n_grad
 
         if self.rank_fused is not None:
@@ -636,29 +627,26 @@ class ExpansionEngine:
 
 def _build(score_fn, meta, cfg: SearchConfig,
            options: EngineOptions) -> ExpansionEngine:
-    is_deepfm = meta is not None and len(meta) == 2 and meta[0] == "deepfm" \
-        and options.measure_impl != "vmap"
-    if is_deepfm:
-        measure_stage = make_deepfm_measure_stage(int(meta[1]), options)
-    else:
-        measure_stage = make_vmap_measure_stage(score_fn)
+    """Assemble an engine. Measure→stage selection flows exclusively
+    through the ``MeasureKernelBundle`` registry (``resolve_stages``) —
+    this builder contains no measure-name or meta-tuple conditionals."""
+    stages = resolve_stages(score_fn, meta, options)
     if cfg.mode == "guitar":
-        grad = make_grad_stage(score_fn)
+        grad, grad_fused = stages.grad, stages.grad_fused
         rank = make_guitar_rank_stage(cfg, options)
-    else:
-        grad = None
-        rank = select_all_rank_stage
-    rank_fused = measure_fused = None
-    if options.fused:
         rank_fused = make_guitar_rank_fused_stage(cfg, options) \
-            if cfg.mode == "guitar" else select_all_rank_fused_stage
-        measure_fused = make_deepfm_measure_fused_stage(int(meta[1]), options) \
-            if is_deepfm else make_vmap_measure_fused_stage(score_fn)
+            if options.fused else None
+    else:
+        grad = grad_fused = None
+        rank = select_all_rank_stage
+        rank_fused = select_all_rank_fused_stage if options.fused else None
     return ExpansionEngine(cfg=cfg, pop=default_pop_stage, rank=rank,
-                           measure=measure_stage, insert=default_insert_stage,
+                           measure=stages.measure,
+                           insert=default_insert_stage,
                            grad=grad, rank_fused=rank_fused,
-                           measure_fused=measure_fused,
-                           corpus_dtype=options.corpus_dtype)
+                           measure_fused=stages.measure_fused,
+                           corpus_dtype=options.corpus_dtype,
+                           grad_fused=grad_fused)
 
 
 @functools.lru_cache(maxsize=128)
@@ -667,19 +655,24 @@ def _build_cached(score_fn, meta, cfg, options):
 
 
 def build_engine_from_fn(score_fn, cfg: SearchConfig,
-                         options: EngineOptions = EngineOptions()
-                         ) -> ExpansionEngine:
-    """Engine for a bare ``score_fn(params, x, q) -> scalar`` (generic vmap
-    measure stage). Cached per (score_fn, cfg, options) so repeated calls
-    reuse the compiled search."""
-    return _build_cached(score_fn, None, cfg, options)
+                         options: EngineOptions = EngineOptions(),
+                         meta: Optional[Tuple] = None) -> ExpansionEngine:
+    """Engine for a bare ``score_fn(params, x, q) -> scalar``. Pass the
+    measure's ``meta`` tuple to resolve its kernel bundle (the sharded path
+    does); without one the generic vmap/autodiff stages apply. Cached per
+    (score_fn, meta, cfg, options) so repeated calls reuse the compiled
+    search."""
+    meta = tuple(meta) if meta is not None else None
+    return _build_cached(score_fn, meta, cfg, options)
 
 
 def build_engine(measure, cfg: SearchConfig,
                  options: EngineOptions = EngineOptions()) -> ExpansionEngine:
-    """Engine for a ``Measure``. Uses the fused Pallas DeepFM scorer when the
-    measure advertises ``meta == ('deepfm', fm_dim)`` (and the backend /
-    options allow), otherwise the generic vmap measure stage."""
+    """Engine for a ``Measure``. Stage selection resolves the measure's
+    ``meta = (family, *args)`` against the ``MeasureKernelBundle`` registry
+    (core/bundles.py) — e.g. ``('deepfm', fm_dim)`` routes the score AND
+    gradient stages through the analytic DeepFM kernels — falling back to
+    the generic vmap stages for unregistered families."""
     meta = getattr(measure, "meta", None)
     meta = tuple(meta) if meta is not None else None
     return _build_cached(measure.score_fn, meta, cfg, options)

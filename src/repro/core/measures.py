@@ -65,14 +65,16 @@ def deepfm_measure(params: dict, cfg: deepfm_lib.DeepFMConfig) -> Measure:
 def mlp_measure(key: jax.Array, d_x: int, d_q: int,
                 hidden=(128, 128), name: str = "mlp") -> Measure:
     """Generic MLP measure f(x,q) = sigmoid(MLP([x, q])) — the 'heavier f'
-    regime where gradient pruning pays off most."""
+    regime where gradient pruning pays off most. ``meta=('mlp',)`` routes
+    the engine through the ``mlp_score`` / ``mlp_grad`` kernel bundle
+    (layer shapes are read off ``params`` at trace time)."""
     params, _ = L.init_mlp(key, [d_x + d_q, *hidden, 1], jnp.float32)
 
     def fn(p, x, q):
         h = jnp.concatenate([x, q], axis=-1)
         return jax.nn.sigmoid(L.mlp_apply(p, h, act=jax.nn.relu)[..., 0])
 
-    return Measure(name, fn, params)
+    return Measure(name, fn, params, meta=("mlp",))
 
 
 def inner_product_measure() -> Measure:
@@ -86,6 +88,37 @@ def l2_measure() -> Measure:
     def fn(p, x, q):
         return -jnp.sum(jnp.square(x - q), axis=-1)
     return Measure("l2", fn, {})
+
+
+# ---------------------------------------------------------------------------
+# Family constructors (registry-resolved launcher/benchmark entry points)
+# ---------------------------------------------------------------------------
+
+MEASURE_FAMILIES = ("deepfm", "mlp")
+
+
+def make_family_measure(family: str, key: jax.Array, dim: int,
+                        hidden=(64, 64)) -> Measure:
+    """Build a fresh measure of a registered kernel-bundle family over
+    ``dim``-dimensional item/user vectors. Deterministic in ``key`` — the
+    serving launcher and the index builder construct the SAME measure by
+    agreeing on the key, so a BEGIN index built offline matches the
+    measure served online. DeepFM splits ``dim`` as [fm(8) | deep(rest)]
+    (paper layout), shrinking fm_dim for tiny vectors."""
+    if family == "deepfm":
+        fm_dim = 8 if dim > 8 else max(1, dim // 2)
+        if len(hidden) != 2:
+            # the DeepFM kernel trio is specialized to the paper's
+            # 2-hidden-layer measure MLP; square the first width up
+            hidden = (hidden[0], hidden[0])
+        cfg = deepfm_lib.DeepFMConfig(fm_dim=fm_dim, deep_dim=dim - fm_dim,
+                                      mlp_hidden=tuple(hidden))
+        params, _ = deepfm_lib.init_measure(key, cfg)
+        return deepfm_measure(params, cfg)
+    if family == "mlp":
+        return mlp_measure(key, dim, dim, hidden=tuple(hidden))
+    raise ValueError(f"unknown measure family {family!r}; known: "
+                     f"{MEASURE_FAMILIES}")
 
 
 # ---------------------------------------------------------------------------

@@ -92,16 +92,20 @@ def merge_topk(all_ids: jax.Array, all_scores: jax.Array, k: int
 
 
 def make_sharded_search(score_fn, mesh: Mesh, cfg: SearchConfig,
-                        options: EngineOptions = EngineOptions()):
+                        options: EngineOptions = EngineOptions(),
+                        meta=None):
     """Returns a jitted fn(measure_params, sh_base, sh_nbrs, sh_entries,
     sh_gids, queries) -> SearchResult under shard_map: merged global ids /
     scores (Q, k) plus per-query counters (n_eval/n_grad summed over
     shards, n_iters max — see ``local_search``). ``measure_params`` is an
     ordinary (replicated) pytree argument so the whole service step can be
-    lowered abstractly for the dry-run."""
+    lowered abstractly for the dry-run. ``meta`` is the measure's
+    ``(family, *args)`` tuple — it resolves the per-shard engine's kernel
+    bundle exactly as in the single-partition path (None = generic
+    vmap/autodiff stages)."""
     axis = "model"
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    engine = build_engine_from_fn(score_fn, cfg, options)
+    engine = build_engine_from_fn(score_fn, cfg, options, meta=meta)
 
     def local_search(measure_params, base, nbrs, entry, gids, queries):
         # shard_map blocks: base (1, Np, D), queries (Qlocal, Dq).
@@ -153,8 +157,10 @@ def sharded_search_host(measure: Measure, index: ShardedIndex,
     counters. ``options`` passes straight through to the per-shard engine —
     index-fused stages and bf16/int8 corpus residency apply per partition
     (each shard quantizes its own rows; row scales keep the format
-    partition-local)."""
-    fn = make_sharded_search(measure.score_fn, mesh, cfg, options)
+    partition-local) — and the measure's ``meta`` resolves the kernel
+    bundle per shard (registry routing is shard-transparent)."""
+    fn = make_sharded_search(measure.score_fn, mesh, cfg, options,
+                             meta=getattr(measure, "meta", None))
     args = (measure.params, jnp.asarray(index.base),
             jnp.asarray(index.neighbors), jnp.asarray(index.entries),
             jnp.asarray(index.global_ids), jnp.asarray(queries))

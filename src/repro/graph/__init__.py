@@ -2,4 +2,6 @@ from repro.graph.build import (  # noqa: F401
     GraphIndex, brute_force_knn, build_l2_graph, medoid, nn_descent,
     occlusion_prune, occlusion_prune_ref, symmetrize, symmetrize_ref,
 )
-from repro.graph.io import load_corpus_store, load_index, save_index  # noqa: F401
+from repro.graph.io import (  # noqa: F401
+    load_corpus_store, load_index, load_index_meta, save_index,
+)

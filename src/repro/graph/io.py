@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Tuple, Union
+from typing import Optional, Tuple, Union
 
 import numpy as np
 
@@ -69,11 +69,14 @@ def _decode_base(arrays: dict, corpus_dtype: str) -> np.ndarray:
     raise ValueError(f"index has unknown corpus_dtype {corpus_dtype!r}")
 
 
-def save_index(path: str, index, corpus_dtype: str = "float32") -> str:
+def save_index(path: str, index, corpus_dtype: str = "float32",
+               extra_meta: Optional[dict] = None) -> str:
     """Write a GraphIndex or ShardedIndex under directory ``path``, with the
     base vectors stored in ``corpus_dtype`` residency (fp32 exact; bf16 /
-    per-row int8 quantized — 2x / ~4x smaller payload). Returns the path to
-    the meta file."""
+    per-row int8 quantized — 2x / ~4x smaller payload). ``extra_meta``:
+    JSON-serializable provenance merged into meta.json (e.g. the measure
+    family a BEGIN graph was built under — serve.py warns on mismatch).
+    Returns the path to the meta file."""
     from repro.core.sharded import ShardedIndex  # local: avoid import cycle
 
     os.makedirs(path, exist_ok=True)
@@ -99,7 +102,7 @@ def save_index(path: str, index, corpus_dtype: str = "float32") -> str:
 
     np.savez_compressed(os.path.join(path, _ARRAYS), **arrays)
     meta = {"format_version": FORMAT_VERSION, "kind": kind,
-            "corpus_dtype": corpus_dtype, **meta}
+            "corpus_dtype": corpus_dtype, **meta, **(extra_meta or {})}
     meta_path = os.path.join(path, _META)
     with open(meta_path, "w") as f:
         json.dump(meta, f, indent=2, sort_keys=True)
@@ -107,6 +110,16 @@ def save_index(path: str, index, corpus_dtype: str = "float32") -> str:
 
 
 def _read(path: str) -> Tuple[dict, dict]:
+    meta = load_index_meta(path)
+    with np.load(os.path.join(path, _ARRAYS)) as z:
+        arrays = {k: z[k] for k in z.files}
+    return meta, arrays
+
+
+def load_index_meta(path: str) -> dict:
+    """The parsed meta.json of an index directory (version-checked) —
+    construction provenance (``graph_kind``, ``measure_family``) included.
+    Callers should use this instead of re-opening the file themselves."""
     with open(os.path.join(path, _META)) as f:
         meta = json.load(f)
     version = meta.get("format_version")
@@ -115,9 +128,7 @@ def _read(path: str) -> Tuple[dict, dict]:
         raise ValueError(
             f"index at {path!r} has format_version={version!r}; this reader "
             f"supports 1..{FORMAT_VERSION}")
-    with np.load(os.path.join(path, _ARRAYS)) as z:
-        arrays = {k: z[k] for k in z.files}
-    return meta, arrays
+    return meta
 
 
 def load_index(path: str) -> Union[GraphIndex, "ShardedIndex"]:

@@ -14,6 +14,17 @@ ops.py (jit'd public wrapper with interpret/fallback switches), ref.py
                  indexing over the (fp32/bf16/int8) resident corpus, so the
                  pre-gathered (Q·C, D) / (Q, B, D) blocks never hit HBM
                  (quant.py holds the shared in-kernel dequant)
+  deepfm_grad / deepfm_grad_fused
+                 analytic forward+backward for the GUITAR grad stage (the
+                 cost the paper charges double) — fp32 refs bit-match
+                 vmap(jax.value_and_grad); the fused variant gathers the
+                 frontier row by scalar-prefetch index and hands the
+                 dequantized row to the rank stage
+  mlp_score / mlp_grad
+                 the generic MLP measure promoted to first-class kernel
+                 status (score + analytic grad, pre-gathered AND fused
+                 entry points, any MLP depth) — resolved via the
+                 core/bundles.py measure-kernel registry
   embedding_bag  FBGEMM-TBE-style gather + segment-sum bag lookup (recsys)
   decode_attn    flash-decode GQA attention over a KV cache (LM serving)
   flash_attn     causal flash-attention forward (FA-2 schedule) — the §Perf

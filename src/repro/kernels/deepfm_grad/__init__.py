@@ -1,0 +1,1 @@
+from repro.kernels.deepfm_grad.ops import deepfm_value_and_grad  # noqa: F401

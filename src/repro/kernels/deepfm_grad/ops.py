@@ -1,0 +1,64 @@
+"""Public wrapper for the analytic DeepFM grad kernel: padding, interpret
+switch, and the bit-matching jnp fallback for non-TPU backends."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.deepfm_grad.kernel import deepfm_grad_pallas
+from repro.kernels.deepfm_grad.ref import deepfm_value_and_grad_ref
+
+
+def check_deepfm_mlp_depth(w) -> None:
+    """The DeepFM kernel trio is specialized to the paper's 2-hidden-layer
+    measure MLP (3 weight matrices). Refuse anything else loudly — a
+    truncated forward/backward would otherwise run without shape errors
+    and silently mis-rank (use ``EngineOptions(measure_impl='vmap',
+    grad_impl='vmap')`` or register a custom bundle for deeper MLPs)."""
+    if len(w) != 3:
+        raise ValueError(
+            f"deepfm kernels support exactly 3 MLP weight matrices (the "
+            f"paper's 2-hidden-layer measure), got {len(w)}; force the "
+            f"generic stages via EngineOptions(measure_impl='vmap', "
+            f"grad_impl='vmap') or register a custom bundle")
+
+
+def deepfm_value_and_grad(cand: jax.Array, query: jax.Array,
+                          mlp_params: dict, fm_dim: int = 8,
+                          block_n: int = 128, use_pallas: bool = True,
+                          interpret: bool | None = None):
+    """cand: (N, D) item rows; query: (N, D) or a single (D,) user vector;
+    mlp_params: {'w': [w0, w1, w2], 'b': [b0, b1, b2]}. Returns
+    (vals (N,) f32, grads (N, D) f32) with grads = df/d cand (paper Eq. 2).
+
+    The jnp fallback is fp32 bit-identical to
+    ``jax.vmap(jax.value_and_grad(score))`` — see ref.py."""
+    w = [jnp.asarray(x, jnp.float32) for x in mlp_params["w"]]
+    b = [jnp.asarray(x, jnp.float32) for x in mlp_params["b"]]
+    check_deepfm_mlp_depth(w)
+    deep_dim = cand.shape[1] - fm_dim
+    if not use_pallas:
+        if query.ndim == 1:
+            query = jnp.broadcast_to(query[None, :], cand.shape)
+        return deepfm_value_and_grad_ref(cand, query, w[0], b[0], w[1], b[1],
+                                         w[2], b[2], fm_dim)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    N = cand.shape[0]
+    block_n = min(block_n, max(8, N))
+    pad = (-N) % block_n
+    if pad:
+        cand = jnp.pad(cand, ((0, pad), (0, 0)))
+    q_shared = query.ndim == 1
+    if q_shared:
+        q_arg = query[None, :]
+    elif pad:
+        q_arg = jnp.pad(query, ((0, pad), (0, 0)))
+    else:
+        q_arg = query
+    vals, grads = deepfm_grad_pallas(
+        cand.astype(jnp.float32), q_arg.astype(jnp.float32),
+        w[0], b[0], w[1], b[1], w[2], b[2],
+        fm_dim=fm_dim, deep_dim=deep_dim, block_n=block_n,
+        q_shared=q_shared, interpret=interpret)
+    return vals[:N], grads[:N]

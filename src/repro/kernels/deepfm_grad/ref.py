@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the analytic DeepFM value+gradient kernel.
+
+The backward is hand-derived (one pass, no autodiff machinery) but is
+written as a vmap of the per-sample program so XLA lowers it to exactly the
+batched contractions ``jax.vmap(jax.value_and_grad(score))`` produces —
+fp32 outputs are **bit-identical** to the autodiff grad stage (tests pin
+this; it is what lets the kernel grad stage replace the autodiff stage in
+the engine without perturbing a single search trajectory). The ingredients
+that make the float programs coincide: per-sample vector matmuls (batched
+only by vmap), relu backward as an ``acts > 0`` mask, ``g @ W.T`` input
+cotangents, and the sigmoid derivative as ``f * (1 - f)`` (jax.nn.sigmoid's
+own custom-jvp form).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def deepfm_value_and_grad_ref(cand: jax.Array, query: jax.Array, w0, b0, w1,
+                              b1, w2, b2, fm_dim: int = 8):
+    """cand: (M, D) item rows; query: (M, D) user rows (pre-broadcast);
+    D = fm_dim + deep_dim. Returns (vals (M,) f32, grads (M, D) f32) where
+    ``grads = df/d cand`` — the paper's Eq. 2 ascent direction.
+
+    f = sigmoid(<x_fm, q_fm> + MLP([q_deep, x_deep]))"""
+    Ws = (w0, w1, w2)
+    bs = (b0, b1, b2)
+    deep_dim = cand.shape[-1] - fm_dim
+
+    def one(x, q):
+        fm = jnp.sum(x[:fm_dim] * q[:fm_dim], axis=-1)
+        h = jnp.concatenate([q[fm_dim:], x[fm_dim:]], axis=-1)
+        acts = [h]
+        for i in range(len(Ws)):
+            h = h @ Ws[i] + bs[i]
+            if i < len(Ws) - 1:
+                h = jax.nn.relu(h)
+            acts.append(h)
+        val = jax.nn.sigmoid(fm + h[0])
+        g_logit = val * (1.0 - val)
+        g = g_logit[None]                                  # (1,)
+        for i in range(len(Ws) - 1, -1, -1):
+            g = g @ Ws[i].T
+            if i > 0:
+                g = g * (acts[i] > 0)
+        # deep input is [q_deep, x_deep]: the x cotangent is the tail half
+        gx = jnp.concatenate([g_logit * q[:fm_dim], g[deep_dim:]], axis=-1)
+        return val.astype(jnp.float32), gx.astype(jnp.float32)
+
+    return jax.vmap(one)(cand, query)

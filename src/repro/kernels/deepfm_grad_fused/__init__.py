@@ -1,0 +1,1 @@
+from repro.kernels.deepfm_grad_fused.ops import deepfm_grad_fused  # noqa: F401

@@ -1,0 +1,120 @@
+"""Index-fused analytic DeepFM grad kernel (frontier ids in, grads out).
+
+The pre-gathered ``deepfm_grad`` kernel consumes a (Q, D) fp32 frontier
+block the engine staged through HBM (gather + dequant as a separate pass).
+This variant takes the resident corpus and the (Q,) frontier-id vector: the
+grid walks lanes and each step's corpus BlockSpec selects row ``fid[m]``
+via scalar-prefetch indexing, dequantizing bf16/int8 residency in VMEM
+(``quant.load_row_f32``), so the frontier block never exists in fp32 HBM.
+Because the row is already resident in VMEM — and the rank stage needs the
+same row for its diffs — the kernel also writes the dequantized frontier
+row out, turning the engine's separate gather-dequant pass into a single
+(Q, D) store.
+
+Per step: forward FM dot + two MLP GEMVs with pre-activations kept live,
+then the analytic backward (sigmoid derivative, transposed GEMVs, relu
+masks, FM closing term). Same math as ``deepfm_grad`` — fp32 residency is
+bit-identical to it (and hence to ``vmap(jax.value_and_grad)``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quant import load_row_f32
+
+
+def _grad_body(row, q_ref, w0_ref, b0_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+               w0t_ref, w1t_ref, w2t_ref, val_ref, grad_ref, x_ref, *,
+               fm_dim: int, deep_dim: int):
+    q = q_ref[0, :]                                       # (D,)
+    fm = jnp.sum(row[:fm_dim] * q[:fm_dim])
+    deep_in = jnp.concatenate(
+        [q[fm_dim: fm_dim + deep_dim], row[fm_dim: fm_dim + deep_dim]]
+    )[None, :]                                            # (1, 2*deep)
+    z0 = jnp.dot(deep_in, w0_ref[...],
+                 preferred_element_type=jnp.float32) + b0_ref[...][None, :]
+    h0 = jnp.maximum(z0, 0.0)
+    z1 = jnp.dot(h0, w1_ref[...],
+                 preferred_element_type=jnp.float32) + b1_ref[...][None, :]
+    h1 = jnp.maximum(z1, 0.0)
+    logit = jnp.dot(h1, w2_ref[...], preferred_element_type=jnp.float32)[0, 0]
+    val = jax.nn.sigmoid(logit + b2_ref[...][0] + fm)
+    g_logit = val * (1.0 - val)
+    g1 = jnp.where(z1 > 0, g_logit * w2t_ref[...], 0.0)   # (1, H2)
+    g0 = jnp.dot(g1, w1t_ref[...], preferred_element_type=jnp.float32)
+    g0 = jnp.where(z0 > 0, g0, 0.0)
+    g_in = jnp.dot(g0, w0t_ref[...],
+                   preferred_element_type=jnp.float32)[0]  # (2*deep,)
+    val_ref[0] = val
+    grad_ref[0, :] = jnp.concatenate(
+        [g_logit * q[:fm_dim], g_in[deep_dim:]])
+    x_ref[0, :] = row
+
+
+def _kernel(idx_ref, row_ref, q_ref, w0, b0, w1, b1, w2, b2, w0t, w1t, w2t,
+            val_ref, grad_ref, x_ref, *, fm_dim: int, deep_dim: int):
+    _grad_body(load_row_f32(row_ref), q_ref, w0, b0, w1, b1, w2, b2,
+               w0t, w1t, w2t, val_ref, grad_ref, x_ref,
+               fm_dim=fm_dim, deep_dim=deep_dim)
+
+
+def _kernel_q8(idx_ref, row_ref, scale_ref, q_ref, w0, b0, w1, b1, w2, b2,
+               w0t, w1t, w2t, val_ref, grad_ref, x_ref, *, fm_dim: int,
+               deep_dim: int):
+    row = load_row_f32(row_ref) * scale_ref[0, 0]
+    _grad_body(row, q_ref, w0, b0, w1, b1, w2, b2, w0t, w1t, w2t,
+               val_ref, grad_ref, x_ref, fm_dim=fm_dim, deep_dim=deep_dim)
+
+
+@functools.partial(jax.jit, static_argnames=("fm_dim", "deep_dim",
+                                             "interpret"))
+def deepfm_grad_fused_pallas(data, scales, idx, query, w0, b0, w1, b1,
+                             w2, b2, *, fm_dim: int = 8, deep_dim: int = 32,
+                             interpret: bool = False):
+    """data: (N, D) resident corpus (f32/bf16/int8); scales: (N, 1) f32 for
+    int8 else None; idx: (Q,) int32 frontier ids (pre-clamped >= 0); query:
+    (Q, D) per-lane user rows. Returns (vals (Q,), grads (Q, D),
+    x (Q, D) dequantized frontier rows)."""
+    Q = idx.shape[0]
+    D = data.shape[1]
+    quant = scales is not None
+    w2t = w2[:, 0][None, :]
+    row_at = lambda m, idx_ref: (idx_ref[m], 0)
+    full = lambda *s: pl.BlockSpec(s, lambda m, idx_ref: tuple(0 for _ in s))
+    in_specs = [pl.BlockSpec((1, D), row_at)]
+    args = [data]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 1), row_at))
+        args.append(scales)
+        body = functools.partial(_kernel_q8, fm_dim=fm_dim, deep_dim=deep_dim)
+    else:
+        body = functools.partial(_kernel, fm_dim=fm_dim, deep_dim=deep_dim)
+    in_specs += [
+        pl.BlockSpec((1, query.shape[1]), lambda m, idx_ref: (m, 0)),
+        full(*w0.shape), full(*b0.shape),
+        full(*w1.shape), full(*b1.shape),
+        full(*w2.shape), full(*b2.shape),
+        full(*w0.T.shape), full(*w1.T.shape), full(*w2t.shape),
+    ]
+    args += [query, w0, b0, w1, b1, w2, b2, w0.T, w1.T, w2t]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q,),
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((1,), lambda m, idx_ref: (m,)),
+                   pl.BlockSpec((1, D), lambda m, idx_ref: (m, 0)),
+                   pl.BlockSpec((1, D), lambda m, idx_ref: (m, 0))),
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((Q,), jnp.float32),
+                   jax.ShapeDtypeStruct((Q, D), jnp.float32),
+                   jax.ShapeDtypeStruct((Q, D), jnp.float32)),
+        interpret=interpret,
+    )(idx, *args)

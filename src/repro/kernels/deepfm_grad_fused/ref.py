@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the index-fused DeepFM grad kernel: gather + dequant
+rows from the resident corpus and defer to the pre-gathered analytic oracle
+— bit-exact with it (and with ``vmap(jax.value_and_grad)``) at float32
+residency, since ``CorpusStore.take`` is an exact gather there."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.corpus import CorpusStore
+from repro.kernels.deepfm_grad.ref import deepfm_value_and_grad_ref
+
+
+def deepfm_grad_fused_ref(store: CorpusStore, idx: jax.Array,
+                          query: jax.Array, w0, b0, w1, b1, w2, b2,
+                          fm_dim: int = 8):
+    """store: resident corpus; idx: (Q,) int32 frontier ids (clamped >= 0);
+    query: (Q, D) user rows. Returns (vals (Q,), grads (Q, D), x (Q, D))."""
+    x = store.take(idx)                          # (Q, D) f32, dequantized
+    vals, grads = deepfm_value_and_grad_ref(x, query, w0, b0, w1, b1, w2, b2,
+                                            fm_dim)
+    return vals, grads, x

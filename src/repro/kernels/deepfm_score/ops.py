@@ -9,6 +9,16 @@ from repro.kernels.deepfm_score.kernel import deepfm_score_pallas
 from repro.kernels.deepfm_score.ref import deepfm_score_ref
 
 
+def _check_depth(w) -> None:
+    # specialized to the paper's 2-hidden-layer measure MLP; a deeper
+    # params list would silently truncate (see kernels/deepfm_grad/ops.py)
+    if len(w) != 3:
+        raise ValueError(
+            f"deepfm kernels support exactly 3 MLP weight matrices, got "
+            f"{len(w)}; force the generic stages via EngineOptions("
+            f"measure_impl='vmap', grad_impl='vmap')")
+
+
 def deepfm_score(cand: jax.Array, query: jax.Array, mlp_params: dict,
                  fm_dim: int = 8, block_n: int = 256,
                  use_pallas: bool = True, interpret: bool | None = None
@@ -22,6 +32,7 @@ def deepfm_score(cand: jax.Array, query: jax.Array, mlp_params: dict,
     copy the old path materialized before padding is never built."""
     w = [jnp.asarray(x, jnp.float32) for x in mlp_params["w"]]
     b = [jnp.asarray(x, jnp.float32) for x in mlp_params["b"]]
+    _check_depth(w)
     deep_dim = cand.shape[1] - fm_dim
     if not use_pallas:
         if query.ndim == 1:

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.corpus import CorpusStore
+from repro.kernels.deepfm_score.ops import _check_depth
 from repro.kernels.deepfm_score_fused.kernel import deepfm_score_fused_pallas
 from repro.kernels.deepfm_score_fused.ref import deepfm_score_fused_ref
 
@@ -21,6 +22,7 @@ def deepfm_score_fused(store: CorpusStore, idx: jax.Array, query: jax.Array,
     idx = jnp.maximum(idx, 0).astype(jnp.int32)
     w = [jnp.asarray(a, jnp.float32) for a in mlp_params["w"]]
     b = [jnp.asarray(a, jnp.float32) for a in mlp_params["b"]]
+    _check_depth(w)
     if not use_pallas:
         return deepfm_score_fused_ref(store, idx, query, w[0], b[0], w[1],
                                       b[1], w[2], b[2], fm_dim)

@@ -1,0 +1,1 @@
+from repro.kernels.mlp_grad.ops import mlp_grad_fused, mlp_value_and_grad  # noqa: F401

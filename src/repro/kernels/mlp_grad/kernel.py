@@ -1,0 +1,151 @@
+"""Analytic MLP-measure forward+backward Pallas kernels (pre-gathered +
+index-fused) — the GUITAR grad stage for the generic MLP measure.
+
+One VMEM pass per row block: forward concat + L matmuls keeping every
+pre-activation resident, then the hand-derived backward (sigmoid
+derivative, transposed matmuls with relu masks off the resident
+pre-activations), writing the value lane and the df/dx gradient rows.
+ops.py passes the transposed weights pre-materialized so the backward
+matmuls are plain MXU contractions. The fused variant gathers the frontier
+row by scalar-prefetch index (dequant-on-gather) and also writes the
+dequantized row out for the rank stage — the (Q, Dx) frontier block never
+stages through fp32 HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quant import load_row_f32
+
+
+def _value_and_grad(h, wb_refs, wt_refs, n_layers: int, d_x: int):
+    """h: (BN, Dx+Dq) concat block. Returns (val (BN,), gx (BN, d_x))."""
+    zs = []
+    for i in range(n_layers):
+        w = wb_refs[2 * i][...]
+        b = wb_refs[2 * i + 1][...]
+        z = jnp.dot(h, w, preferred_element_type=jnp.float32) + b[None, :]
+        zs.append(z)
+        h = jnp.maximum(z, 0.0) if i < n_layers - 1 else z
+    val = jax.nn.sigmoid(h[:, 0])
+    g = (val * (1.0 - val))[:, None]                      # (BN, 1)
+    for i in range(n_layers - 1, -1, -1):
+        wt = wt_refs[i][...]
+        if wt.shape[0] == 1:                              # last layer: a row
+            g = g * wt                                    # (BN, H) via VPU
+        else:
+            g = jnp.dot(g, wt, preferred_element_type=jnp.float32)
+        if i > 0:
+            g = jnp.where(zs[i - 1] > 0, g, 0.0)
+    return val, g[:, :d_x]
+
+
+def _kernel(*refs, n_layers: int, d_x: int):
+    cand_ref, query_ref = refs[0], refs[1]
+    wb_refs = refs[2: 2 + 2 * n_layers]
+    wt_refs = refs[2 + 2 * n_layers: 2 + 3 * n_layers]
+    val_ref, grad_ref = refs[-2], refs[-1]
+    cand = cand_ref[...]                                  # (BN, Dx)
+    query = jnp.broadcast_to(query_ref[...],
+                             (cand.shape[0], query_ref.shape[-1]))
+    h = jnp.concatenate([cand, query], axis=-1)
+    val, gx = _value_and_grad(h, wb_refs, wt_refs, n_layers, d_x)
+    val_ref[...] = val
+    grad_ref[...] = gx
+
+
+def _wt_rows(Ws):
+    """Transposed weights for the backward; the last layer's (H, 1) column
+    becomes a (1, H) row so the kernel broadcasts it on the VPU."""
+    return [Ws[i].T if i < len(Ws) - 1 else Ws[i][:, 0][None, :]
+            for i in range(len(Ws))]
+
+
+@functools.partial(jax.jit, static_argnames=("n_layers", "block_n",
+                                             "q_shared", "interpret"))
+def mlp_grad_pallas(cand: jax.Array, query: jax.Array, *wbt,
+                    n_layers: int, block_n: int = 128,
+                    q_shared: bool = False, interpret: bool = False):
+    """cand: (N, Dx) with N % block_n == 0 (ops.py pads); query: (N, Dq)
+    rows or (1, Dq) shared; wbt: w0, b0, ..., then the transposed weights
+    (ops.py appends ``_wt_rows``). Returns (vals (N,), grads (N, Dx))."""
+    N, d_x = cand.shape
+    grid = (N // block_n,)
+    row_spec = pl.BlockSpec((block_n, d_x), lambda i: (i, 0))
+    q_spec = pl.BlockSpec((1, query.shape[1]), lambda i: (0, 0)) \
+        if q_shared else pl.BlockSpec((block_n, query.shape[1]),
+                                      lambda i: (i, 0))
+    full = lambda *s: pl.BlockSpec(s, lambda i: tuple(0 for _ in s))
+    return pl.pallas_call(
+        functools.partial(_kernel, n_layers=n_layers, d_x=d_x),
+        grid=grid,
+        in_specs=[row_spec, q_spec] + [full(*a.shape) for a in wbt],
+        out_specs=(pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((block_n, d_x), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((N,), jnp.float32),
+                   jax.ShapeDtypeStruct((N, d_x), jnp.float32)),
+        interpret=interpret,
+    )(cand, query, *wbt)
+
+
+def _kernel_fused(*refs, n_layers: int, d_x: int, quant: bool):
+    idx_ref, row_ref = refs[0], refs[1]
+    if quant:
+        scale_ref, rest = refs[2], refs[3:]
+        row = load_row_f32(row_ref) * scale_ref[0, 0]
+    else:
+        rest = refs[2:]
+        row = load_row_f32(row_ref)
+    q_ref = rest[0]
+    wb_refs = rest[1: 1 + 2 * n_layers]
+    wt_refs = rest[1 + 2 * n_layers: 1 + 3 * n_layers]
+    val_ref, grad_ref, x_ref = refs[-3], refs[-2], refs[-1]
+    h = jnp.concatenate([row, q_ref[0, :]])[None, :]
+    val, gx = _value_and_grad(h, wb_refs, wt_refs, n_layers, d_x)
+    val_ref[0] = val[0]
+    grad_ref[0, :] = gx[0]
+    x_ref[0, :] = row
+
+
+@functools.partial(jax.jit, static_argnames=("n_layers", "interpret"))
+def mlp_grad_fused_pallas(data, scales, idx, query, *wbt, n_layers: int,
+                          interpret: bool = False):
+    """data: (N, Dx) resident corpus; scales: (N, 1) f32 for int8 else None;
+    idx: (Q,) int32 frontier ids (pre-clamped >= 0); query: (Q, Dq) per-lane
+    rows. Returns (vals (Q,), grads (Q, Dx), x (Q, Dx))."""
+    Q = idx.shape[0]
+    D = data.shape[1]
+    quant = scales is not None
+    row_at = lambda m, idx_ref: (idx_ref[m], 0)
+    full = lambda *s: pl.BlockSpec(s, lambda m, idx_ref: tuple(0 for _ in s))
+    in_specs = [pl.BlockSpec((1, D), row_at)]
+    args = [data]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 1), row_at))
+        args.append(scales)
+    in_specs += [pl.BlockSpec((1, query.shape[1]),
+                              lambda m, idx_ref: (m, 0))]
+    in_specs += [full(*a.shape) for a in wbt]
+    args += [query, *wbt]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q,),
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((1,), lambda m, idx_ref: (m,)),
+                   pl.BlockSpec((1, D), lambda m, idx_ref: (m, 0)),
+                   pl.BlockSpec((1, D), lambda m, idx_ref: (m, 0))),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_fused, n_layers=n_layers, d_x=D,
+                          quant=quant),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((Q,), jnp.float32),
+                   jax.ShapeDtypeStruct((Q, D), jnp.float32),
+                   jax.ShapeDtypeStruct((Q, D), jnp.float32)),
+        interpret=interpret,
+    )(idx, *args)

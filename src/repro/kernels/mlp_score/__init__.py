@@ -1,0 +1,1 @@
+from repro.kernels.mlp_score.ops import mlp_score, mlp_score_fused  # noqa: F401

@@ -1,0 +1,121 @@
+"""MLP-measure scoring Pallas kernels (pre-gathered + index-fused).
+
+The generic MLP measure f(x, q) = sigmoid(MLP([x, q])) is the 'heavier f'
+regime the paper motivates — and the measure the serving demo and most
+tests run — yet until this kernel it only had the vmap fallback. Same
+shape as ``deepfm_score``: one VMEM-resident fusion per row block (concat,
+L small matmuls back-to-back on the MXU, one sigmoid lane out), with the
+layer count static per compile (MLP depth is a config constant).
+
+The index-fused variant walks candidates with a scalar-prefetch grid: each
+step's corpus BlockSpec selects row ``idx[m]``, dequantizing bf16/int8
+residency in VMEM, so the flattened (M, Dx) candidate block never exists
+in fp32 HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quant import load_row_f32
+
+
+def _forward(h, wb_refs, n_layers: int):
+    """h: (BN, Dx+Dq) concat block; wb_refs: [w0, b0, ..., wL-1, bL-1]."""
+    for i in range(n_layers):
+        w = wb_refs[2 * i][...]
+        b = wb_refs[2 * i + 1][...]
+        h = jnp.dot(h, w, preferred_element_type=jnp.float32) + b[None, :]
+        if i < n_layers - 1:
+            h = jnp.maximum(h, 0.0)
+    return jax.nn.sigmoid(h[:, 0])
+
+
+def _kernel(*refs, n_layers: int):
+    cand_ref, query_ref = refs[0], refs[1]
+    wb_refs, out_ref = refs[2:-1], refs[-1]
+    cand = cand_ref[...]                        # (BN, Dx)
+    query = jnp.broadcast_to(query_ref[...],
+                             (cand.shape[0], query_ref.shape[-1]))
+    h = jnp.concatenate([cand, query], axis=-1)
+    out_ref[...] = _forward(h, wb_refs, n_layers)
+
+
+@functools.partial(jax.jit, static_argnames=("n_layers", "block_n",
+                                             "q_shared", "interpret"))
+def mlp_score_pallas(cand: jax.Array, query: jax.Array, *wb,
+                     n_layers: int, block_n: int = 256,
+                     q_shared: bool = False,
+                     interpret: bool = False) -> jax.Array:
+    """cand: (N, Dx) with N % block_n == 0 (ops.py pads); query: (N, Dq)
+    rows or (1, Dq) shared; wb: w0, b0, ..., wL-1, bL-1. Returns (N,) f32."""
+    N, _ = cand.shape
+    grid = (N // block_n,)
+    row_spec = pl.BlockSpec((block_n, cand.shape[1]), lambda i: (i, 0))
+    q_spec = pl.BlockSpec((1, query.shape[1]), lambda i: (0, 0)) \
+        if q_shared else pl.BlockSpec((block_n, query.shape[1]),
+                                      lambda i: (i, 0))
+    full = lambda *s: pl.BlockSpec(s, lambda i: tuple(0 for _ in s))
+    return pl.pallas_call(
+        functools.partial(_kernel, n_layers=n_layers),
+        grid=grid,
+        in_specs=[row_spec, q_spec] + [full(*a.shape) for a in wb],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(cand, query, *wb)
+
+
+def _kernel_fused(*refs, n_layers: int, quant: bool):
+    idx_ref, row_ref = refs[0], refs[1]
+    if quant:
+        scale_ref, rest = refs[2], refs[3:]
+        row = load_row_f32(row_ref) * scale_ref[0, 0]
+    else:
+        rest = refs[2:]
+        row = load_row_f32(row_ref)
+    q_ref = rest[0]
+    wb_refs, out_ref = rest[1:-1], refs[-1]
+    h = jnp.concatenate([row, q_ref[0, :]])[None, :]
+    out_ref[0] = _forward(h, wb_refs, n_layers)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_layers", "q_shared",
+                                             "interpret"))
+def mlp_score_fused_pallas(data, scales, idx, query, *wb, n_layers: int,
+                           q_shared: bool = False,
+                           interpret: bool = False) -> jax.Array:
+    """data: (N, Dx) resident corpus; scales: (N, 1) f32 for int8 else None;
+    idx: (M,) int32 (pre-clamped >= 0); query: (M, Dq) rows or (1, Dq)
+    shared. Returns (M,) f32."""
+    M = idx.shape[0]
+    D = data.shape[1]
+    quant = scales is not None
+    row_at = lambda m, idx_ref: (idx_ref[m], 0)
+    q_at = (lambda m, idx_ref: (0, 0)) if q_shared \
+        else (lambda m, idx_ref: (m, 0))
+    full = lambda *s: pl.BlockSpec(s, lambda m, idx_ref: tuple(0 for _ in s))
+    in_specs = [pl.BlockSpec((1, D), row_at)]
+    args = [data]
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 1), row_at))
+        args.append(scales)
+    in_specs += [pl.BlockSpec((1, query.shape[1]), q_at)]
+    in_specs += [full(*a.shape) for a in wb]
+    args += [query, *wb]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1,), lambda m, idx_ref: (m,)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_fused, n_layers=n_layers, quant=quant),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M,), jnp.float32),
+        interpret=interpret,
+    )(idx, *args)

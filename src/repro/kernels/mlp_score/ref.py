@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the MLP measure kernels.
+
+Written as vmaps of the per-sample program (not hand-batched matmuls) so
+XLA lowers them to exactly the contractions the engine's generic
+``vmap(score_fn)`` stage produces — fp32 outputs are **bit-identical** to
+the vmap fallback stage (tests pin it), which means promoting the MLP
+measure from the generic stage to this kernel bundle cannot perturb a
+single search trajectory at fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.corpus import CorpusStore
+
+
+def mlp_score_ref(cand: jax.Array, query: jax.Array, Ws, bs) -> jax.Array:
+    """cand: (M, Dx); query: (M, Dq) (pre-broadcast). f(x, q) =
+    sigmoid(MLP([x, q])) — the generic 'heavier f' measure. Returns (M,)."""
+    def one(x, q):
+        h = jnp.concatenate([x, q], axis=-1)
+        for i in range(len(Ws)):
+            h = h @ Ws[i] + bs[i]
+            if i < len(Ws) - 1:
+                h = jax.nn.relu(h)
+        return jax.nn.sigmoid(h[0]).astype(jnp.float32)
+
+    return jax.vmap(one)(cand, query)
+
+
+def mlp_value_and_grad_ref(cand: jax.Array, query: jax.Array, Ws, bs):
+    """Analytic forward+backward of the MLP measure, per-sample-vmapped so
+    fp32 outputs bit-match ``vmap(jax.value_and_grad(score_fn))`` (same
+    recipe as kernels/deepfm_grad: relu backward as an ``acts > 0`` mask,
+    ``g @ W.T`` cotangents, sigmoid derivative ``f·(1-f)``). Returns
+    (vals (M,), grads (M, Dx)) with grads = df/d cand."""
+    d_x = cand.shape[-1]
+
+    def one(x, q):
+        h = jnp.concatenate([x, q], axis=-1)
+        acts = [h]
+        for i in range(len(Ws)):
+            h = h @ Ws[i] + bs[i]
+            if i < len(Ws) - 1:
+                h = jax.nn.relu(h)
+            acts.append(h)
+        val = jax.nn.sigmoid(h[0])
+        g = (val * (1.0 - val))[None]
+        for i in range(len(Ws) - 1, -1, -1):
+            g = g @ Ws[i].T
+            if i > 0:
+                g = g * (acts[i] > 0)
+        return val.astype(jnp.float32), g[:d_x].astype(jnp.float32)
+
+    return jax.vmap(one)(cand, query)
+
+
+def mlp_score_fused_ref(store: CorpusStore, idx: jax.Array, query: jax.Array,
+                        Ws, bs) -> jax.Array:
+    """Index-fused scorer oracle: gather + dequant, then the pre-gathered
+    oracle — bit-exact with it at fp32 residency."""
+    cand = store.take(idx)
+    if query.ndim == 1:
+        query = jnp.broadcast_to(query[None, :], (cand.shape[0],
+                                                  query.shape[0]))
+    return mlp_score_ref(cand, query, Ws, bs)
+
+
+def mlp_grad_fused_ref(store: CorpusStore, idx: jax.Array, query: jax.Array,
+                       Ws, bs):
+    """Index-fused grad oracle. Returns (vals (Q,), grads (Q, Dx),
+    x (Q, Dx) dequantized frontier rows)."""
+    x = store.take(idx)
+    vals, grads = mlp_value_and_grad_ref(x, query, Ws, bs)
+    return vals, grads, x

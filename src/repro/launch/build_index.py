@@ -9,6 +9,11 @@ construction and serving are separate jobs at scale.
     # corpus-sharded index (4 partitions) over a synthetic corpus
     PYTHONPATH=src python -m repro.launch.build_index \
         --items 20000 --dim 32 --shards 4 --out runs/sharded-index
+
+    # measure-aware (BEGIN) index under the registry-resolved measure —
+    # the same deterministic measure serve.py builds for that family/dim
+    PYTHONPATH=src python -m repro.launch.build_index \
+        --items 10000 --dim 32 --graph begin --measure deepfm --out runs/bg
 """
 from __future__ import annotations
 
@@ -18,6 +23,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core.begin import build_begin_graph
+from repro.core.measures import MEASURE_FAMILIES, make_family_measure
 from repro.core.sharded import build_sharded_index
 from repro.graph import build_l2_graph, save_index
 
@@ -33,6 +40,19 @@ def main(argv: Optional[Sequence[str]] = None) -> str:
     ap.add_argument("--shards", type=int, default=0,
                     help="0 = single partition, else corpus-sharded build")
     ap.add_argument("--impl", choices=["blocked", "ref"], default="blocked")
+    ap.add_argument("--graph", choices=["l2", "begin"], default="l2",
+                    help="l2 = SL2G construction; begin = measure-aware "
+                         "bipartite-derived adjacency (spends offline "
+                         "neural-measure evaluations, core/begin.py)")
+    ap.add_argument("--measure", choices=sorted(MEASURE_FAMILIES),
+                    default="deepfm",
+                    help="measure family for --graph begin "
+                         "(registry-resolved; built with the same "
+                         "PRNGKey(0) as serve.py, so the served measure "
+                         "matches the index)")
+    ap.add_argument("--train-queries", type=int, default=256,
+                    help="--graph begin: sampled training queries (the "
+                         "offline f-evaluation budget is T x N)")
     ap.add_argument("--corpus-dtype",
                     choices=["float32", "bfloat16", "int8"],
                     default="float32",
@@ -53,18 +73,41 @@ def main(argv: Optional[Sequence[str]] = None) -> str:
 
     t0 = time.perf_counter()
     if args.shards > 0:
+        if args.graph == "begin":
+            raise SystemExit("--graph begin is single-partition only "
+                             "(partition-local entries would not survive "
+                             "the measure-aware two-hop construction)")
         index = build_sharded_index(base, n_shards=args.shards, m=args.m,
                                     k_construction=args.k_construction,
                                     seed=args.seed, impl=args.impl)
         desc = (f"{args.shards} shards x {index.base.shape[1]} rows, "
                 f"max degree {index.neighbors.shape[2]}")
+    elif args.graph == "begin":
+        import jax
+
+        measure = make_family_measure(args.measure, jax.random.PRNGKey(0),
+                                      base.shape[1])
+        rng = np.random.default_rng(args.seed + 1)
+        train_q = rng.normal(size=(args.train_queries,
+                                   base.shape[1])).astype(np.float32)
+        index = build_begin_graph(measure, base, train_q, m=args.m,
+                                  seed=args.seed)
+        desc = (f"{index.n} nodes (BEGIN/{args.measure}, "
+                f"T={args.train_queries}), avg degree "
+                f"{index.avg_degree:.1f}")
     else:
         index = build_l2_graph(base, m=args.m,
                                k_construction=args.k_construction,
                                seed=args.seed, impl=args.impl)
         desc = f"{index.n} nodes, avg degree {index.avg_degree:.1f}"
     dt = time.perf_counter() - t0
-    meta_path = save_index(args.out, index, corpus_dtype=args.corpus_dtype)
+    # record construction provenance: serve.py warns when a measure-aware
+    # (BEGIN) index is served under a different measure family
+    extra = {"graph_kind": args.graph}
+    if args.graph == "begin":
+        extra["measure_family"] = args.measure
+    meta_path = save_index(args.out, index, corpus_dtype=args.corpus_dtype,
+                           extra_meta=extra)
     print(f"[build_index] {base.shape[0]} items dim={base.shape[1]}: {desc}, "
           f"built in {dt:.1f}s -> {args.out} "
           f"(corpus_dtype={args.corpus_dtype})")

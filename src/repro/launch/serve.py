@@ -1,7 +1,10 @@
 """Serving launcher: stand up a GUITAR ranking service (measure + index) and
-run queries against it. ``--mode`` selects the pruning strategy,
-``--searcher`` the execution path (staged expansion engine vs the legacy
-lane-major searcher), ``--runtime`` the serving discipline:
+run queries against it. ``--measure`` selects the measure family
+(registry-resolved kernel bundle — DeepFM by default so the demo exercises
+the Pallas score+grad path; ``--list-measures`` prints the registry),
+``--mode`` the pruning strategy, ``--searcher`` the execution path (staged
+expansion engine vs the legacy lane-major searcher), ``--runtime`` the
+serving discipline:
 
 - ``oneshot``      closed-loop batch jobs: queries arrive in whole batches,
   each batch steps until every lane converges. Batches are bucket-padded to
@@ -30,11 +33,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (EngineOptions, SearchConfig, brute_force_topk,
-                        build_engine, make_corpus_store, mlp_measure, recall,
+from repro.core import (MEASURE_FAMILIES, EngineOptions, SearchConfig,
+                        brute_force_topk, build_engine, get_bundle,
+                        list_families, make_corpus_store,
+                        make_family_measure, mlp_measure, recall,  # noqa: F401  (re-export compat)
                         search_legacy, search_measure)
 from repro.graph import (GraphIndex, build_l2_graph, load_corpus_store,
-                         load_index, save_index)
+                         load_index, load_index_meta, save_index)
 from repro.serving import (BATCH_BUCKETS, ContinuousRuntime, Request,  # noqa: F401  (re-export compat)
                            bucket_pad, bucket_size, latency_summary,
                            poisson_arrivals)
@@ -92,6 +97,7 @@ def serve_oneshot(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
     lat = latency_summary(steady)
     iters = np.asarray(iters_all) if iters_all else np.asarray([0])
     print(f"[serve] searcher={args.searcher} mode={args.mode} "
+          f"measure={args.measure} "
           f"corpus_dtype={args.corpus_dtype} fused={options.fused} "
           f"recall@{args.k}={first_recall:.3f} steady-state {qps:.0f} QPS "
           f"(batch={args.batch})")
@@ -130,6 +136,7 @@ def serve_continuous(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
     print(f"[serve] runtime=continuous lanes={args.lanes} "
           f"steps_per_tick={args.steps_per_tick} "
           f"offered={args.offered_qps:.0f} QPS mode={args.mode} "
+          f"measure={args.measure} "
           f"corpus_dtype={args.corpus_dtype} fused={options.fused} "
           f"recall@{args.k}={r:.3f}")
     print(runtime.metrics.report())
@@ -142,6 +149,13 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=128)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--mode", choices=["guitar", "sl2g"], default="guitar")
+    ap.add_argument("--measure", choices=sorted(MEASURE_FAMILIES),
+                    default="deepfm",
+                    help="measure family (registry-resolved kernel bundle); "
+                         "deepfm default exercises the Pallas score+grad "
+                         "path end to end")
+    ap.add_argument("--list-measures", action="store_true",
+                    help="print the measure-kernel bundle registry and exit")
     ap.add_argument("--searcher", choices=["engine", "legacy"],
                     default="engine")
     ap.add_argument("--runtime", choices=["oneshot", "continuous"],
@@ -174,6 +188,19 @@ def main() -> None:
                     help="persist the built index to this directory")
     args = ap.parse_args()
 
+    if args.list_measures:
+        print("measure-kernel bundle registry "
+              "(family: registered stage factories)")
+        for fam in list_families():
+            slots = get_bundle(fam).slots()
+            have = [s for s, ok in slots.items() if ok]
+            servable = " (serve constructor)" if fam in MEASURE_FAMILIES \
+                else ""
+            print(f"  {fam}: {', '.join(have)}{servable}")
+        print("unregistered families fall back to the generic "
+              "vmap/jax.grad stages")
+        return
+
     fused = args.fused or args.corpus_dtype != "float32"
     if args.searcher == "legacy" and fused:
         raise SystemExit("--searcher legacy has no index-fused/quantized "
@@ -199,19 +226,36 @@ def main() -> None:
             store = saved if saved.dtype == args.corpus_dtype else None
         print(f"[serve] index: loaded {args.index} ({graph.n} items, "
               f"degree {graph.avg_degree:.1f})")
+        index_meta = load_index_meta(args.index)
+        # carried through --save-index below so provenance survives copies
+        provenance = {k: index_meta[k]
+                      for k in ("graph_kind", "measure_family")
+                      if k in index_meta}
+        built_under = index_meta.get("measure_family")
+        if built_under is not None and built_under != args.measure:
+            print(f"[serve] WARNING: index was built measure-aware under "
+                  f"the {built_under!r} family but --measure="
+                  f"{args.measure!r} is being served — the query-aware "
+                  f"adjacency no longer matches the measure; recall will "
+                  f"degrade (rebuild with --measure {args.measure} or "
+                  f"serve --measure {built_under})")
     else:
         base = rng.normal(size=(args.items, args.dim)).astype(np.float32)
         t0 = time.time()
         graph = build_l2_graph(base, m=16, k_construction=48)
+        provenance = {"graph_kind": "l2"}
         print(f"[serve] index: {args.items} items, "
               f"degree {graph.avg_degree:.1f}, "
               f"built in {time.time() - t0:.1f}s")
     if args.save_index:
-        save_index(args.save_index, graph, corpus_dtype=args.corpus_dtype)
+        save_index(args.save_index, graph, corpus_dtype=args.corpus_dtype,
+                   extra_meta=provenance)
         print(f"[serve] index saved -> {args.save_index} "
               f"(corpus_dtype={args.corpus_dtype})")
-    measure = mlp_measure(jax.random.PRNGKey(0), args.dim, args.dim,
-                          hidden=(64, 64))
+    # deterministic in the key: build_index constructs the SAME measure for
+    # measure-aware (BEGIN) graph construction
+    measure = make_family_measure(args.measure, jax.random.PRNGKey(0),
+                                  args.dim)
 
     cfg = SearchConfig(k=args.k, ef=args.ef, mode=args.mode,
                        budget=args.budget, alpha=args.alpha)

@@ -21,6 +21,12 @@ same query (the stages are lane-row-independent; tests pin ids AND scores).
 ``ShardedContinuousRuntime`` runs one runtime per corpus partition and
 merges per-request top-k with the same ``merge_topk`` as the one-shot
 sharded path.
+
+The runtime is **bundle-agnostic**: it drives only the engine's lane
+lifecycle (reset/step/idle), so any measure family resolved through the
+``MeasureKernelBundle`` registry — kernel-backed score and fused analytic
+grad stages included — serves through it unmodified (tests pin the
+lane-recycling parity for both the deepfm and mlp bundles).
 """
 from __future__ import annotations
 
