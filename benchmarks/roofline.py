@@ -14,6 +14,14 @@ Also emits the expansion-step bandwidth sweep (DESIGN.md §8): corpus-side
 HBM bytes per expansion for the pre-gathered vs index-fused engine across
 fp32/bf16/int8 residency, and the HBM-roof time per step each implies —
 the projected speedup of the fused path on the bandwidth-bound backend.
+
+And the tile/occupancy model for the wide-block fused kernels
+(kernels/autotune.py): per candidate Bt, the grid-step count, double-buffer
+VMEM footprint, and the modeled kernel time ``steps × max(overhead,
+tile_bytes / HBM_bw)`` — DMA of tile t+1 overlaps compute of tile t, so a
+step costs whichever is longer, and per-step dispatch overhead amortizes
+÷Bt. This is the structural reason the original grid=(Q, B) single-row
+kernels lost wall-clock while winning the bytes model.
 """
 from __future__ import annotations
 
@@ -25,6 +33,8 @@ from typing import Dict, List, Optional
 PEAK_FLOPS = 197e12      # TPU v5e bf16 per chip
 HBM_BW = 819e9           # bytes/s per chip
 ICI_BW = 50e9            # bytes/s per link
+VMEM_BYTES = 16 * 2**20  # v5e per-core VMEM
+GRID_STEP_S = 1e-6       # per-grid-step dispatch overhead (order of mag.)
 
 
 def load_reports(dryrun_dir: str = "reports/dryrun", mesh: str = "single"
@@ -87,11 +97,46 @@ def expansion_sweep_rows(Q: int = 128, B: int = 32, C: int = 8,
     return rows
 
 
+def tile_occupancy_rows(Q: int = 128, B: int = 32, C: int = 8, D: int = 64,
+                        bts=(1, 4, 8, 16, 32)):
+    """Tile/occupancy model for the wide-block fused kernels: per Bt, the
+    grid-step count, the double-buffered VMEM tile footprint, and the
+    modeled time ``steps × max(step_overhead, tile_bytes / HBM_bw)``
+    (double-buffering overlaps tile t+1's DMA with tile t's compute, so a
+    grid step costs whichever side is longer). Bt=1 is the pre-autotune
+    rowwise grid — per-step overhead × M with nothing amortized."""
+    kernels = {
+        # kernel -> (rows gathered per engine step, residency bytes/elem)
+        "neighbor_rank_fused": (Q * B, 4),
+        "deepfm_score_fused": (Q * C, 4),
+        "deepfm_grad_fused": (Q, 4),
+    }
+    rows = []
+    for kern, (m, elem_bytes) in kernels.items():
+        t_row = None
+        for bt in bts:
+            steps = -(-m // bt)
+            tile_bytes = bt * D * elem_bytes
+            vmem = 2 * tile_bytes            # double buffer
+            t_model = steps * max(GRID_STEP_S, tile_bytes / HBM_BW)
+            if bt == 1:
+                t_row = t_model
+            rows.append(
+                f"roofline/tile/{kern}@bt{bt},0.00,"
+                f"grid_steps={steps};tile_kib={tile_bytes / 1024:.1f};"
+                f"vmem_buf_kib={vmem / 1024:.1f};"
+                f"vmem_frac={vmem / VMEM_BYTES:.4f};"
+                f"t_model={t_model:.3e}s;"
+                f"x_vs_rowwise={(t_row / t_model if t_row else 1.0):.2f}")
+    return rows
+
+
 def run(dryrun_dir: str = "reports/dryrun", mesh: str = "single"):
     rows = []
     table = []
     if mesh == "single":
         rows += expansion_sweep_rows()
+        rows += tile_occupancy_rows()
     for rep in load_reports(dryrun_dir, mesh):
         r = roofline_row(rep)
         table.append(r)

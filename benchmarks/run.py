@@ -3,10 +3,13 @@
 Prints ``name,us_per_call,derived`` CSV rows (spec format) and writes a
 machine-readable ``BENCH_<suite>.json`` per suite at the repo root so the
 perf trajectory (QPS, recall, p50/p95, kernel throughput, gate status) is
-tracked across PRs — CI uploads them as workflow artifacts. Default runs
-the quick profile (single dataset, reduced ef grid) so
-`python -m benchmarks.run` finishes on the single-core container; --full
-sweeps everything.
+tracked across PRs — CI uploads them as workflow artifacts. Every json
+carries a ``provenance`` stamp (jax version, backend/device kind, git
+sha, shared run timestamp) so numbers are comparable across machines.
+``--compare OLD.json`` re-runs that suite and prints per-row speedup
+factors, flagging rows that regressed >10%. Default runs the quick
+profile (single dataset, reduced ef grid) so `python -m benchmarks.run`
+finishes on the single-core container; --full sweeps everything.
 """
 from __future__ import annotations
 
@@ -55,19 +58,73 @@ def _parse_row(row: str) -> dict:
             "derived": _parse_derived(derived), "raw": row}
 
 
+def provenance(timestamp: float) -> dict:
+    """Machine identity stamped into every BENCH json so the perf
+    trajectory is comparable across machines and commits. ``timestamp`` is
+    passed in (one stamp per run.py invocation, shared by all suites)."""
+    import subprocess
+
+    import jax
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT, text=True,
+            capture_output=True, timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "device_count": jax.device_count(),
+        "git_sha": sha,
+        "unix_time": int(timestamp),
+    }
+
+
 def write_suite_json(suite: str, rows, ok: bool, quick: bool,
-                     root: str = REPO_ROOT) -> str:
+                     root: str = REPO_ROOT,
+                     timestamp: float | None = None) -> str:
     path = os.path.join(root, f"BENCH_{suite}.json")
+    timestamp = time.time() if timestamp is None else timestamp
     payload = {
         "suite": suite,
         "ok": ok,
         "quick": quick,
-        "unix_time": int(time.time()),
+        "unix_time": int(timestamp),
+        "provenance": provenance(timestamp),
         "rows": [_parse_row(r) for r in rows],
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     return path
+
+
+def compare_payloads(old: dict, new: dict, threshold: float = 0.9):
+    """Per-row regression diff: rows matched by name, speedup =
+    old_us / new_us (> 1 means the new run is faster). Returns (lines,
+    regressed_names); rows slower by more than ``1 - threshold`` are
+    flagged. Gate-style rows without a latency (us=0) are skipped."""
+    old_by_name = {r["name"]: r for r in old.get("rows", [])}
+    lines, regressed = [], []
+    for r in new.get("rows", []):
+        o = old_by_name.get(r["name"])
+        new_us, old_us = r.get("us_per_call"), (o or {}).get("us_per_call")
+        if not old_us or not new_us:
+            continue
+        speedup = old_us / new_us
+        flag = ""
+        if speedup < threshold:
+            flag = "  <-- REGRESSED"
+            regressed.append(r["name"])
+        lines.append(f"compare/{r['name']}: {old_us:.1f}us -> {new_us:.1f}us"
+                     f"  speedup={speedup:.2f}x{flag}")
+    only_old = sorted(set(old_by_name) - {r["name"]
+                                          for r in new.get("rows", [])})
+    for name in only_old:
+        lines.append(f"compare/{name}: row missing from new run")
+    return lines, regressed
 
 
 def main() -> None:
@@ -78,9 +135,21 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,table2,fig6,fig7,roofline,"
                          "kernels,graphbuild,serving")
+    ap.add_argument("--compare", default=None, metavar="OLD.json",
+                    help="regression-diff mode: after the run, diff each "
+                         "suite's rows against this prior BENCH json "
+                         "(matched by suite name), print per-row speedup "
+                         "factors, and flag rows that regressed >10%%")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
+    old_payload = None
+    if args.compare:
+        with open(args.compare) as f:
+            old_payload = json.load(f)
+        if only is None and old_payload.get("suite"):
+            only = {old_payload["suite"]}
+    run_stamp = time.time()
 
     from benchmarks import (fig4_recall_qps, fig5_alpha, fig6_projection,
                             fig7_begin, graph_build, kernels_micro, roofline,
@@ -105,6 +174,7 @@ def main() -> None:
     ]
     print("name,us_per_call,derived")
     failures = 0
+    regressions = []
     for name, fn in jobs:
         if only and name not in only:
             continue
@@ -120,7 +190,18 @@ def main() -> None:
             print(rows[0], flush=True)
             traceback.print_exc(file=sys.stderr)
         if not args.no_json:
-            write_suite_json(name, rows, ok, quick)
+            write_suite_json(name, rows, ok, quick, timestamp=run_stamp)
+        if old_payload is not None and old_payload.get("suite") == name:
+            new_payload = {"rows": [_parse_row(r) for r in rows]}
+            lines, regressed = compare_payloads(old_payload, new_payload)
+            print(f"--- compare vs {args.compare} (suite={name}) ---",
+                  flush=True)
+            for line in lines:
+                print(line, flush=True)
+            regressions += regressed
+    if regressions:
+        print(f"REGRESSED ({len(regressions)}): {', '.join(regressions)}",
+              flush=True)
     if failures:
         raise SystemExit(1)
 

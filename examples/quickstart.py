@@ -8,6 +8,13 @@ one batched value_and_grad, Eq. 3/4 neighbor ranking, a single fused
 hides all of that behind the classic one-call API; `build_engine` exposes
 the stage pipeline for customization.
 
+The fused path (`EngineOptions(fused=True)`, `serve.py --fused`) is
+tile-autotuned (docs/DESIGN.md §8): CPU defaults ship in-tree
+(`kernels/tuning_defaults.json`), so fused search wins wall-clock out of
+the box; `serve.py --autotune` re-sweeps at your exact serving shape and
+persists the winner to `.tuning_cache.json` (a second run skips the
+sweep), and `--tile` / `EngineOptions(tile=...)` force a plan by hand.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax

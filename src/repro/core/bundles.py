@@ -202,7 +202,8 @@ def _deepfm_score_fused_stage(meta, options):
         return deepfm_score_fused(
             store, idx, qs, params["mlp"], fm_dim=fm_dim,
             use_pallas=use_pallas_impl(options.measure_impl),
-            interpret=options.interpret)
+            interpret=options.interpret,
+            tile=getattr(options, "tile", None))
     return stage
 
 
@@ -224,7 +225,8 @@ def _deepfm_grad_fused_stage(meta, options):
         return deepfm_grad_fused(
             store, fid, q, params["mlp"], fm_dim=fm_dim,
             use_pallas=use_pallas_impl(options.grad_impl),
-            interpret=options.interpret)
+            interpret=options.interpret,
+            tile=getattr(options, "tile", None))
     return stage
 
 
@@ -242,7 +244,8 @@ def _mlp_score_fused_stage(meta, options):
         return mlp_score_fused(
             store, idx, qs, params,
             use_pallas=use_pallas_impl(options.measure_impl),
-            interpret=options.interpret)
+            interpret=options.interpret,
+            tile=getattr(options, "tile", None))
     return stage
 
 
@@ -260,7 +263,8 @@ def _mlp_grad_fused_stage(meta, options):
         return mlp_grad_fused(
             store, fid, q, params,
             use_pallas=use_pallas_impl(options.grad_impl),
-            interpret=options.interpret)
+            interpret=options.interpret,
+            tile=getattr(options, "tile", None))
     return stage
 
 

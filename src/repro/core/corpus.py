@@ -94,14 +94,20 @@ class CorpusStore:
     def dim(self) -> int:
         return self.data.shape[-1]
 
-    def take(self, ids: jax.Array) -> jax.Array:
-        """Gather rows by id (any ids shape) -> (..., D) float32."""
-        rows = jnp.take(self.data, ids, axis=0)
+    def take(self, ids: jax.Array, in_bounds: bool = False) -> jax.Array:
+        """Gather rows by id (any ids shape) -> (..., D) float32.
+
+        ``in_bounds=True`` promises every id is already in [0, N): the
+        gather then uses clip mode, dropping XLA's out-of-bounds select
+        (bit-identical for valid ids, measurably cheaper on CPU). The
+        engine's tile plan uses it — its ids are clamped upstream."""
+        mode = "clip" if in_bounds else None
+        rows = jnp.take(self.data, ids, axis=0, mode=mode)
         if self.dtype == "bfloat16":
             return bf16_bits_to_f32(rows)
         if self.dtype == "int8":
             return rows.astype(jnp.float32) * jnp.take(self.scales, ids,
-                                                       axis=0)
+                                                       axis=0, mode=mode)
         return rows.astype(jnp.float32)
 
     def take_raw(self, ids: jax.Array) -> jax.Array:

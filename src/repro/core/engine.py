@@ -33,8 +33,10 @@ quantized measures, learned pruners) plug in via ``dataclasses.replace``.
 Two execution paths share the exact same stage code:
 
 - ``ExpansionEngine.search``       jitted ``lax.while_loop`` (serving path);
-- ``ExpansionEngine.search_debug`` eager host loop, one Python call per
-  iteration — stages are observable (call-counting doubles, tracing).
+- ``ExpansionEngine.search_debug`` host loop, one Python call per
+  iteration — jitted per step by default (ids AND scores bit-identical to
+  ``search``); ``jit_steps=False`` for plain-Python stage observability
+  (call-counting doubles, tracing).
 
 Index-fused corpus residency (DESIGN.md §8): with ``EngineOptions(fused=
 True)`` the rank, measure, and (when the bundle registers one) grad stages
@@ -66,6 +68,7 @@ from repro.core.bundles import (  # noqa: F401  (re-exported compat surface)
     use_pallas_impl,
 )
 from repro.core.corpus import CorpusStore, as_corpus_store
+from repro.kernels import autotune
 from repro.kernels.neighbor_rank import neighbor_rank
 from repro.kernels.neighbor_rank.ref import neighbor_rank_ref
 from repro.kernels.neighbor_rank_fused import neighbor_rank_fused
@@ -119,6 +122,10 @@ class EngineOptions:
                   never materialized
     corpus_dtype: 'float32' | 'bfloat16' | 'int8' corpus residency;
                   non-fp32 dequantizes on gather (see core/corpus.py)
+    tile:         fused-path tiling override (kernels/autotune.py spec:
+                  'tile' | 'rowwise' plan, ':<bt>' rows-per-grid-step, or
+                  'plan:<bt>'); None resolves the autotune cache / shipped
+                  defaults per shape at trace time
     """
     rank_impl: str = "auto"
     measure_impl: str = "auto"
@@ -127,6 +134,7 @@ class EngineOptions:
     fused: bool = False
     corpus_dtype: str = "float32"
     grad_impl: str = "auto"
+    tile: Optional[str] = None
 
 
 # ---------------------------------------------------------------------------
@@ -311,7 +319,7 @@ def make_guitar_rank_fused_stage(cfg: SearchConfig,
         key, in_range = neighbor_rank_fused(
             x, grad, store, idx, valid, alpha=cfg.alpha, rank_by=cfg.rank_by,
             use_pallas=_use_pallas(options.rank_impl),
-            interpret=options.interpret)
+            interpret=options.interpret, tile=options.tile)
         return _select_top_c(key, in_range, valid, cfg)
     return stage
 
@@ -397,6 +405,17 @@ class ExpansionEngine:
     candidate, or (Q, D) frontier blocks; the corpus is held resident per
     ``corpus_dtype`` (see core/corpus.py). ``grad_fused`` also returns the
     dequantized frontier rows, so the engine skips its own frontier gather.
+
+    The fused step's *dataflow plan* is autotuned (kernels/autotune.py):
+    ``rowwise`` is the in-kernel-gather shape above; ``tile`` — the
+    CPU winner, shipped as the committed CPU default — performs ONE
+    combined ``[frontier | neighbors]`` gather per step behind
+    ``jax.lax.optimization_barrier`` and runs the pre-gathered stages on
+    slices of it (XLA:CPU otherwise re-inlines the gather into every
+    consumer inside the ``while_loop`` body). The tile plan only applies
+    when the fused stages route to jnp refs (``pallas_fused=False``) —
+    bit-identical at fp32 to both the rowwise fused refs and the unfused
+    stages, since the gather values and stage math are the same.
     """
     cfg: SearchConfig
     pop: PopStage
@@ -408,6 +427,8 @@ class ExpansionEngine:
     measure_fused: Optional[FusedMeasureStage] = None
     corpus_dtype: str = "float32"
     grad_fused: Optional[FusedGradStage] = None
+    tile: Optional[str] = None      # EngineOptions.tile override spec
+    pallas_fused: bool = False      # fused stages routed to Pallas kernels
 
     # -- candidates per expansion (static; fixes the flattened batch shape)
     def n_candidates(self, max_degree: int) -> int:
@@ -488,11 +509,38 @@ class ExpansionEngine:
             n_eval=zeros, n_grad=zeros, n_iters=zeros,
             done=jnp.ones((n_lanes,), jnp.bool_), iter_cap=zeros)
 
+    # -- does this step run the fused tile plan? Static per trace: the
+    #    plan comes from the autotune cache (or the EngineOptions.tile
+    #    override) at the concrete (Q, B, D, dtype) shape. Requires the
+    #    fused path (the unfused engine already runs pre-gathered stages)
+    #    with ref routing (Pallas fused kernels gather in-kernel — the
+    #    rowwise shape — and tiling there is the kernels' own ``bt``), and
+    #    the pre-gathered ``grad`` stage when a grad phase exists (always
+    #    true for registry-built engines; custom replacements may drop it).
+    def _use_tile_plan(self, store: CorpusStore, n_degree: int,
+                       Q: int) -> bool:
+        fused_on = (self.rank_fused is not None
+                    or self.measure_fused is not None
+                    or self.grad_fused is not None)
+        if not fused_on or self.pallas_fused:
+            return False
+        if self.grad_fused is not None and self.grad is None:
+            return False
+        cfg_t = autotune.resolve(
+            "engine_step", q=Q, m=n_degree, d=store.dim,
+            dtype=self.corpus_dtype,
+            override=autotune.parse_tile(self.tile))
+        return cfg_t.plan == "tile"
+
     # -- one iteration over the whole batch: pop → grad → rank → measure →
     #    insert. qs_flat is the (Q·C, Dq) repeated query block, hoisted out
     #    of the loop because C is static. The fused variants hand (store,
     #    idx) to the stages — neighbor/candidate rows are gathered (and
-    #    dequantized) inside them, never staged by the engine.
+    #    dequantized) inside them, never staged by the engine — unless the
+    #    tuned plan is ``tile``, which gathers the whole step's rows ONCE
+    #    (frontier + neighbors, dequant included) into a (Q, 1+B, D) tile
+    #    pinned by ``optimization_barrier`` and feeds every pre-gathered
+    #    stage from slices of it.
     def step(self, params, store: CorpusStore, neighbors, queries, qs_flat,
              state: EngineState) -> EngineState:
         Q = queries.shape[0]
@@ -503,7 +551,19 @@ class ExpansionEngine:
         valid = (nbr >= 0) & ~bit_test_rows(s.visited, nbr) \
             & pop.active[:, None]
 
-        if self.grad_fused is not None:
+        use_tile = self._use_tile_plan(store, neighbors.shape[1], Q)
+        if use_tile:
+            ids = jnp.concatenate([pop.fid[:, None], nbr_safe], axis=1)
+            tile = jax.lax.optimization_barrier(
+                store.take(ids, in_bounds=True))
+            x = tile[:, 0, :]                          # (Q, D) f32
+            nvecs = tile[:, 1:, :]                     # (Q, B, D)
+            if self.grad is not None:
+                _, g = self.grad(params, x, queries)
+                n_grad = s.n_grad + pop.active.astype(jnp.int32)
+            else:
+                g, n_grad = None, s.n_grad
+        elif self.grad_fused is not None:
             # the fused grad stage gathers (and dequantizes) the frontier
             # rows in-kernel and hands them back for the rank stage — the
             # (Q, D) block never stages through fp32 HBM
@@ -517,21 +577,26 @@ class ExpansionEngine:
             x = store.take(pop.fid)                    # (Q, D) f32
             g, n_grad = None, s.n_grad
 
-        if self.rank_fused is not None:
+        if self.rank_fused is not None and not use_tile:
             sel_idx, sel_mask = self.rank_fused(x, g, store, nbr_safe, valid)
             nvecs = None
         else:
-            nvecs = store.take(nbr_safe)               # (Q, B, D)
+            if not use_tile:
+                nvecs = store.take(nbr_safe)           # (Q, B, D)
             sel_idx, sel_mask = self.rank(x, g, nvecs, valid)     # (Q, C)
         sel_ids = jnp.take_along_axis(nbr, sel_idx, axis=1)
 
         C = sel_idx.shape[1]
-        if self.measure_fused is not None:
+        if self.measure_fused is not None and not use_tile:
             flat_scores = self.measure_fused(
                 params, store,
                 jnp.maximum(sel_ids, 0).reshape(Q * C), qs_flat)
         else:
-            sel_vecs = jnp.take_along_axis(nvecs, sel_idx[..., None], axis=1)
+            # sel_idx comes from top-k over axis 1, so it's in-bounds by
+            # construction — the tile plan drops the out-of-bounds select
+            mode = "clip" if use_tile else None
+            sel_vecs = jnp.take_along_axis(nvecs, sel_idx[..., None], axis=1,
+                                           mode=mode)
             flat_scores = self.measure(params, sel_vecs.reshape(Q * C, -1),
                                        qs_flat)
         scores = jnp.where(sel_mask, flat_scores.reshape(Q, C), -jnp.inf)
@@ -590,17 +655,44 @@ class ExpansionEngine:
         return self._run_jit(params, base, neighbors, queries, entries,
                              jnp.asarray(iter_caps, jnp.int32))
 
-    # -- eager host loop: same stage code, one Python call per iteration.
-    #    Stages are observable — wrap them (e.g. a call-counting double via
-    #    dataclasses.replace) to assert batching invariants.
+    # -- host loop: same stage code, one Python call per iteration. By
+    #    default each (init, step) runs through a cached jax.jit so the
+    #    compiled arithmetic is the program `search` runs — ids AND scores
+    #    bit-identical (eager op-by-op dispatch rounds differently where
+    #    XLA fuses, e.g. mul+add → FMA on CPU). Pass jit_steps=False for
+    #    plain-Python stage observability — wrap stages (e.g. a
+    #    call-counting double via dataclasses.replace) to assert batching
+    #    invariants; jitted stages would only record at trace time.
+    @functools.cached_property
+    def _debug_jits(self):
+        def init(params, store, neighbors, queries, entries, iter_caps):
+            return self.init_state(params, store, neighbors, queries,
+                                   entries, iter_caps)
+
+        def one(params, store, neighbors, queries, qs_flat, state):
+            s2 = self.step(params, store, neighbors, queries, qs_flat, state)
+            return _freeze_done(state.done, s2, state)
+        return jax.jit(init), jax.jit(one)
+
     def search_debug(self, params, base, neighbors, queries, entries,
                      max_steps: Optional[int] = None,
                      on_step: Optional[Callable[[int, EngineState], None]]
-                     = None, iter_caps=None) -> SearchResult:
+                     = None, iter_caps=None,
+                     jit_steps: bool = True) -> SearchResult:
         entries = jnp.asarray(entries, jnp.int32)
         store = as_corpus_store(base, self.corpus_dtype)
-        state = self.init_state(params, store, neighbors, queries, entries,
-                                iter_caps)
+        if jit_steps:
+            init_fn, step_fn = self._debug_jits
+            caps = jnp.full((queries.shape[0],), self.cfg.iters(),
+                            jnp.int32) if iter_caps is None \
+                else jnp.asarray(iter_caps, jnp.int32)
+            state = init_fn(params, store, neighbors, queries, entries, caps)
+        else:
+            def step_fn(params, store, neighbors, queries, qs_flat, s):
+                s2 = self.step(params, store, neighbors, queries, qs_flat, s)
+                return _freeze_done(s.done, s2, s)
+            state = self.init_state(params, store, neighbors, queries,
+                                    entries, iter_caps)
         C = self.n_candidates(neighbors.shape[1])
         qs_flat = jnp.repeat(queries, C, axis=0)
         if max_steps is not None:
@@ -613,8 +705,8 @@ class ExpansionEngine:
                 limit = max(limit, int(jnp.max(jnp.asarray(iter_caps))) + 1)
         steps = 0
         while steps < limit and not bool(jnp.all(state.done)):
-            s2 = self.step(params, store, neighbors, queries, qs_flat, state)
-            state = _freeze_done(state.done, s2, state)
+            state = step_fn(params, store, neighbors, queries, qs_flat,
+                            state)
             steps += 1
             if on_step is not None:
                 on_step(steps, state)
@@ -640,13 +732,21 @@ def _build(score_fn, meta, cfg: SearchConfig,
         grad = grad_fused = None
         rank = select_all_rank_stage
         rank_fused = select_all_rank_fused_stage if options.fused else None
+    # does any fused stage route to a Pallas kernel? The tile plan only
+    # applies to ref-routed fused stages (Pallas kernels gather in-kernel)
+    pallas_fused = options.fused and (
+        use_pallas_impl(options.rank_impl)
+        or use_pallas_impl(options.measure_impl)
+        or use_pallas_impl(options.grad_impl))
     return ExpansionEngine(cfg=cfg, pop=default_pop_stage, rank=rank,
                            measure=stages.measure,
                            insert=default_insert_stage,
                            grad=grad, rank_fused=rank_fused,
                            measure_fused=stages.measure_fused,
                            corpus_dtype=options.corpus_dtype,
-                           grad_fused=grad_fused)
+                           grad_fused=grad_fused,
+                           tile=options.tile,
+                           pallas_fused=pallas_fused)
 
 
 @functools.lru_cache(maxsize=128)

@@ -1,0 +1,282 @@
+"""Tile autotuning for the fused kernels and the fused engine step.
+
+The fused trios (``neighbor_rank_fused``, ``deepfm_score_fused``,
+``deepfm_grad_fused``, the mlp fused pair) and the engine's fused step each
+have one structural knob that wall-clock cares about and the bytes model
+does not:
+
+- **kernels**: ``bt`` — corpus rows gathered and computed per grid step.
+  The wide-block kernels DMA ``bt`` rows into a double-buffered VMEM tile
+  (``kernels/dma.py``) so step ``t+1``'s gather overlaps step ``t``'s
+  compute, and the per-step GEMVs become (bt, ·) matmuls.
+- **engine**: ``plan`` — the fused-step dataflow. ``rowwise`` hands
+  ``(store, idx)`` to the fused stages (gathers live inside the kernels;
+  the right shape on TPU). ``tile`` is the CPU-winning variant: ONE
+  combined ``[frontier | neighbors]`` gather per step, materialized behind
+  ``jax.lax.optimization_barrier`` and sliced by every stage — XLA:CPU
+  otherwise re-inlines the gather into each consumer inside the
+  ``while_loop`` body, which is exactly how the fused path lost wall-clock
+  to unfused while winning the bytes model.
+
+Neither knob is derivable from shapes alone, so configs are *measured*: a
+candidate sweep per ``(backend, kernel, Q, B_or_C, D, dtype)`` key, with
+the winner persisted to a JSON tuning cache. Lookup precedence, most
+specific measurement first:
+
+1. an explicit override (``EngineOptions(tile=...)`` / ``--tile``),
+2. the local cache — exact key, then the ``backend|kernel|*`` wildcard,
+3. the committed defaults shipped in-tree (``tuning_defaults.json``,
+   same two-step lookup) — CPU defaults ride with the repo so a fresh
+   checkout wins wall-clock without ever sweeping,
+4. the builtin fallback (rowwise, bt=8).
+
+Cache file: ``$REPRO_TUNING_CACHE`` if set, else ``./.tuning_cache.json``
+(repo-local, gitignored; CI restores it via actions/cache). A sweep whose
+exact key is already cached is skipped — the second run is free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import tempfile
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+_DEFAULTS_PATH = pathlib.Path(__file__).with_name("tuning_defaults.json")
+_ENV_VAR = "REPRO_TUNING_CACHE"
+
+#: kernels with a tunable entry (the engine-step plan plus the four trios)
+TUNABLE_KERNELS = (
+    "engine_step", "neighbor_rank_fused", "deepfm_score_fused",
+    "deepfm_grad_fused", "mlp_score_fused", "mlp_grad_fused",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """One tuning decision. ``plan`` is only meaningful for ``engine_step``
+    (kernels ignore it); ``bt`` is rows per grid step for the wide-block
+    kernels (``engine_step`` ignores it). Both fields always carry values
+    so a config can be recorded for either kind of key."""
+    plan: str = "rowwise"        # engine fused-step dataflow: rowwise | tile
+    bt: int = 8                  # rows gathered + computed per grid step
+
+    def merged_over(self, base: "TileConfig") -> "TileConfig":
+        return TileConfig(plan=self.plan or base.plan, bt=self.bt or base.bt)
+
+
+def parse_tile(spec: Optional[str]) -> Optional[TileConfig]:
+    """Parse an override spec: ``"tile"`` / ``"rowwise"`` (plan only),
+    ``":16"`` (bt only), ``"tile:16"`` (both). Unset fields are 0/"" so
+    ``resolve`` can merge them over the looked-up config."""
+    if spec is None or spec == "":
+        return None
+    plan, _, bts = str(spec).partition(":")
+    if plan not in ("", "tile", "rowwise"):
+        raise ValueError(f"bad tile spec {spec!r}: plan must be "
+                         "'tile' or 'rowwise'")
+    bt = int(bts) if bts else 0
+    if bts and bt < 1:
+        raise ValueError(f"bad tile spec {spec!r}: bt must be >= 1")
+    return TileConfig(plan=plan, bt=bt)
+
+
+# ---------------------------------------------------------------------------
+# cache IO
+# ---------------------------------------------------------------------------
+
+def cache_path() -> str:
+    return os.environ.get(_ENV_VAR, os.path.join(os.getcwd(),
+                                                 ".tuning_cache.json"))
+
+
+def _load_entries(path) -> Dict[str, dict]:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        entries = doc.get("entries", {})
+        return entries if isinstance(entries, dict) else {}
+    except (OSError, ValueError):
+        return {}
+
+
+def load_cache() -> Dict[str, dict]:
+    """The local (measured) entries; {} when no cache file exists yet."""
+    return _load_entries(cache_path())
+
+
+def save_cache(entries: Dict[str, dict]) -> str:
+    """Atomic write (tmp + rename) so concurrent bench processes can't
+    leave a torn JSON behind."""
+    path = cache_path()
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(prefix=".tuning_cache.", dir=d)
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump({"version": 1, "entries": entries}, f, indent=1,
+                      sort_keys=True)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return path
+
+
+def shipped_defaults() -> Dict[str, dict]:
+    return _load_entries(_DEFAULTS_PATH)
+
+
+def _backend(backend: Optional[str]) -> str:
+    if backend is not None:
+        return backend
+    import jax
+    return jax.default_backend()
+
+
+def make_key(kernel: str, q: int, m: int, d: int, dtype: str,
+             backend: Optional[str] = None) -> str:
+    """``backend|kernel|Q{q}|M{m}|D{d}|{dtype}`` — M is B (neighbor degree)
+    or C (flattened candidates) depending on the kernel; 0 for don't-care
+    dims."""
+    return (f"{_backend(backend)}|{kernel}|Q{int(q)}|M{int(m)}|D{int(d)}"
+            f"|{dtype}")
+
+
+def _wildcard(kernel: str, backend: Optional[str]) -> str:
+    return f"{_backend(backend)}|{kernel}|*"
+
+
+def _from_entry(entry: Optional[dict]) -> Optional[TileConfig]:
+    if not isinstance(entry, dict):
+        return None
+    return TileConfig(plan=str(entry.get("plan", "rowwise")),
+                      bt=int(entry.get("bt", 8)))
+
+
+def lookup(kernel: str, q: int = 0, m: int = 0, d: int = 0,
+           dtype: str = "float32",
+           backend: Optional[str] = None) -> Optional[TileConfig]:
+    """Cache → shipped defaults, exact key before the backend wildcard."""
+    key = make_key(kernel, q, m, d, dtype, backend)
+    wild = _wildcard(kernel, backend)
+    local = load_cache()
+    shipped = shipped_defaults()
+    for entry in (local.get(key), shipped.get(key), local.get(wild),
+                  shipped.get(wild)):
+        cfg = _from_entry(entry)
+        if cfg is not None:
+            return cfg
+    return None
+
+
+def resolve(kernel: str, *, q: int = 0, m: int = 0, d: int = 0,
+            dtype: str = "float32", override: Optional[TileConfig] = None,
+            backend: Optional[str] = None) -> TileConfig:
+    """The one lookup every caller uses (engine step + kernel ops). Shapes
+    are static at trace time, so this is plain-Python per compilation."""
+    base = lookup(kernel, q, m, d, dtype, backend) or TileConfig()
+    if override is not None:
+        base = override.merged_over(base)
+    return base
+
+
+def record(kernel: str, cfg: TileConfig, *, q: int = 0, m: int = 0,
+           d: int = 0, dtype: str = "float32",
+           backend: Optional[str] = None,
+           stats: Optional[dict] = None) -> str:
+    """Persist a measured winner into the local cache; returns the key."""
+    key = make_key(kernel, q, m, d, dtype, backend)
+    entries = load_cache()
+    entry = {"plan": cfg.plan, "bt": cfg.bt}
+    if stats:
+        entry.update(stats)
+    entries[key] = entry
+    save_cache(entries)
+    return key
+
+
+# ---------------------------------------------------------------------------
+# the sweep
+# ---------------------------------------------------------------------------
+
+def sweep(candidates: Sequence[TileConfig],
+          bench: Callable[[TileConfig], float]
+          ) -> Tuple[TileConfig, Dict[str, float]]:
+    """Time every candidate (``bench`` returns seconds; it should warm up
+    and take a min-of-repeats itself) and return the fastest."""
+    if not candidates:
+        raise ValueError("empty candidate list")
+    timings: Dict[str, float] = {}
+    best, best_t = None, float("inf")
+    for cand in candidates:
+        t = float(bench(cand))
+        timings[f"{cand.plan}:{cand.bt}"] = t
+        if t < best_t:
+            best, best_t = cand, t
+    return best, timings
+
+
+def autotune(kernel: str, candidates: Sequence[TileConfig],
+             bench: Callable[[TileConfig], float], *, q: int = 0, m: int = 0,
+             d: int = 0, dtype: str = "float32",
+             backend: Optional[str] = None,
+             force: bool = False) -> TileConfig:
+    """Sweep-and-persist with the round-trip contract: when the exact key
+    is already in the *local* cache (a prior measured result — shipped
+    defaults never suppress a requested sweep), return it without calling
+    ``bench`` at all."""
+    key = make_key(kernel, q, m, d, dtype, backend)
+    if not force:
+        cached = _from_entry(load_cache().get(key))
+        if cached is not None:
+            return cached
+    best, timings = sweep(candidates, bench)
+    record(kernel, best, q=q, m=m, d=d, dtype=dtype, backend=backend,
+           stats={"us": timings[f"{best.plan}:{best.bt}"] * 1e6,
+                  "swept_us": {k: v * 1e6 for k, v in timings.items()}})
+    return best
+
+
+def tune_engine_step(measure, base, neighbors, queries, entries, cfg,
+                     options, *, reps: int = 3,
+                     plans: Sequence[str] = ("rowwise", "tile"),
+                     force: bool = False) -> TileConfig:
+    """Engine-level plan sweep at a concrete workload shape: time a full
+    fused search per candidate plan and persist the winner under the
+    ``engine_step`` key. ``options`` must have ``fused=True``; its ``tile``
+    field is overridden per candidate. Skipped entirely (cache hit) on the
+    second run for the same shape."""
+    import dataclasses as _dc
+    import time as _time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.corpus import as_corpus_store
+    from repro.core.engine import build_engine
+
+    store = as_corpus_store(base, options.corpus_dtype)
+    Q = queries.shape[0]
+
+    def bench(cand: TileConfig) -> float:
+        opts = _dc.replace(options, tile=f"{cand.plan}:{cand.bt}")
+        eng = build_engine(measure, cfg, opts)
+        run = lambda: eng.search(measure.params, store, neighbors, queries,
+                                 entries)
+        jax.block_until_ready(run().ids)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(run().ids)
+            best = min(best, _time.perf_counter() - t0)
+        return best
+
+    return autotune(
+        "engine_step",
+        [TileConfig(plan=p, bt=8) for p in plans], bench,
+        q=Q, m=int(neighbors.shape[1]), d=int(store.dim),
+        dtype=options.corpus_dtype, force=force)

@@ -1,18 +1,20 @@
-"""Index-fused analytic DeepFM grad kernel (frontier ids in, grads out).
+"""Index-fused analytic DeepFM grad kernel (frontier ids in, grads out),
+wide-block edition.
 
 The pre-gathered ``deepfm_grad`` kernel consumes a (Q, D) fp32 frontier
 block the engine staged through HBM (gather + dequant as a separate pass).
-This variant takes the resident corpus and the (Q,) frontier-id vector: the
-grid walks lanes and each step's corpus BlockSpec selects row ``fid[m]``
-via scalar-prefetch indexing, dequantizing bf16/int8 residency in VMEM
-(``quant.load_row_f32``), so the frontier block never exists in fp32 HBM.
-Because the row is already resident in VMEM — and the rank stage needs the
-same row for its diffs — the kernel also writes the dequantized frontier
-row out, turning the engine's separate gather-dequant pass into a single
-(Q, D) store.
+This variant takes the resident corpus and the (Q,) frontier-id vector and
+gathers in-kernel: each grid step DMAs ``bt`` frontier rows into a
+double-buffered (2, bt, D) VMEM tile (``kernels/dma.py``) so the next
+tile's gather overlaps this tile's forward+backward, and every matmul runs
+at (bt, ·) instead of as a GEMV. ``bt`` comes from the autotune cache.
+Because the rows are already resident in VMEM — and the rank stage needs
+the same rows for its diffs — the kernel also writes the dequantized
+frontier tile out, turning the engine's separate gather-dequant pass into
+a single (Q, D) store.
 
-Per step: forward FM dot + two MLP GEMVs with pre-activations kept live,
-then the analytic backward (sigmoid derivative, transposed GEMVs, relu
+Per tile: forward FM dot + two MLP matmuls with pre-activations kept live,
+then the analytic backward (sigmoid derivative, transposed matmuls, relu
 masks, FM closing term). Same math as ``deepfm_grad`` — fp32 residency is
 bit-identical to it (and hence to ``vmap(jax.value_and_grad)``).
 """
@@ -25,77 +27,91 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.quant import load_row_f32
+from repro.kernels.dma import RowGather, schedule_double_buffer
+from repro.kernels.quant import rows_f32
 
 
-def _grad_body(row, q_ref, w0_ref, b0_ref, w1_ref, b1_ref, w2_ref, b2_ref,
-               w0t_ref, w1t_ref, w2t_ref, val_ref, grad_ref, x_ref, *,
-               fm_dim: int, deep_dim: int):
-    q = q_ref[0, :]                                       # (D,)
-    fm = jnp.sum(row[:fm_dim] * q[:fm_dim])
+def _grad_tile(rows, q, w0_ref, b0_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+               w0t_ref, w1t_ref, w2t_ref, *, fm_dim: int, deep_dim: int):
+    """rows/q: (bt, D) f32 -> (vals (bt,), grads (bt, D))."""
+    fm = jnp.sum(rows[:, :fm_dim] * q[:, :fm_dim], axis=1)
     deep_in = jnp.concatenate(
-        [q[fm_dim: fm_dim + deep_dim], row[fm_dim: fm_dim + deep_dim]]
-    )[None, :]                                            # (1, 2*deep)
+        [q[:, fm_dim: fm_dim + deep_dim], rows[:, fm_dim: fm_dim + deep_dim]],
+        axis=1)                                           # (bt, 2*deep)
     z0 = jnp.dot(deep_in, w0_ref[...],
                  preferred_element_type=jnp.float32) + b0_ref[...][None, :]
     h0 = jnp.maximum(z0, 0.0)
     z1 = jnp.dot(h0, w1_ref[...],
                  preferred_element_type=jnp.float32) + b1_ref[...][None, :]
     h1 = jnp.maximum(z1, 0.0)
-    logit = jnp.dot(h1, w2_ref[...], preferred_element_type=jnp.float32)[0, 0]
+    logit = jnp.dot(h1, w2_ref[...], preferred_element_type=jnp.float32)[:, 0]
     val = jax.nn.sigmoid(logit + b2_ref[...][0] + fm)
-    g_logit = val * (1.0 - val)
-    g1 = jnp.where(z1 > 0, g_logit * w2t_ref[...], 0.0)   # (1, H2)
+    g_logit = val * (1.0 - val)                           # (bt,)
+    g1 = jnp.where(z1 > 0, g_logit[:, None] * w2t_ref[...], 0.0)  # (bt, H2)
     g0 = jnp.dot(g1, w1t_ref[...], preferred_element_type=jnp.float32)
     g0 = jnp.where(z0 > 0, g0, 0.0)
     g_in = jnp.dot(g0, w0t_ref[...],
-                   preferred_element_type=jnp.float32)[0]  # (2*deep,)
-    val_ref[0] = val
-    grad_ref[0, :] = jnp.concatenate(
-        [g_logit * q[:fm_dim], g_in[deep_dim:]])
-    x_ref[0, :] = row
+                   preferred_element_type=jnp.float32)    # (bt, 2*deep)
+    grads = jnp.concatenate(
+        [g_logit[:, None] * q[:, :fm_dim], g_in[:, deep_dim:]], axis=1)
+    return val, grads
 
 
-def _kernel(idx_ref, row_ref, q_ref, w0, b0, w1, b1, w2, b2, w0t, w1t, w2t,
-            val_ref, grad_ref, x_ref, *, fm_dim: int, deep_dim: int):
-    _grad_body(load_row_f32(row_ref), q_ref, w0, b0, w1, b1, w2, b2,
-               w0t, w1t, w2t, val_ref, grad_ref, x_ref,
-               fm_dim=fm_dim, deep_dim=deep_dim)
-
-
-def _kernel_q8(idx_ref, row_ref, scale_ref, q_ref, w0, b0, w1, b1, w2, b2,
-               w0t, w1t, w2t, val_ref, grad_ref, x_ref, *, fm_dim: int,
-               deep_dim: int):
-    row = load_row_f32(row_ref) * scale_ref[0, 0]
-    _grad_body(row, q_ref, w0, b0, w1, b1, w2, b2, w0t, w1t, w2t,
-               val_ref, grad_ref, x_ref, fm_dim=fm_dim, deep_dim=deep_dim)
+def _kernel(idx_ref, *refs, fm_dim: int, deep_dim: int, bt: int,
+            quant: bool):
+    if quant:
+        (data_ref, scales_ref, q_ref, w0, b0, w1, b1, w2, b2, w0t, w1t, w2t,
+         val_ref, grad_ref, x_ref, vmem, svmem, dsem, ssem) = refs
+    else:
+        (data_ref, q_ref, w0, b0, w1, b1, w2, b2, w0t, w1t, w2t,
+         val_ref, grad_ref, x_ref, vmem, dsem) = refs
+    t = pl.program_id(0)
+    gathers = [RowGather(idx_ref, data_ref, vmem, dsem, bt)]
+    if quant:
+        gathers.append(RowGather(idx_ref, scales_ref, svmem, ssem, bt))
+    slot = schedule_double_buffer(t, gathers)
+    rows = rows_f32(vmem[slot])                           # (bt, D)
+    if quant:
+        rows = rows * svmem[slot]
+    val, grads = _grad_tile(rows, q_ref[...], w0, b0, w1, b1, w2, b2,
+                            w0t, w1t, w2t, fm_dim=fm_dim, deep_dim=deep_dim)
+    val_ref[...] = val
+    grad_ref[...] = grads
+    x_ref[...] = rows
 
 
 @functools.partial(jax.jit, static_argnames=("fm_dim", "deep_dim",
-                                             "interpret"))
+                                             "interpret", "bt"))
 def deepfm_grad_fused_pallas(data, scales, idx, query, w0, b0, w1, b1,
                              w2, b2, *, fm_dim: int = 8, deep_dim: int = 32,
-                             interpret: bool = False):
+                             interpret: bool = False, bt: int = 8):
     """data: (N, D) resident corpus (f32/bf16/int8); scales: (N, 1) f32 for
     int8 else None; idx: (Q,) int32 frontier ids (pre-clamped >= 0); query:
-    (Q, D) per-lane user rows. Returns (vals (Q,), grads (Q, D),
+    (Q, D) per-lane user rows; bt: lanes per grid step (autotuned; Q is
+    padded up to a multiple). Returns (vals (Q,), grads (Q, D),
     x (Q, D) dequantized frontier rows)."""
     Q = idx.shape[0]
     D = data.shape[1]
     quant = scales is not None
+    bt = max(1, min(int(bt), Q))
+    qp = -(-Q // bt) * bt
+    idx = jnp.pad(idx, (0, qp - Q))
+    query = jnp.pad(query, ((0, qp - Q), (0, 0)))
     w2t = w2[:, 0][None, :]
-    row_at = lambda m, idx_ref: (idx_ref[m], 0)
-    full = lambda *s: pl.BlockSpec(s, lambda m, idx_ref: tuple(0 for _ in s))
-    in_specs = [pl.BlockSpec((1, D), row_at)]
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    full = lambda *s: pl.BlockSpec(s, lambda t, idx_ref: tuple(0 for _ in s))
+    in_specs = [any_spec]
     args = [data]
+    scratch = [pltpu.VMEM((2, bt, D), data.dtype)]
     if quant:
-        in_specs.append(pl.BlockSpec((1, 1), row_at))
+        in_specs.append(any_spec)
         args.append(scales)
-        body = functools.partial(_kernel_q8, fm_dim=fm_dim, deep_dim=deep_dim)
-    else:
-        body = functools.partial(_kernel, fm_dim=fm_dim, deep_dim=deep_dim)
+        scratch.append(pltpu.VMEM((2, bt, 1), jnp.float32))
+    scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
+    if quant:
+        scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
     in_specs += [
-        pl.BlockSpec((1, query.shape[1]), lambda m, idx_ref: (m, 0)),
+        pl.BlockSpec((bt, query.shape[1]), lambda t, idx_ref: (t, 0)),
         full(*w0.shape), full(*b0.shape),
         full(*w1.shape), full(*b1.shape),
         full(*w2.shape), full(*b2.shape),
@@ -104,17 +120,20 @@ def deepfm_grad_fused_pallas(data, scales, idx, query, w0, b0, w1, b1,
     args += [query, w0, b0, w1, b1, w2, b2, w0.T, w1.T, w2t]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(Q,),
+        grid=(qp // bt,),
         in_specs=in_specs,
-        out_specs=(pl.BlockSpec((1,), lambda m, idx_ref: (m,)),
-                   pl.BlockSpec((1, D), lambda m, idx_ref: (m, 0)),
-                   pl.BlockSpec((1, D), lambda m, idx_ref: (m, 0))),
+        out_specs=(pl.BlockSpec((bt,), lambda t, idx_ref: (t,)),
+                   pl.BlockSpec((bt, D), lambda t, idx_ref: (t, 0)),
+                   pl.BlockSpec((bt, D), lambda t, idx_ref: (t, 0))),
+        scratch_shapes=scratch,
     )
-    return pl.pallas_call(
-        body,
+    vals, grads, x = pl.pallas_call(
+        functools.partial(_kernel, fm_dim=fm_dim, deep_dim=deep_dim, bt=bt,
+                          quant=quant),
         grid_spec=grid_spec,
-        out_shape=(jax.ShapeDtypeStruct((Q,), jnp.float32),
-                   jax.ShapeDtypeStruct((Q, D), jnp.float32),
-                   jax.ShapeDtypeStruct((Q, D), jnp.float32)),
+        out_shape=(jax.ShapeDtypeStruct((qp,), jnp.float32),
+                   jax.ShapeDtypeStruct((qp, D), jnp.float32),
+                   jax.ShapeDtypeStruct((qp, D), jnp.float32)),
         interpret=interpret,
     )(idx, *args)
+    return vals[:Q], grads[:Q], x[:Q]

@@ -1,17 +1,20 @@
-"""Index-fused DeepFM scoring Pallas kernel (indices in, scores out).
+"""Index-fused DeepFM scoring Pallas kernel (indices in, scores out),
+wide-block edition.
 
 The pre-gathered ``deepfm_score`` kernel consumes a flattened (M, D) fp32
 candidate block that the engine had to stage through HBM. This variant
-takes the resident corpus and the (M,) candidate-id vector: the grid walks
-candidates and each step's corpus BlockSpec selects row ``idx[m]`` via
-scalar-prefetch indexing, so the candidate block never exists in HBM and
-the pipeline double-buffers each row's DMA behind the previous candidate's
-MLP. With bf16/int8 residency the gather moves 2x/4x fewer bytes and the
-dequant (int8: per-row scale) happens in VMEM.
+takes the resident corpus and the (M,) candidate-id vector and gathers
+*inside* the kernel — but instead of the original one-row-per-grid-step
+BlockSpec gather, each grid step now DMAs ``bt`` candidate rows into a
+double-buffered (2, bt, D) VMEM tile (``kernels/dma.py``): step ``t+1``'s
+row copies are issued before step ``t`` computes, so the gather hides
+behind the tile's MLP, and the per-step compute is a real (bt, 2·deep)
+matmul instead of a GEMV. ``bt`` comes from the autotune cache
+(``kernels/autotune.py``); ``bt=1`` reproduces the old schedule.
 
-Per step: FM dot on the VPU, the two small MLP matmuls back-to-back on the
-MXU (single-row GEMVs — acceptable at measure sizes; the win is the fused
-gather), one sigmoid score lane out.
+With bf16/int8 residency the gather moves 2x/4x fewer bytes and the
+dequant (int8: per-row scale tile, gathered on the same schedule) happens
+in VMEM.
 """
 from __future__ import annotations
 
@@ -22,66 +25,86 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.quant import load_row_f32
+from repro.kernels.dma import RowGather, schedule_double_buffer
+from repro.kernels.quant import rows_f32
 
 
-def _score_body(row, q_ref, w0_ref, b0_ref, w1_ref, b1_ref, w2_ref, b2_ref,
-                out_ref, *, fm_dim: int, deep_dim: int):
-    q = q_ref[0, :]                                       # (D,)
-    fm = jnp.sum(row[:fm_dim] * q[:fm_dim])
+def _score_tile(rows, q, w0_ref, b0_ref, w1_ref, b1_ref, w2_ref, b2_ref, *,
+                fm_dim: int, deep_dim: int):
+    """rows/q: (bt, D) f32 tiles -> (bt,) scores."""
+    fm = jnp.sum(rows[:, :fm_dim] * q[:, :fm_dim], axis=1)
     deep_in = jnp.concatenate(
-        [q[fm_dim: fm_dim + deep_dim], row[fm_dim: fm_dim + deep_dim]]
-    )[None, :]                                            # (1, 2*deep)
+        [q[:, fm_dim: fm_dim + deep_dim], rows[:, fm_dim: fm_dim + deep_dim]],
+        axis=1)                                           # (bt, 2*deep)
     h = jnp.maximum(
         jnp.dot(deep_in, w0_ref[...], preferred_element_type=jnp.float32)
         + b0_ref[...][None, :], 0.0)
     h = jnp.maximum(
         jnp.dot(h, w1_ref[...], preferred_element_type=jnp.float32)
         + b1_ref[...][None, :], 0.0)
-    logit = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)[0, 0]
-    out_ref[0] = jax.nn.sigmoid(logit + b2_ref[...][0] + fm)
+    logit = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)[:, 0]
+    return jax.nn.sigmoid(logit + b2_ref[...][0] + fm)
 
 
-def _kernel(idx_ref, row_ref, q_ref, w0, b0, w1, b1, w2, b2, out_ref, *,
-            fm_dim: int, deep_dim: int):
-    _score_body(load_row_f32(row_ref), q_ref, w0, b0, w1, b1,
-                w2, b2, out_ref, fm_dim=fm_dim, deep_dim=deep_dim)
-
-
-def _kernel_q8(idx_ref, row_ref, scale_ref, q_ref, w0, b0, w1, b1, w2, b2,
-               out_ref, *, fm_dim: int, deep_dim: int):
-    row = load_row_f32(row_ref) * scale_ref[0, 0]
-    _score_body(row, q_ref, w0, b0, w1, b1, w2, b2, out_ref,
-                fm_dim=fm_dim, deep_dim=deep_dim)
+def _kernel(idx_ref, *refs, fm_dim: int, deep_dim: int, bt: int,
+            quant: bool, q_shared: bool):
+    if quant:
+        (data_ref, scales_ref, q_ref, w0, b0, w1, b1, w2, b2,
+         out_ref, vmem, svmem, dsem, ssem) = refs
+    else:
+        (data_ref, q_ref, w0, b0, w1, b1, w2, b2,
+         out_ref, vmem, dsem) = refs
+    t = pl.program_id(0)
+    gathers = [RowGather(idx_ref, data_ref, vmem, dsem, bt)]
+    if quant:
+        gathers.append(RowGather(idx_ref, scales_ref, svmem, ssem, bt))
+    slot = schedule_double_buffer(t, gathers)
+    rows = rows_f32(vmem[slot])                           # (bt, D)
+    if quant:
+        rows = rows * svmem[slot]                         # (bt, 1) scales
+    q = q_ref[...]
+    if q_shared:
+        q = jnp.broadcast_to(q, (bt, q.shape[-1]))
+    out_ref[...] = _score_tile(rows, q, w0, b0, w1, b1, w2, b2,
+                               fm_dim=fm_dim, deep_dim=deep_dim)
 
 
 @functools.partial(jax.jit, static_argnames=("fm_dim", "deep_dim",
-                                             "q_shared", "interpret"))
+                                             "q_shared", "interpret", "bt"))
 def deepfm_score_fused_pallas(data, scales, idx, query, w0, b0, w1, b1,
                               w2, b2, *, fm_dim: int = 8, deep_dim: int = 32,
                               q_shared: bool = False,
-                              interpret: bool = False) -> jax.Array:
+                              interpret: bool = False,
+                              bt: int = 8) -> jax.Array:
     """data: (N, D) resident corpus (f32/bf16/int8); scales: (N, 1) f32 for
     int8 else None; idx: (M,) int32 (pre-clamped >= 0); query: (M, D) rows,
     or (1, D) shared across candidates when ``q_shared`` (the kernel
-    broadcasts — no (M, D) query copy is ever built)."""
+    broadcasts — no (M, D) query copy is ever built); bt: candidate rows
+    per grid step (autotuned; M is padded up to a multiple)."""
     M = idx.shape[0]
     D = data.shape[1]
     quant = scales is not None
-    row_at = lambda m, idx_ref: (idx_ref[m], 0)
-    q_at = (lambda m, idx_ref: (0, 0)) if q_shared \
-        else (lambda m, idx_ref: (m, 0))
-    full = lambda *s: pl.BlockSpec(s, lambda m, idx_ref: tuple(0 for _ in s))
-    in_specs = [pl.BlockSpec((1, D), row_at)]
+    bt = max(1, min(int(bt), M))
+    mp = -(-M // bt) * bt
+    idx = jnp.pad(idx, (0, mp - M))
+    if not q_shared:
+        query = jnp.pad(query, ((0, mp - M), (0, 0)))
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    full = lambda *s: pl.BlockSpec(s, lambda t, idx_ref: tuple(0 for _ in s))
+    q_spec = full(1, query.shape[1]) if q_shared \
+        else pl.BlockSpec((bt, query.shape[1]), lambda t, idx_ref: (t, 0))
+    in_specs = [any_spec]
     args = [data]
+    scratch = [pltpu.VMEM((2, bt, D), data.dtype)]
     if quant:
-        in_specs.append(pl.BlockSpec((1, 1), row_at))
+        in_specs.append(any_spec)
         args.append(scales)
-        body = functools.partial(_kernel_q8, fm_dim=fm_dim, deep_dim=deep_dim)
-    else:
-        body = functools.partial(_kernel, fm_dim=fm_dim, deep_dim=deep_dim)
+        scratch.append(pltpu.VMEM((2, bt, 1), jnp.float32))
+    scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
+    if quant:
+        scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
     in_specs += [
-        pl.BlockSpec((1, query.shape[1]), q_at),
+        q_spec,
         full(*w0.shape), full(*b0.shape),
         full(*w1.shape), full(*b1.shape),
         full(*w2.shape), full(*b2.shape),
@@ -89,13 +112,16 @@ def deepfm_score_fused_pallas(data, scales, idx, query, w0, b0, w1, b1,
     args += [query, w0, b0, w1, b1, w2, b2]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(M,),
+        grid=(mp // bt,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1,), lambda m, idx_ref: (m,)),
+        out_specs=pl.BlockSpec((bt,), lambda t, idx_ref: (t,)),
+        scratch_shapes=scratch,
     )
-    return pl.pallas_call(
-        body,
+    out = pl.pallas_call(
+        functools.partial(_kernel, fm_dim=fm_dim, deep_dim=deep_dim, bt=bt,
+                          quant=quant, q_shared=q_shared),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((M,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
         interpret=interpret,
     )(idx, *args)
+    return out[:M]

@@ -1,0 +1,75 @@
+"""Double-buffered multi-row DMA gather for the wide-block fused kernels.
+
+The original fused kernels leaned on the Pallas pipeline for their gather:
+a (1, D) corpus BlockSpec whose index map reads the scalar-prefetched id,
+one row per grid step. That shape caps the compute at single-row GEMVs and
+gives the pipeline only one row of lookahead. The wide-block kernels
+instead keep the corpus in ``TPUMemorySpace.ANY`` and gather ``bt`` rows
+per grid step with explicit per-row async copies into a (2, bt, ...) VMEM
+scratch tile:
+
+    slot 0             slot 1
+    [tile t compute]   [tile t+1 DMA in flight]
+
+Step ``t`` issues tile ``t+1``'s copies *before* waiting on its own rows,
+so the next gather overlaps the current tile's (bt, ·) matmuls. Grids are
+linearized to 1-D by the callers so the tile index is just ``program_id``.
+"""
+from __future__ import annotations
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+class RowGather:
+    """Per-row async copies of ``idx``-selected rows of ``src`` into one
+    slot of a double-buffered VMEM scratch.
+
+    idx_ref:     scalar-prefetch ref holding the flat (n_tiles * bt,) row
+                 ids (callers pad/linearize)
+    src_ref:     (N, ...) source in ANY memory (corpus data or row scales)
+    scratch_ref: (2, bt, ...) VMEM scratch
+    sem_ref:     (2, bt) DMA semaphores
+    """
+
+    def __init__(self, idx_ref, src_ref, scratch_ref, sem_ref, bt: int):
+        self.idx_ref = idx_ref
+        self.src_ref = src_ref
+        self.scratch_ref = scratch_ref
+        self.sem_ref = sem_ref
+        self.bt = bt
+
+    def _dma(self, slot, tile, j):
+        return pltpu.make_async_copy(
+            self.src_ref.at[self.idx_ref[tile * self.bt + j]],
+            self.scratch_ref.at[slot, j],
+            self.sem_ref.at[slot, j])
+
+    def start(self, slot, tile):
+        for j in range(self.bt):
+            self._dma(slot, tile, j).start()
+
+    def wait(self, slot, tile):
+        for j in range(self.bt):
+            self._dma(slot, tile, j).wait()
+
+
+def schedule_double_buffer(t, gathers):
+    """The warm-up / prefetch / wait schedule for grid step ``t`` over a
+    list of ``RowGather``s (data + scales share one schedule). Returns the
+    slot index holding step ``t``'s rows, ready to read."""
+    nt = pl.num_programs(0)
+
+    @pl.when(t == 0)
+    def _():
+        for g in gathers:
+            g.start(0, 0)
+
+    @pl.when(t + 1 < nt)
+    def _():
+        for g in gathers:
+            g.start((t + 1) % 2, t + 1)
+
+    for g in gathers:
+        g.wait(t % 2, t)
+    return t % 2

@@ -6,9 +6,10 @@ pre-activation resident, then the hand-derived backward (sigmoid
 derivative, transposed matmuls with relu masks off the resident
 pre-activations), writing the value lane and the df/dx gradient rows.
 ops.py passes the transposed weights pre-materialized so the backward
-matmuls are plain MXU contractions. The fused variant gathers the frontier
-row by scalar-prefetch index (dequant-on-gather) and also writes the
-dequantized row out for the rank stage — the (Q, Dx) frontier block never
+matmuls are plain MXU contractions. The fused variant gathers ``bt``
+frontier rows per grid step (autotuned — kernels/autotune.py) into a
+double-buffered VMEM tile (dequant-on-gather) and also writes the
+dequantized rows out for the rank stage — the (Q, Dx) frontier block never
 stages through fp32 HBM.
 """
 from __future__ import annotations
@@ -20,7 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.quant import load_row_f32
+from repro.kernels.dma import RowGather, schedule_double_buffer
+from repro.kernels.quant import rows_f32
 
 
 def _value_and_grad(h, wb_refs, wt_refs, n_layers: int, d_x: int):
@@ -93,59 +95,84 @@ def mlp_grad_pallas(cand: jax.Array, query: jax.Array, *wbt,
     )(cand, query, *wbt)
 
 
-def _kernel_fused(*refs, n_layers: int, d_x: int, quant: bool):
-    idx_ref, row_ref = refs[0], refs[1]
+def _kernel_fused(idx_ref, *refs, n_layers: int, d_x: int, bt: int,
+                  quant: bool):
+    """Wide-block fused grad: ``bt`` frontier rows per grid step, DMAed
+    into a double-buffered VMEM tile (``kernels/dma.py``) so the next
+    tile's gather overlaps this tile's forward+backward."""
     if quant:
-        scale_ref, rest = refs[2], refs[3:]
-        row = load_row_f32(row_ref) * scale_ref[0, 0]
+        data_ref, scales_ref, rest = refs[0], refs[1], refs[2:]
     else:
-        rest = refs[2:]
-        row = load_row_f32(row_ref)
+        data_ref, rest = refs[0], refs[1:]
     q_ref = rest[0]
     wb_refs = rest[1: 1 + 2 * n_layers]
     wt_refs = rest[1 + 2 * n_layers: 1 + 3 * n_layers]
-    val_ref, grad_ref, x_ref = refs[-3], refs[-2], refs[-1]
-    h = jnp.concatenate([row, q_ref[0, :]])[None, :]
+    if quant:
+        (val_ref, grad_ref, x_ref,
+         vmem, svmem, dsem, ssem) = rest[1 + 3 * n_layers:]
+    else:
+        val_ref, grad_ref, x_ref, vmem, dsem = rest[1 + 3 * n_layers:]
+    t = pl.program_id(0)
+    gathers = [RowGather(idx_ref, data_ref, vmem, dsem, bt)]
+    if quant:
+        gathers.append(RowGather(idx_ref, scales_ref, svmem, ssem, bt))
+    slot = schedule_double_buffer(t, gathers)
+    rows = rows_f32(vmem[slot])                           # (bt, Dx)
+    if quant:
+        rows = rows * svmem[slot]
+    h = jnp.concatenate([rows, q_ref[...]], axis=-1)
     val, gx = _value_and_grad(h, wb_refs, wt_refs, n_layers, d_x)
-    val_ref[0] = val[0]
-    grad_ref[0, :] = gx[0]
-    x_ref[0, :] = row
+    val_ref[...] = val
+    grad_ref[...] = gx
+    x_ref[...] = rows
 
 
-@functools.partial(jax.jit, static_argnames=("n_layers", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_layers", "interpret", "bt"))
 def mlp_grad_fused_pallas(data, scales, idx, query, *wbt, n_layers: int,
-                          interpret: bool = False):
+                          interpret: bool = False, bt: int = 8):
     """data: (N, Dx) resident corpus; scales: (N, 1) f32 for int8 else None;
     idx: (Q,) int32 frontier ids (pre-clamped >= 0); query: (Q, Dq) per-lane
-    rows. Returns (vals (Q,), grads (Q, Dx), x (Q, Dx))."""
+    rows; bt: lanes per grid step (autotuned; Q is padded up to a multiple).
+    Returns (vals (Q,), grads (Q, Dx), x (Q, Dx))."""
     Q = idx.shape[0]
     D = data.shape[1]
     quant = scales is not None
-    row_at = lambda m, idx_ref: (idx_ref[m], 0)
-    full = lambda *s: pl.BlockSpec(s, lambda m, idx_ref: tuple(0 for _ in s))
-    in_specs = [pl.BlockSpec((1, D), row_at)]
+    bt = max(1, min(int(bt), Q))
+    qp = -(-Q // bt) * bt
+    idx = jnp.pad(idx, (0, qp - Q))
+    query = jnp.pad(query, ((0, qp - Q), (0, 0)))
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    full = lambda *s: pl.BlockSpec(s, lambda t, idx_ref: tuple(0 for _ in s))
+    in_specs = [any_spec]
     args = [data]
+    scratch = [pltpu.VMEM((2, bt, D), data.dtype)]
     if quant:
-        in_specs.append(pl.BlockSpec((1, 1), row_at))
+        in_specs.append(any_spec)
         args.append(scales)
-    in_specs += [pl.BlockSpec((1, query.shape[1]),
-                              lambda m, idx_ref: (m, 0))]
+        scratch.append(pltpu.VMEM((2, bt, 1), jnp.float32))
+    scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
+    if quant:
+        scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
+    in_specs += [pl.BlockSpec((bt, query.shape[1]),
+                              lambda t, idx_ref: (t, 0))]
     in_specs += [full(*a.shape) for a in wbt]
     args += [query, *wbt]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(Q,),
+        grid=(qp // bt,),
         in_specs=in_specs,
-        out_specs=(pl.BlockSpec((1,), lambda m, idx_ref: (m,)),
-                   pl.BlockSpec((1, D), lambda m, idx_ref: (m, 0)),
-                   pl.BlockSpec((1, D), lambda m, idx_ref: (m, 0))),
+        out_specs=(pl.BlockSpec((bt,), lambda t, idx_ref: (t,)),
+                   pl.BlockSpec((bt, D), lambda t, idx_ref: (t, 0)),
+                   pl.BlockSpec((bt, D), lambda t, idx_ref: (t, 0))),
+        scratch_shapes=scratch,
     )
-    return pl.pallas_call(
+    vals, grads, x = pl.pallas_call(
         functools.partial(_kernel_fused, n_layers=n_layers, d_x=D,
-                          quant=quant),
+                          quant=quant, bt=bt),
         grid_spec=grid_spec,
-        out_shape=(jax.ShapeDtypeStruct((Q,), jnp.float32),
-                   jax.ShapeDtypeStruct((Q, D), jnp.float32),
-                   jax.ShapeDtypeStruct((Q, D), jnp.float32)),
+        out_shape=(jax.ShapeDtypeStruct((qp,), jnp.float32),
+                   jax.ShapeDtypeStruct((qp, D), jnp.float32),
+                   jax.ShapeDtypeStruct((qp, D), jnp.float32)),
         interpret=interpret,
     )(idx, *args)
+    return vals[:Q], grads[:Q], x[:Q]

@@ -52,18 +52,25 @@ def mlp_value_and_grad(cand: jax.Array, query: jax.Array, mlp_params: dict,
 
 def mlp_grad_fused(store: CorpusStore, idx: jax.Array, query: jax.Array,
                    mlp_params: dict, use_pallas: bool = True,
-                   interpret: bool | None = None):
+                   interpret: bool | None = None,
+                   tile: str | None = None):
     """store: resident corpus; idx: (Q,) int32 frontier ids (clamped here);
-    query: (Q, Dq) per-lane rows. Returns (vals (Q,), grads (Q, Dx),
-    x (Q, Dx) dequantized frontier rows — feeds the rank stage, no second
-    gather)."""
+    query: (Q, Dq) per-lane rows; tile: optional override spec for the
+    autotuned rows-per-grid-step (e.g. ``":16"``). Returns (vals (Q,),
+    grads (Q, Dx), x (Q, Dx) dequantized frontier rows — feeds the rank
+    stage, no second gather)."""
+    from repro.kernels import autotune
+
     idx = jnp.maximum(idx, 0).astype(jnp.int32)
     Ws, bs = _wb(mlp_params)
     if not use_pallas:
         return mlp_grad_fused_ref(store, idx, query, Ws, bs)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    cfg = autotune.resolve(
+        "mlp_grad_fused", q=int(idx.shape[0]), m=0, d=int(store.dim),
+        dtype=store.dtype, override=autotune.parse_tile(tile))
     return mlp_grad_fused_pallas(
         store.data, store.scales, idx, query.astype(jnp.float32),
         *_flat(Ws, bs), *_wt_rows(Ws), n_layers=len(Ws),
-        interpret=interpret)
+        interpret=interpret, bt=cfg.bt)

@@ -7,10 +7,11 @@ shape as ``deepfm_score``: one VMEM-resident fusion per row block (concat,
 L small matmuls back-to-back on the MXU, one sigmoid lane out), with the
 layer count static per compile (MLP depth is a config constant).
 
-The index-fused variant walks candidates with a scalar-prefetch grid: each
-step's corpus BlockSpec selects row ``idx[m]``, dequantizing bf16/int8
-residency in VMEM, so the flattened (M, Dx) candidate block never exists
-in fp32 HBM.
+The index-fused variant walks candidate *tiles* with a scalar-prefetch
+grid: each step DMAs ``bt`` corpus rows (autotuned — kernels/autotune.py)
+into a double-buffered VMEM tile so the next tile's gather overlaps this
+tile's matmuls, dequantizing bf16/int8 residency in VMEM; the flattened
+(M, Dx) candidate block never exists in fp32 HBM.
 """
 from __future__ import annotations
 
@@ -21,7 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.quant import load_row_f32
+from repro.kernels.dma import RowGather, schedule_double_buffer
+from repro.kernels.quant import rows_f32
 
 
 def _forward(h, wb_refs, n_layers: int):
@@ -70,52 +72,83 @@ def mlp_score_pallas(cand: jax.Array, query: jax.Array, *wb,
     )(cand, query, *wb)
 
 
-def _kernel_fused(*refs, n_layers: int, quant: bool):
-    idx_ref, row_ref = refs[0], refs[1]
+def _kernel_fused(idx_ref, *refs, n_layers: int, bt: int, quant: bool,
+                  q_shared: bool):
+    """Wide-block fused scorer: ``bt`` candidate rows per grid step, DMAed
+    into a double-buffered VMEM tile (``kernels/dma.py``) so the next
+    tile's gather overlaps this tile's matmuls."""
     if quant:
-        scale_ref, rest = refs[2], refs[3:]
-        row = load_row_f32(row_ref) * scale_ref[0, 0]
+        data_ref, scales_ref, rest = refs[0], refs[1], refs[2:]
+        q_ref = rest[0]
+        wb_refs = rest[1: 1 + 2 * n_layers]
+        out_ref, vmem, svmem, dsem, ssem = rest[1 + 2 * n_layers:]
     else:
-        rest = refs[2:]
-        row = load_row_f32(row_ref)
-    q_ref = rest[0]
-    wb_refs, out_ref = rest[1:-1], refs[-1]
-    h = jnp.concatenate([row, q_ref[0, :]])[None, :]
-    out_ref[0] = _forward(h, wb_refs, n_layers)[0]
+        data_ref, rest = refs[0], refs[1:]
+        q_ref = rest[0]
+        wb_refs = rest[1: 1 + 2 * n_layers]
+        out_ref, vmem, dsem = rest[1 + 2 * n_layers:]
+    t = pl.program_id(0)
+    gathers = [RowGather(idx_ref, data_ref, vmem, dsem, bt)]
+    if quant:
+        gathers.append(RowGather(idx_ref, scales_ref, svmem, ssem, bt))
+    slot = schedule_double_buffer(t, gathers)
+    rows = rows_f32(vmem[slot])                           # (bt, Dx)
+    if quant:
+        rows = rows * svmem[slot]
+    q = q_ref[...]
+    if q_shared:
+        q = jnp.broadcast_to(q, (bt, q.shape[-1]))
+    h = jnp.concatenate([rows, q], axis=-1)
+    out_ref[...] = _forward(h, wb_refs, n_layers)
 
 
 @functools.partial(jax.jit, static_argnames=("n_layers", "q_shared",
-                                             "interpret"))
+                                             "interpret", "bt"))
 def mlp_score_fused_pallas(data, scales, idx, query, *wb, n_layers: int,
                            q_shared: bool = False,
-                           interpret: bool = False) -> jax.Array:
+                           interpret: bool = False,
+                           bt: int = 8) -> jax.Array:
     """data: (N, Dx) resident corpus; scales: (N, 1) f32 for int8 else None;
     idx: (M,) int32 (pre-clamped >= 0); query: (M, Dq) rows or (1, Dq)
-    shared. Returns (M,) f32."""
+    shared; bt: candidate rows per grid step (autotuned; M is padded up to
+    a multiple). Returns (M,) f32."""
     M = idx.shape[0]
     D = data.shape[1]
     quant = scales is not None
-    row_at = lambda m, idx_ref: (idx_ref[m], 0)
-    q_at = (lambda m, idx_ref: (0, 0)) if q_shared \
-        else (lambda m, idx_ref: (m, 0))
-    full = lambda *s: pl.BlockSpec(s, lambda m, idx_ref: tuple(0 for _ in s))
-    in_specs = [pl.BlockSpec((1, D), row_at)]
+    bt = max(1, min(int(bt), M))
+    mp = -(-M // bt) * bt
+    idx = jnp.pad(idx, (0, mp - M))
+    if not q_shared:
+        query = jnp.pad(query, ((0, mp - M), (0, 0)))
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    full = lambda *s: pl.BlockSpec(s, lambda t, idx_ref: tuple(0 for _ in s))
+    q_spec = full(1, query.shape[1]) if q_shared \
+        else pl.BlockSpec((bt, query.shape[1]), lambda t, idx_ref: (t, 0))
+    in_specs = [any_spec]
     args = [data]
+    scratch = [pltpu.VMEM((2, bt, D), data.dtype)]
     if quant:
-        in_specs.append(pl.BlockSpec((1, 1), row_at))
+        in_specs.append(any_spec)
         args.append(scales)
-    in_specs += [pl.BlockSpec((1, query.shape[1]), q_at)]
+        scratch.append(pltpu.VMEM((2, bt, 1), jnp.float32))
+    scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
+    if quant:
+        scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
+    in_specs += [q_spec]
     in_specs += [full(*a.shape) for a in wb]
     args += [query, *wb]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(M,),
+        grid=(mp // bt,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1,), lambda m, idx_ref: (m,)),
+        out_specs=pl.BlockSpec((bt,), lambda t, idx_ref: (t,)),
+        scratch_shapes=scratch,
     )
-    return pl.pallas_call(
-        functools.partial(_kernel_fused, n_layers=n_layers, quant=quant),
+    out = pl.pallas_call(
+        functools.partial(_kernel_fused, n_layers=n_layers, bt=bt,
+                          quant=quant, q_shared=q_shared),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((M,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
         interpret=interpret,
     )(idx, *args)
+    return out[:M]

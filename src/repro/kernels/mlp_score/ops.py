@@ -61,19 +61,26 @@ def mlp_score(cand: jax.Array, query: jax.Array, mlp_params: dict,
 
 def mlp_score_fused(store: CorpusStore, idx: jax.Array, query: jax.Array,
                     mlp_params: dict, use_pallas: bool = True,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    tile: str | None = None) -> jax.Array:
     """store: resident corpus; idx: (M,) int32 candidate ids (may contain -1
     padding — clamped here; mask scores at the call site); query: (M, Dq)
-    rows or a single (Dq,) vector. Returns (M,) f32."""
+    rows or a single (Dq,) vector; tile: optional override spec for the
+    autotuned rows-per-grid-step (e.g. ``":16"``). Returns (M,) f32."""
+    from repro.kernels import autotune
+
     idx = jnp.maximum(idx, 0).astype(jnp.int32)
     Ws, bs = _wb(mlp_params)
     if not use_pallas:
         return mlp_score_fused_ref(store, idx, query, Ws, bs)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    cfg = autotune.resolve(
+        "mlp_score_fused", q=0, m=int(idx.shape[0]), d=int(store.dim),
+        dtype=store.dtype, override=autotune.parse_tile(tile))
     q_shared = query.ndim == 1
     q_arg = query[None, :] if q_shared else query
     return mlp_score_fused_pallas(
         store.data, store.scales, idx, q_arg.astype(jnp.float32),
         *_flat(Ws, bs), n_layers=len(Ws), q_shared=q_shared,
-        interpret=interpret)
+        interpret=interpret, bt=cfg.bt)

@@ -1,19 +1,24 @@
-"""Index-fused gradient-ranking Pallas kernel (indices in, keys out).
+"""Index-fused gradient-ranking Pallas kernel (indices in, keys out),
+wide-block edition.
 
 The pre-gathered ``neighbor_rank`` kernel needs a (Q, B, D) fp32 neighbor
 block staged through HBM before it runs. This variant takes the resident
 corpus plus the (Q, B) neighbor-id table and performs the row gather
-*inside* the kernel via scalar-prefetch indexing: the grid walks (q, b)
-pairs and each step's corpus BlockSpec selects row ``idx[q, b]`` directly —
-``PrefetchScalarGridSpec`` makes the ids available before the body runs, so
-the pipeline's automatic double-buffering overlaps each row's HBM→VMEM DMA
-with the previous step's compute. The gathered block never exists in HBM,
-and with bf16/int8 residency each row moves 2x/4x fewer bytes.
+*inside* the kernel — and instead of the original one-(q, b)-pair-per-step
+BlockSpec gather, each grid step now DMAs a tile of ``bt`` neighbor rows
+into a double-buffered (2, bt, D) VMEM scratch (``kernels/dma.py``). The
+(q, neighbor-tile) grid is linearized to 1-D so the double-buffer schedule
+is uniform: step ``t`` covers lane ``t // tiles_per_q``'s neighbors
+``[bt·(t % tiles_per_q), ...)``, and step ``t+1``'s row copies (which may
+cross a lane boundary — the flat id vector doesn't care) are issued before
+step ``t``'s compute, hiding the gather behind the (bt, D) rank math.
+``bt`` comes from the autotune cache; B is padded up to a multiple.
 
-Per (q, b) step: dequantize the row (int8: per-row scale), separation angle
-(or projection) of x' − x against ∂f/∂x, one scalar key out. The α·θ band
-needs the row-wise best key, which is O(Q·B) with no D dimension — ops.py
-applies it on the kernel output (shared with the ref's masking helper).
+Per tile: dequantize the rows (int8: per-row scale tile on the same DMA
+schedule), separation angle (or projection) of x' − x against ∂f/∂x, a
+(bt,) key row out. The α·θ band needs the row-wise best key, which is
+O(Q·B) with no D dimension — ops.py applies it on the kernel output
+(shared with the ref's masking helper).
 """
 from __future__ import annotations
 
@@ -24,68 +29,88 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.quant import load_row_f32
+from repro.kernels.dma import RowGather, schedule_double_buffer
+from repro.kernels.quant import rows_f32
 
 
-def _kernel(idx_ref, x_ref, g_ref, row_ref, key_ref, *, rank_by: str):
-    _rank_body(x_ref, g_ref, load_row_f32(row_ref), key_ref, rank_by=rank_by)
-
-
-def _kernel_q8(idx_ref, x_ref, g_ref, row_ref, scale_ref, key_ref, *,
-               rank_by: str):
-    row = load_row_f32(row_ref) * scale_ref[0, 0]
-    _rank_body(x_ref, g_ref, row, key_ref, rank_by=rank_by)
-
-
-def _rank_body(x_ref, g_ref, row, key_ref, *, rank_by: str):
+def _rank_tile(x, g, rows, *, rank_by: str):
+    """x/g: (D,); rows: (bt, D) -> (bt,) keys."""
     eps = 1e-12
-    x = x_ref[0, :]
-    g = g_ref[0, :]
-    diff = row - x
-    dot = jnp.sum(diff * g)
+    diff = rows - x[None, :]
+    dot = jnp.sum(diff * g[None, :], axis=1)
     gnorm = jnp.sqrt(jnp.sum(g * g)) + eps
     if rank_by == "angle":
-        dnorm = jnp.sqrt(jnp.sum(diff * diff)) + eps
+        dnorm = jnp.sqrt(jnp.sum(diff * diff, axis=1)) + eps
         cosv = jnp.clip(dot / (dnorm * gnorm), -1.0, 1.0)
         key = jnp.arccos(cosv)
     else:
         key = -(dot / gnorm)
-    key_ref[0, 0] = key.astype(jnp.float32)
+    return key.astype(jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("rank_by", "interpret"))
+def _kernel(idx_ref, *refs, rank_by: str, bt: int, quant: bool):
+    if quant:
+        (x_ref, g_ref, data_ref, scales_ref, key_ref,
+         vmem, svmem, dsem, ssem) = refs
+    else:
+        x_ref, g_ref, data_ref, key_ref, vmem, dsem = refs
+    t = pl.program_id(0)
+    gathers = [RowGather(idx_ref, data_ref, vmem, dsem, bt)]
+    if quant:
+        gathers.append(RowGather(idx_ref, scales_ref, svmem, ssem, bt))
+    slot = schedule_double_buffer(t, gathers)
+    rows = rows_f32(vmem[slot])                           # (bt, D)
+    if quant:
+        rows = rows * svmem[slot]
+    key_ref[0, :] = _rank_tile(x_ref[0, :], g_ref[0, :], rows,
+                               rank_by=rank_by)
+
+
+@functools.partial(jax.jit, static_argnames=("rank_by", "interpret", "bt"))
 def neighbor_rank_fused_pallas(x, grad, data, scales, idx, *,
                                rank_by: str = "angle",
-                               interpret: bool = False) -> jax.Array:
+                               interpret: bool = False,
+                               bt: int = 8) -> jax.Array:
     """x/grad: (Q, D) f32; data: (N, D) resident corpus (f32/bf16/int8);
     scales: (N, 1) f32 for int8 data, else None; idx: (Q, B) int32 row ids
-    (must be pre-clamped >= 0). Returns raw keys (Q, B) f32 — validity
+    (must be pre-clamped >= 0); bt: neighbor rows per grid step (autotuned;
+    B is padded up to a multiple). Returns raw keys (Q, B) f32 — validity
     masking and the α·θ band are applied by ops.py."""
     Q, B = idx.shape
     D = data.shape[1]
     quant = scales is not None
-    row_at = lambda q, b, idx_ref: (idx_ref[q, b], 0)
+    bt = max(1, min(int(bt), B))
+    bp = -(-B // bt) * bt
+    tiles_per_q = bp // bt
+    idx_flat = jnp.pad(idx, ((0, 0), (0, bp - B))).reshape(Q * bp)
+    lane = lambda t, idx_ref: (t // tiles_per_q, 0)
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
     in_specs = [
-        pl.BlockSpec((1, D), lambda q, b, idx_ref: (q, 0)),   # x
-        pl.BlockSpec((1, D), lambda q, b, idx_ref: (q, 0)),   # grad
-        pl.BlockSpec((1, D), row_at),                         # corpus row
+        pl.BlockSpec((1, D), lane),                       # x
+        pl.BlockSpec((1, D), lane),                       # grad
+        any_spec,                                         # corpus
     ]
     args = [x.astype(jnp.float32), grad.astype(jnp.float32), data]
+    scratch = [pltpu.VMEM((2, bt, D), data.dtype)]
     if quant:
-        in_specs.append(pl.BlockSpec((1, 1), row_at))         # row scale
+        in_specs.append(any_spec)                         # row scales
         args.append(scales)
-        body = functools.partial(_kernel_q8, rank_by=rank_by)
-    else:
-        body = functools.partial(_kernel, rank_by=rank_by)
+        scratch.append(pltpu.VMEM((2, bt, 1), jnp.float32))
+    scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
+    if quant:
+        scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(Q, B),
+        grid=(Q * tiles_per_q,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1), lambda q, b, idx_ref: (q, b)),
+        out_specs=pl.BlockSpec(
+            (1, bt), lambda t, idx_ref: (t // tiles_per_q, t % tiles_per_q)),
+        scratch_shapes=scratch,
     )
-    return pl.pallas_call(
-        body,
+    key = pl.pallas_call(
+        functools.partial(_kernel, rank_by=rank_by, bt=bt, quant=quant),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((Q, B), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Q, bp), jnp.float32),
         interpret=interpret,
-    )(idx, *args)
+    )(idx_flat, *args)
+    return key[:, :B]

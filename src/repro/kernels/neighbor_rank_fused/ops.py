@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.corpus import CorpusStore
+from repro.kernels import autotune
 from repro.kernels.neighbor_rank_fused.kernel import neighbor_rank_fused_pallas
 from repro.kernels.neighbor_rank_fused.ref import (mask_from_key,
                                                    neighbor_rank_fused_ref)
@@ -14,18 +15,25 @@ from repro.kernels.neighbor_rank_fused.ref import (mask_from_key,
 def neighbor_rank_fused(x, grad, store: CorpusStore, idx, valid,
                         alpha: float = 1.01, rank_by: str = "angle",
                         use_pallas: bool = True,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None,
+                        tile: str | None = None):
     """Batched Eq. 3/4 ranking straight off the resident corpus.
 
     x/grad: (Q, D); store: CorpusStore; idx: (Q, B) int32 neighbor ids
     (may contain -1 padding — clamped here, masked by ``valid``); valid:
-    (Q, B) bool. Returns (key (Q, B) f32, in_range (Q, B) bool)."""
+    (Q, B) bool; tile: optional override spec for the autotuned
+    rows-per-grid-step (e.g. ``":16"``). Returns (key (Q, B) f32,
+    in_range (Q, B) bool)."""
     if not use_pallas:
         return neighbor_rank_fused_ref(x, grad, store, jnp.maximum(idx, 0),
                                        valid, alpha=alpha, rank_by=rank_by)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    cfg = autotune.resolve(
+        "neighbor_rank_fused", q=int(idx.shape[0]), m=int(idx.shape[1]),
+        d=int(store.dim), dtype=store.dtype,
+        override=autotune.parse_tile(tile))
     key = neighbor_rank_fused_pallas(
         x, grad, store.data, store.scales, jnp.maximum(idx, 0).astype(jnp.int32),
-        rank_by=rank_by, interpret=interpret)
+        rank_by=rank_by, interpret=interpret, bt=cfg.bt)
     return mask_from_key(key, valid, alpha, rank_by)

@@ -5,13 +5,17 @@ import jax
 import jax.numpy as jnp
 
 
-def load_row_f32(row_ref):
-    """Dequantize one corpus row block to f32 in VMEM. uint16 blocks are
-    bf16 bit patterns (core/corpus.py residency format): widen-shift-bitcast
-    — free on TPU, SIMD-friendly everywhere. int8 callers multiply by the
-    per-row scale afterwards."""
-    row = row_ref[0, :]
-    if row.dtype == jnp.uint16:
+def rows_f32(rows):
+    """Dequantize a resident row tile (any shape) to f32 in VMEM. uint16
+    entries are bf16 bit patterns (core/corpus.py residency format):
+    widen-shift-bitcast — free on TPU, SIMD-friendly everywhere. int8
+    callers multiply by the per-row scales afterwards."""
+    if rows.dtype == jnp.uint16:
         return jax.lax.bitcast_convert_type(
-            row.astype(jnp.uint32) << 16, jnp.float32)
-    return row.astype(jnp.float32)
+            rows.astype(jnp.uint32) << 16, jnp.float32)
+    return rows.astype(jnp.float32)
+
+
+def load_row_f32(row_ref):
+    """Dequantize one (1, D) corpus row block to f32 (see ``rows_f32``)."""
+    return rows_f32(row_ref[0, :])

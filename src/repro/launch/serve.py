@@ -182,6 +182,16 @@ def main() -> None:
                          "index-fused search path")
     ap.add_argument("--fused", action="store_true",
                     help="index-fused rank/score stages at fp32 residency")
+    ap.add_argument("--tile", type=str, default=None,
+                    help="fused-path tiling override "
+                         "('tile'|'rowwise'[:<bt>] — kernels/autotune.py "
+                         "spec); default resolves the tuning cache / "
+                         "shipped defaults per shape")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep the fused-step plan at this serving shape "
+                         "before accepting traffic and persist the winner "
+                         "to the tuning cache (skipped on a cache hit — "
+                         "the second serve never pays the sweep)")
     ap.add_argument("--index", type=str, default=None,
                     help="serve a prebuilt index directory (graph/io.py)")
     ap.add_argument("--save-index", type=str, default=None,
@@ -259,7 +269,8 @@ def main() -> None:
 
     cfg = SearchConfig(k=args.k, ef=args.ef, mode=args.mode,
                        budget=args.budget, alpha=args.alpha)
-    options = EngineOptions(fused=fused, corpus_dtype=args.corpus_dtype)
+    options = EngineOptions(fused=fused, corpus_dtype=args.corpus_dtype,
+                            tile=args.tile)
 
     base_j = jnp.asarray(base)
     nbrs_j = jnp.asarray(graph.neighbors)
@@ -272,6 +283,29 @@ def main() -> None:
         mib = store.nbytes() / 2**20
         print(f"[serve] corpus resident: dtype={store.dtype} {mib:.1f} MiB "
               f"(fused gather-rank-score path)")
+
+    if args.autotune and fused:
+        # sweep the fused-step plan at the exact serving shape before any
+        # traffic; a prior run at this shape is a cache hit (no sweep)
+        from repro.kernels import autotune
+        lanes = args.lanes if args.runtime == "continuous" else args.batch
+        # own generator: the sweep must not advance the serving rng stream
+        # (query workload — and recall — would change under --autotune)
+        tune_rng = np.random.default_rng(12345)
+        tune_q = jnp.asarray(tune_rng.normal(
+            size=(lanes, args.dim)).astype(np.float32))
+        tune_e = jnp.full((lanes,), graph.entry, jnp.int32)
+        t0 = time.time()
+        tuned = autotune.tune_engine_step(measure, corpus_arg, nbrs_j,
+                                          tune_q, tune_e, cfg, options)
+        print(f"[serve] autotune: engine_step plan={tuned.plan} "
+              f"(Q={lanes}, B={nbrs_j.shape[1]}, D={args.dim}, "
+              f"{args.corpus_dtype}) in {time.time() - t0:.1f}s "
+              f"-> {autotune.cache_path()}")
+    elif args.autotune:
+        print("[serve] autotune: nothing to tune (the tile plan applies "
+              "to the fused path; pass --fused or a non-fp32 "
+              "--corpus-dtype)")
 
     if args.runtime == "continuous":
         serve_continuous(args, graph, measure, cfg, options, corpus_arg,

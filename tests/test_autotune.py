@@ -1,0 +1,262 @@
+"""Tile-autotuning tests (DESIGN.md §8): override-spec parsing, the cache
+round-trip contract (second sweep is skipped; shipped defaults never
+suppress one), lookup precedence, shipped-defaults coverage, wide-kernel
+bt>1 parity on non-divisible shapes, and the engine-level
+tile/rowwise/unfused fp32 bit-match."""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (EngineOptions, SearchConfig, deepfm_measure,
+                        make_corpus_store, search_measure)
+from repro.graph import build_l2_graph
+from repro.kernels import autotune
+from repro.kernels.autotune import TileConfig
+from repro.models import deepfm as deepfm_lib
+from repro.models import layers as L
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path, monkeypatch):
+    """Point the local tuning cache at a throwaway file so tests never read
+    or write the repo-local .tuning_cache.json."""
+    path = tmp_path / "tuning.json"
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(path))
+    return path
+
+
+# ---------------------------------------------------------------------------
+# override-spec parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_tile_specs():
+    assert autotune.parse_tile(None) is None
+    assert autotune.parse_tile("") is None
+    assert autotune.parse_tile("tile") == TileConfig(plan="tile", bt=0)
+    assert autotune.parse_tile("rowwise") == TileConfig(plan="rowwise", bt=0)
+    assert autotune.parse_tile(":16") == TileConfig(plan="", bt=16)
+    assert autotune.parse_tile("tile:4") == TileConfig(plan="tile", bt=4)
+    for bad in ("diag", "tile:0", "tile:-3", "tile:x"):
+        with pytest.raises(ValueError):
+            autotune.parse_tile(bad)
+
+
+def test_parse_tile_merges_over_base():
+    base = TileConfig(plan="rowwise", bt=8)
+    assert autotune.parse_tile(":16").merged_over(base) == \
+        TileConfig(plan="rowwise", bt=16)
+    assert autotune.parse_tile("tile").merged_over(base) == \
+        TileConfig(plan="tile", bt=8)
+    assert autotune.parse_tile("tile:4").merged_over(base) == \
+        TileConfig(plan="tile", bt=4)
+
+
+# ---------------------------------------------------------------------------
+# lookup precedence + shipped defaults
+# ---------------------------------------------------------------------------
+
+def test_resolve_precedence(tmp_cache, monkeypatch):
+    """override > local exact > shipped exact > local wildcard > shipped
+    wildcard > builtin."""
+    shape = dict(q=7, m=13, d=24, dtype="float32")
+    monkeypatch.setattr(autotune, "shipped_defaults", lambda: {
+        autotune.make_key("engine_step", 7, 13, 24, "float32"):
+            {"plan": "rowwise", "bt": 2},
+        autotune._wildcard("engine_step", None): {"plan": "tile", "bt": 3},
+    })
+    # nothing local: shipped exact beats shipped wildcard
+    assert autotune.resolve("engine_step", **shape) == \
+        TileConfig(plan="rowwise", bt=2)
+    # local wildcard loses to shipped exact...
+    wild = autotune._wildcard("engine_step", None)
+    autotune.save_cache({wild: {"plan": "tile", "bt": 5}})
+    assert autotune.resolve("engine_step", **shape) == \
+        TileConfig(plan="rowwise", bt=2)
+    # ...but wins where only wildcards match
+    assert autotune.resolve("engine_step", q=1, m=1, d=1) == \
+        TileConfig(plan="tile", bt=5)
+    # local exact beats everything except the override
+    autotune.record("engine_step", TileConfig(plan="tile", bt=16), **shape)
+    assert autotune.resolve("engine_step", **shape) == \
+        TileConfig(plan="tile", bt=16)
+    # override merges field-wise on top of the winner
+    assert autotune.resolve("engine_step", **shape,
+                            override=autotune.parse_tile("rowwise")) == \
+        TileConfig(plan="rowwise", bt=16)
+    assert autotune.resolve("engine_step", **shape,
+                            override=autotune.parse_tile(":4")) == \
+        TileConfig(plan="tile", bt=4)
+    # builtin fallback when nothing matches anywhere
+    monkeypatch.setattr(autotune, "shipped_defaults", lambda: {})
+    autotune.save_cache({})
+    assert autotune.resolve("engine_step", **shape) == TileConfig()
+
+
+def test_shipped_defaults_cover_cpu_kernels(tmp_cache):
+    """Every tunable kernel ships a cpu wildcard so a fresh checkout never
+    falls through to the builtin, and the engine-step CPU plan is tile."""
+    shipped = autotune.shipped_defaults()
+    for kernel in autotune.TUNABLE_KERNELS:
+        assert f"cpu|{kernel}|*" in shipped, kernel
+    # local cache is empty (tmp_cache) → lookup resolves via shipped
+    cfg = autotune.lookup("engine_step", q=999, m=999, d=999, backend="cpu")
+    assert cfg is not None and cfg.plan == "tile"
+
+
+# ---------------------------------------------------------------------------
+# round-trip: the second sweep is free
+# ---------------------------------------------------------------------------
+
+def test_autotune_round_trip_skips_second_sweep(tmp_cache):
+    calls = []
+
+    def bench(cand):
+        calls.append(cand)
+        return 0.001 if cand.plan == "tile" else 0.002
+
+    cands = [TileConfig(plan="rowwise", bt=8), TileConfig(plan="tile", bt=8)]
+    shape = dict(q=16, m=8, d=32, dtype="float32")
+    won = autotune.autotune("engine_step", cands, bench, **shape)
+    assert won.plan == "tile" and len(calls) == 2
+    # second run: exact key is in the LOCAL cache → bench never called
+    again = autotune.autotune("engine_step", cands, bench, **shape)
+    assert again == won and len(calls) == 2
+    # a different shape is a different key → sweeps
+    autotune.autotune("engine_step", cands, bench, q=99, m=8, d=32)
+    assert len(calls) == 4
+    # force re-measures even on a hit
+    autotune.autotune("engine_step", cands, bench, force=True, **shape)
+    assert len(calls) == 6
+    # the persisted entry carries the sweep evidence
+    doc = json.loads(tmp_cache.read_text())
+    entry = doc["entries"][autotune.make_key("engine_step", 16, 8, 32,
+                                             "float32")]
+    assert entry["plan"] == "tile" and "swept_us" in entry
+    assert set(entry["swept_us"]) == {"rowwise:8", "tile:8"}
+
+
+def test_shipped_defaults_do_not_suppress_sweep(tmp_cache, monkeypatch):
+    """A shipped exact key must NOT short-circuit a requested sweep — only
+    locally measured results do."""
+    key = autotune.make_key("engine_step", 4, 4, 4, "float32")
+    monkeypatch.setattr(autotune, "shipped_defaults",
+                        lambda: {key: {"plan": "rowwise", "bt": 8}})
+    calls = []
+
+    def bench(cand):
+        calls.append(cand)
+        return 0.001
+
+    autotune.autotune("engine_step", [TileConfig(plan="tile", bt=8)], bench,
+                      q=4, m=4, d=4)
+    assert len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# wide-block kernels: bt > 1 parity on non-divisible shapes (interpret)
+# ---------------------------------------------------------------------------
+
+def test_wide_score_kernels_bt_parity(rng):
+    """bt=1 and a non-divisible bt=5 (M=37) agree with the jnp fused ref
+    for both score kernels, fp32 and int8 residency."""
+    from repro.kernels.deepfm_score_fused import deepfm_score_fused
+    from repro.kernels.mlp_score.ops import mlp_score_fused
+    D, fm, M = 24, 8, 37
+    base = rng.normal(size=(120, D)).astype(np.float32)
+    ids = jnp.asarray(rng.integers(0, 120, size=(M,)).astype(np.int32))
+    query = jnp.asarray(rng.normal(size=(M, D)).astype(np.float32))
+    dfm, _ = L.init_mlp(jax.random.PRNGKey(0), [2 * (D - fm), 16, 16, 1],
+                        jnp.float32)
+    mlp, _ = L.init_mlp(jax.random.PRNGKey(1), [2 * D, 16, 1], jnp.float32)
+    for dtype in ("float32", "int8"):
+        store = make_corpus_store(base, dtype)
+        ref = deepfm_score_fused(store, ids, query, dfm, fm,
+                                 use_pallas=False)
+        for spec in (":1", ":5"):
+            out = deepfm_score_fused(store, ids, query, dfm, fm,
+                                     use_pallas=True, interpret=True,
+                                     tile=spec)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-6)
+        ref_m = mlp_score_fused(store, ids, query, mlp, use_pallas=False)
+        for spec in (":1", ":5"):
+            out_m = mlp_score_fused(store, ids, query, mlp, use_pallas=True,
+                                    interpret=True, tile=spec)
+            np.testing.assert_allclose(np.asarray(out_m), np.asarray(ref_m),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_wide_grad_and_rank_kernels_bt_parity(rng):
+    """Same bt sweep for the grad trios (vals, grads, dequantized frontier
+    rows) and the fused ranker on a B not divisible by bt."""
+    from repro.kernels.deepfm_grad_fused import deepfm_grad_fused
+    from repro.kernels.mlp_grad.ops import mlp_grad_fused
+    from repro.kernels.neighbor_rank_fused import neighbor_rank_fused
+    D, fm, Q, B = 24, 8, 7, 9
+    base = rng.normal(size=(90, D)).astype(np.float32)
+    store = make_corpus_store(base, "float32")
+    fid = jnp.asarray(rng.integers(0, 90, size=(Q,)).astype(np.int32))
+    qrows = jnp.asarray(rng.normal(size=(Q, D)).astype(np.float32))
+    dfm, _ = L.init_mlp(jax.random.PRNGKey(0), [2 * (D - fm), 16, 16, 1],
+                        jnp.float32)
+    mlp, _ = L.init_mlp(jax.random.PRNGKey(1), [2 * D, 16, 1], jnp.float32)
+    for fused, params, extra in ((deepfm_grad_fused, dfm, (fm,)),
+                                 (mlp_grad_fused, mlp, ())):
+        refs = fused(store, fid, qrows, params, *extra, use_pallas=False)
+        for spec in (":1", ":4"):
+            outs = fused(store, fid, qrows, params, *extra, use_pallas=True,
+                         interpret=True, tile=spec)
+            for o, r in zip(outs, refs):
+                np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                           rtol=1e-5, atol=1e-5)
+    x = jnp.asarray(rng.normal(size=(Q, D)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(Q, D)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 90, size=(Q, B)).astype(np.int32))
+    valid = jnp.asarray(rng.random((Q, B)) < 0.8).at[:, 0].set(True)
+    k_ref, m_ref = neighbor_rank_fused(x, g, store, idx, valid, 1.2,
+                                       "angle", use_pallas=False)
+    fin = np.isfinite(np.asarray(k_ref))
+    for spec in (":1", ":4"):
+        k_p, m_p = neighbor_rank_fused(x, g, store, idx, valid, 1.2,
+                                       "angle", use_pallas=True,
+                                       interpret=True, tile=spec)
+        np.testing.assert_allclose(np.asarray(k_p)[fin],
+                                   np.asarray(k_ref)[fin],
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(m_p), np.asarray(m_ref))
+
+
+# ---------------------------------------------------------------------------
+# engine level: every plan is the same fp32 float program
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["guitar", "sl2g"])
+def test_engine_tile_plan_bit_matches_rowwise_and_unfused(mode):
+    """EngineOptions(tile=...) picks a dataflow, never a result: tile,
+    rowwise, and unfused fp32 searches are ids-AND-scores bit-identical."""
+    cfg_m = deepfm_lib.DeepFMConfig()
+    params, _ = deepfm_lib.init_measure(jax.random.PRNGKey(0), cfg_m)
+    measure = deepfm_measure(params, cfg_m)
+    rng = np.random.default_rng(5)
+    base = rng.normal(size=(400, cfg_m.vec_dim)).astype(np.float32) * 0.5
+    queries = rng.normal(size=(6, cfg_m.vec_dim)).astype(np.float32) * 0.5
+    graph = build_l2_graph(base, m=10, k_construction=32)
+    args = (jnp.asarray(base), jnp.asarray(graph.neighbors),
+            jnp.asarray(queries), jnp.full((6,), graph.entry, jnp.int32))
+    cfg = SearchConfig(k=10, ef=32, mode=mode, budget=6, alpha=1.1)
+    r_un = search_measure(measure, *args, cfg, EngineOptions())
+    r_row = search_measure(measure, *args, cfg,
+                           EngineOptions(fused=True, tile="rowwise"))
+    r_tile = search_measure(measure, *args, cfg,
+                            EngineOptions(fused=True, tile="tile"))
+    for r in (r_row, r_tile):
+        np.testing.assert_array_equal(np.asarray(r_un.ids),
+                                      np.asarray(r.ids))
+        np.testing.assert_array_equal(np.asarray(r_un.scores),
+                                      np.asarray(r.scores))
+        np.testing.assert_array_equal(np.asarray(r_un.n_eval),
+                                      np.asarray(r.n_eval))

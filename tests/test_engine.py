@@ -170,7 +170,8 @@ def test_engine_one_fused_measure_call_per_iteration(deepfm_system, mode):
     counted = dataclasses.replace(eng, measure=counting_measure)
     steps = []
     res = counted.search_debug(m.params, base_j, nbrs_j, queries_j, entries,
-                               on_step=lambda i, s: steps.append(i))
+                               on_step=lambda i, s: steps.append(i),
+                               jit_steps=False)
     C = cfg.budget if mode == "guitar" else nbrs_j.shape[1]
     D = base_j.shape[1]
     assert len(calls) == len(steps) + 1          # +1 entry seeding
@@ -181,6 +182,42 @@ def test_engine_one_fused_measure_call_per_iteration(deepfm_system, mode):
     # the debug path is the same algorithm as the jitted path
     res_jit = eng.search(m.params, base_j, nbrs_j, queries_j, entries)
     assert (np.asarray(res.ids) == np.asarray(res_jit.ids)).all()
+
+
+@pytest.mark.parametrize("family", ["deepfm", "mlp"])
+def test_search_debug_bit_matches_jitted_search(deepfm_system, family):
+    """The eager host loop (`search_debug`) is the SAME program as the
+    jitted `search` — ids AND scores bit-identical, counters included —
+    for both servable bundles, unfused and fused (the fused path routes
+    the debug loop through the tile/rowwise plan too)."""
+    if family == "deepfm":
+        sys = deepfm_system
+        m = sys["measure"]
+        base_j, nbrs_j, queries_j, entries = _jarrs(sys)
+    else:
+        m = mlp_measure(jax.random.PRNGKey(2), 12, 12, hidden=(16,))
+        rng = np.random.default_rng(11)
+        base = rng.normal(size=(300, 12)).astype(np.float32)
+        queries = rng.normal(size=(6, 12)).astype(np.float32)
+        graph = build_l2_graph(base, m=8, k_construction=24)
+        base_j, nbrs_j = jnp.asarray(base), jnp.asarray(graph.neighbors)
+        queries_j = jnp.asarray(queries)
+        entries = jnp.full((6,), graph.entry, jnp.int32)
+    cfg = SearchConfig(k=8, ef=24, mode="guitar", budget=5, alpha=1.1,
+                       max_iters=48)
+    for options in (EngineOptions(), EngineOptions(fused=True)):
+        eng = build_engine(m, cfg, options)
+        res_j = eng.search(m.params, base_j, nbrs_j, queries_j, entries)
+        res_d = eng.search_debug(m.params, base_j, nbrs_j, queries_j,
+                                 entries)
+        np.testing.assert_array_equal(np.asarray(res_j.ids),
+                                      np.asarray(res_d.ids))
+        np.testing.assert_array_equal(np.asarray(res_j.scores),
+                                      np.asarray(res_d.scores))
+        for field in ("n_eval", "n_grad", "n_iters"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(res_j, field)),
+                np.asarray(getattr(res_d, field)))
 
 
 def test_brute_force_topk_batched_matches_naive():
