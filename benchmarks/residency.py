@@ -1,0 +1,228 @@
+"""Residency benchmark: paged vs whole resident footprint, page-cache hit
+rate at serving shapes, and streaming-mutation throughput (DESIGN.md §11).
+
+Four row groups, printed as the standard ``name,us_per_call,derived`` rows:
+
+1. **Resident bytes** — a random-gather workload over a file-backed paged
+   store under a fixed LRU byte budget, per corpus size N. The whole-resident
+   footprint grows linearly with N; paged ``peak_resident_bytes`` must stay
+   bounded by ``budget + one gather's pinned working set`` no matter how
+   large the corpus gets (the --full sweep crosses N=1M).
+2. **Hit rate** — the page-cache hit rate under a reuse-heavy (zipf-shaped)
+   gather trace at a serving shape: graph traversal revisits hub pages, so
+   a sane page size should convert skew into cache hits.
+3. **Insert throughput** — streaming ``insert_rows`` against a live graph
+   index (brute-force candidates + incremental occlusion repair),
+   reported as inserts/sec.
+4. **Gates** — paged peak bounded, paged strictly below whole at the
+   largest N, and paged-vs-whole engine-search parity (bit-identical ids
+   AND scores at fp32).
+
+    PYTHONPATH=src python -m benchmarks.residency          # full sweep
+    PYTHONPATH=src python -m benchmarks.residency --smoke  # CI (~1 min)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import (SearchConfig, build_engine, make_corpus_store,
+                        mlp_measure)
+from repro.core.corpus import ResidencyPolicy, make_paged_store
+from repro.graph import build_l2_graph, insert_rows
+
+
+def bench_resident_bytes(n: int, dim: int, page_rows: int, cache_bytes: int,
+                         n_gathers: int = 50, batch: int = 512,
+                         window: int = 4096, seed: int = 0) -> dict:
+    """Fault a file-backed paged store with a locality-shaped gather trace
+    (each gather draws ``batch`` ids from a random ``window``-row span —
+    graph traversal has neighborhood locality, not uniform-random reads)
+    and report the peak resident footprint against the whole corpus size."""
+    rng = np.random.default_rng(seed)
+    with tempfile.TemporaryDirectory(prefix="residency_bench.") as d:
+        path = os.path.join(d, "base.npy")
+        # write in row blocks so the bench itself never holds the full
+        # corpus (the --full sweep crosses N=1M)
+        block = 1 << 16
+        arr = np.lib.format.open_memmap(path, mode="w+", dtype=np.float32,
+                                        shape=(n, dim))
+        for s in range(0, n, block):
+            e = min(s + block, n)
+            arr[s:e] = rng.normal(size=(e - s, dim)).astype(np.float32)
+        arr.flush()
+        del arr
+        data = np.load(path, mmap_mode="r")
+        store = make_paged_store(
+            data, "float32",
+            ResidencyPolicy("paged", page_rows=page_rows,
+                            cache_bytes=cache_bytes))
+        t0 = time.perf_counter()
+        for _ in range(n_gathers):
+            lo = int(rng.integers(0, max(1, n - window)))
+            ids = lo + rng.integers(0, min(window, n), size=batch)
+            store.cache.gather(ids)
+        dt = time.perf_counter() - t0
+        st = store.stats_snapshot()
+    page_bytes = page_rows * dim * 4
+    # one gather's pinned working set: a window-sized span touches at most
+    # window/page_rows + 1 pages — the pager never evicts pages the
+    # in-flight gather needs, so this is the only legal budget overshoot
+    pinned_pages = min(batch, window // page_rows + 2)
+    return {"n": n, "whole_bytes": n * dim * 4, "budget": cache_bytes,
+            "peak": st.peak_resident_bytes,
+            "bound": cache_bytes + pinned_pages * page_bytes,
+            "hit_rate": st.hit_rate, "evictions": st.evictions,
+            "us_per_gather": dt / n_gathers * 1e6}
+
+
+def bench_hit_rate(n: int = 100_000, dim: int = 32, page_rows: int = 1024,
+                   cache_mb: int = 16, n_gathers: int = 200,
+                   batch: int = 512, seed: int = 0) -> dict:
+    """Zipf-shaped gather trace (graph traversal revisits hub pages): the
+    LRU should convert the skew into hits."""
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(n, dim)).astype(np.float32)
+    store = make_paged_store(
+        data, "float32",
+        ResidencyPolicy("paged", page_rows=page_rows,
+                        cache_bytes=cache_mb << 20))
+    for _ in range(n_gathers):
+        ids = np.minimum(rng.zipf(1.3, size=batch) - 1, n - 1)
+        store.cache.gather(ids)
+    st = store.stats_snapshot()
+    return {"hit_rate": st.hit_rate, "hits": st.hits, "faults": st.faults,
+            "resident_bytes": st.resident_bytes}
+
+
+def bench_inserts(n0: int = 2000, dim: int = 16, m: int = 8, kc: int = 24,
+                  batch: int = 32, n_batches: int = 4, seed: int = 0) -> dict:
+    """Streaming-insert throughput: repeated ``insert_rows`` batches against
+    a live index (includes the brute-force candidate scan and the
+    incremental occlusion repair of touched nodes)."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(n0, dim)).astype(np.float32)
+    index = build_l2_graph(base, m=m, k_construction=kc, seed=seed)
+    # warm the jitted prune kernels outside the timed region
+    index = insert_rows(index, rng.normal(size=(batch, dim)).astype(np.float32))
+    t0 = time.perf_counter()
+    for _ in range(n_batches):
+        new = rng.normal(size=(batch, dim)).astype(np.float32)
+        index = insert_rows(index, new)
+    dt = time.perf_counter() - t0
+    total = batch * n_batches
+    return {"n_final": index.n, "inserted": total, "dt": dt,
+            "inserts_per_s": total / dt}
+
+
+def bench_parity(n: int = 800, dim: int = 16, n_queries: int = 32,
+                 seed: int = 0) -> dict:
+    """Engine search over a paged store must be bit-identical (ids AND
+    scores) to the whole-resident run at fp32."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(n, dim)).astype(np.float32)
+    queries = rng.normal(size=(n_queries, dim)).astype(np.float32)
+    index = build_l2_graph(base, m=8, k_construction=24, seed=seed)
+    measure = mlp_measure(jax.random.PRNGKey(1), dim, dim, hidden=(32,))
+    eng = build_engine(measure, SearchConfig(k=10, ef=32, mode="guitar"))
+    nbrs = jnp.asarray(index.neighbors)
+    q = jnp.asarray(queries)
+    entries = jnp.full((n_queries,), index.entry, jnp.int32)
+    whole = make_corpus_store(base)
+    paged = make_corpus_store(base, residency=ResidencyPolicy(
+        "paged", page_rows=128, cache_bytes=1 << 20))
+    r_w = eng.search(measure.params, whole, nbrs, q, entries)
+    r_p = eng.search(measure.params, paged, nbrs, q, entries)
+    ids_eq = bool(np.array_equal(np.asarray(r_w.ids), np.asarray(r_p.ids)))
+    sc_eq = bool(np.array_equal(np.asarray(r_w.scores),
+                                np.asarray(r_p.scores)))
+    return {"ids_equal": ids_eq, "scores_equal": sc_eq,
+            "hit_rate": paged.stats_snapshot().hit_rate}
+
+
+def _run_impl(quick: bool):
+    if quick:
+        sizes, cache_bytes, page_rows = (20_000, 60_000), 2 << 20, 256
+        gathers, batch, window = 40, 512, 4096
+        hit_kw = dict(n=40_000, cache_mb=4, n_gathers=80)
+        ins_kw = dict(n0=1200, n_batches=2)
+    else:
+        sizes, cache_bytes, page_rows = (250_000, 1_000_000), 16 << 20, 1024
+        gathers, batch, window = 80, 2048, 16_384
+        hit_kw = dict(n=200_000, cache_mb=32, n_gathers=300)
+        ins_kw = dict(n0=4000, n_batches=6)
+    rows, failures = [], []
+    last = None
+    for n in sizes:
+        rb = bench_resident_bytes(n, 32, page_rows, cache_bytes,
+                                  n_gathers=gathers, batch=batch,
+                                  window=window)
+        last = rb
+        rows.append(csv_row(
+            f"residency_bytes_n{n}", rb["us_per_gather"],
+            f"peak_resident={rb['peak']}_whole={rb['whole_bytes']}"
+            f"_budget={rb['budget']}_bound={rb['bound']}"
+            f"_hit_rate={rb['hit_rate']:.3f}_evictions={rb['evictions']}"))
+        if rb["peak"] > rb["bound"]:
+            failures.append(f"n={n}: peak {rb['peak']} > bound {rb['bound']}")
+    hr = bench_hit_rate(**hit_kw)
+    rows.append(csv_row(
+        "residency_hitrate", 0.0,
+        f"hit_rate={hr['hit_rate']:.3f}_hits={hr['hits']}"
+        f"_faults={hr['faults']}_resident={hr['resident_bytes']}"))
+    ins = bench_inserts(**ins_kw)
+    rows.append(csv_row(
+        "residency_inserts", ins["dt"] / ins["inserted"] * 1e6,
+        f"inserts_per_s={ins['inserts_per_s']:.0f}"
+        f"_inserted={ins['inserted']}_n_final={ins['n_final']}"))
+    par = bench_parity()
+    if not (par["ids_equal"] and par["scores_equal"]):
+        failures.append("paged/whole search parity broken "
+                        f"(ids={par['ids_equal']} scores={par['scores_equal']})")
+    # the bounded-residency claim: at the largest N the paged peak sits
+    # below the whole-resident footprint (the corpus exceeds the budget)
+    if last is not None and last["whole_bytes"] > last["budget"] \
+            and last["peak"] >= last["whole_bytes"]:
+        failures.append(f"paged peak {last['peak']} not below whole "
+                        f"{last['whole_bytes']} at n={last['n']}")
+    rows.append(csv_row(
+        "residency_gates", 0.0,
+        f"peak_bounded={not any('bound' in f for f in failures)}"
+        f"_paged_below_whole={last is not None and last['peak'] < last['whole_bytes']}"
+        f"_search_parity={par['ids_equal'] and par['scores_equal']}"))
+    return rows, failures
+
+
+def run(quick: bool = True) -> List[str]:
+    """Row-generator entry point (benchmarks/run.py contract). Raises
+    RuntimeError when a gate fails so the orchestrator's per-job error
+    handling turns it into a nonzero exit."""
+    rows, failures = _run_impl(quick)
+    if failures:
+        raise RuntimeError("residency gates failed: " + ", ".join(failures))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (small N sweep)")
+    args = ap.parse_args()
+    rows, failures = _run_impl(args.smoke)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row, flush=True)
+    if failures:
+        raise SystemExit("residency gates failed: " + ", ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

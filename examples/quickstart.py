@@ -87,6 +87,44 @@ def main():
               f"{recall(res2.ids, true_ids):.3f} "
               f"(results identical to in-memory graph: {same})")
 
+        # 7. build → mutate → search → compact (docs/DESIGN.md §11).
+        #    Residency is a LOAD-time policy: the same files serve whole-
+        #    resident (device arrays) or paged (mmap-backed LRU page cache,
+        #    bounded host footprint) — fp32 paged searches are bit-identical
+        #    to whole. Mutation is streaming: inserts repair the graph
+        #    incrementally, deletes tombstone rows (excluded from results,
+        #    still traversable), compact() rewrites without the dead rows.
+        from repro.core import make_corpus_store
+        from repro.core.corpus import ResidencyPolicy
+        from repro.graph import (compact, delete_rows, insert_rows,
+                                 load_corpus_store)
+        graph3 = insert_rows(graph2,
+                             rng.normal(size=(200, 32)).astype(np.float32))
+        graph3 = delete_rows(graph3, rng.integers(0, 5000, size=100))
+        store = make_corpus_store(graph3.base,
+                                  residency=ResidencyPolicy(
+                                      "paged", page_rows=1024),
+                                  tombstones=graph3.tombstones)
+        eng2 = build_engine(measure, cfg)
+        res3 = eng2.search(measure.params, store,
+                           jnp.asarray(graph3.neighbors),
+                           jnp.asarray(queries),
+                           jnp.full((16,), graph3.entry, jnp.int32))
+        ids3 = np.asarray(res3.ids)        # sync before reading pager stats
+        st = store.stats_snapshot()
+        print(f"mutated index (paged search): n={graph3.n} "
+              f"alive={graph3.n_alive} "
+              f"dead rows surfaced={np.isin(ids3, np.flatnonzero(graph3.tombstones)).sum()} "
+              f"page-cache hit-rate={st.hit_rate:.2f} "
+              f"resident={st.resident_bytes >> 10}KiB")
+        graph4 = compact(graph3)                     # drop the dead rows
+        save_index(os.path.join(tmp, "compacted"), graph4, page_rows=1024)
+        paged = load_corpus_store(os.path.join(tmp, "compacted"),
+                                  residency=ResidencyPolicy("paged"))
+        print(f"compacted: {graph3.n} -> {graph4.n} rows; reloaded paged "
+              f"store is mmap-backed: "
+              f"{isinstance(paged.cache.data, np.memmap)}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,8 +1,9 @@
 """GUITAR core: measures, graph searchers (SL2G / GUITAR / BEGIN), and the
 corpus-sharded distributed search."""
 from repro.core.corpus import (  # noqa: F401
-    CorpusStore, as_corpus_store, dequantize_rows_int8, make_corpus_store,
-    quantize_rows_int8,
+    CorpusStore, PagedCorpusStore, ResidencyPolicy, as_corpus_store,
+    dequantize_rows_int8, make_corpus_store, make_paged_store, pack_bitmap,
+    quantize_rows_int8, unpack_bitmap,
 )
 from repro.core.measures import (  # noqa: F401
     MEASURE_FAMILIES, Measure, deepfm_measure, deepfm_numpy_fns,

@@ -13,6 +13,26 @@ The store is a registered pytree, so it crosses ``jit`` / ``shard_map``
 boundaries as an ordinary argument; the dtype tag is static aux data, so
 engines specialize per residency format.
 
+**Residency is a policy, not a constructor argument** (DESIGN.md §11):
+``ResidencyPolicy`` selects between
+
+- ``whole`` — the corpus lives device-resident in one ``(N, D)`` payload
+  (everything above; today's behavior, bit-identical, the default); and
+- ``paged`` — the payload stays on disk (``np.load(mmap_mode="r")``-backed
+  page-aligned files, io v3) or host memory, carved into fixed-size row
+  pages faulted on demand into an LRU page cache with a byte budget.
+  ``PagedCorpusStore.take`` is page-fault-aware: inside jitted searches the
+  gather runs as a ``jax.pure_callback`` into the host pager, returning the
+  exact same dequantized float32 rows as the whole-resident ``take`` — so a
+  paged search is bit-identical to a whole-resident one while its resident
+  footprint stays bounded by ``cache_bytes`` instead of growing with N.
+
+Both stores optionally carry a **tombstone bitmap** (packed uint32 words,
+one bit per corpus row): streaming deletes (``graph/mutate.py``) mark rows
+dead without rewriting the index, and the engine's pool insert scores
+tombstoned candidates ``-inf`` — exactly the padded-row convention of the
+sharded merge — so they can never surface in results.
+
 Quantization layout (int8): ``q8[i] = round(x[i] / scale[i])`` with
 ``scale[i] = max|x[i]| / 127`` per row — reconstruction error is bounded by
 ``scale/2 = max|x_i| / 254`` per element (pinned by tests). Row scales keep
@@ -28,15 +48,73 @@ both backends.
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
 from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 CORPUS_DTYPES = ("float32", "bfloat16", "int8")
+RESIDENCY_KINDS = ("whole", "paged")
 
 _EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidencyPolicy:
+    """How the corpus payload is held during search.
+
+    kind:        'whole' (device-resident (N, D) payload, the default) |
+                 'paged' (fixed-size row pages faulted on demand through an
+                 LRU cache bounded by ``cache_bytes``)
+    page_rows:   rows per page (paged only) — io v3 writes page-aligned
+                 files so a page slice never straddles a read
+    cache_bytes: LRU byte budget for resident page copies (paged only)
+    """
+    kind: str = "whole"
+    page_rows: int = 4096
+    cache_bytes: int = 64 << 20
+
+    def __post_init__(self):
+        if self.kind not in RESIDENCY_KINDS:
+            raise ValueError(f"residency kind must be one of "
+                             f"{RESIDENCY_KINDS}, got {self.kind!r}")
+        if self.kind == "paged" and self.page_rows < 1:
+            raise ValueError(f"page_rows must be >= 1, got {self.page_rows}")
+
+
+WHOLE = ResidencyPolicy()
+
+
+def pack_bitmap(flags: np.ndarray) -> np.ndarray:
+    """(N,) bool -> packed (ceil(N/32),) uint32 words (bit i of word i//32),
+    the same layout as the engine's per-lane visited bitmap."""
+    flags = np.asarray(flags, bool)
+    n = flags.shape[0]
+    pad = (-n) % 32
+    if pad:
+        flags = np.concatenate([flags, np.zeros(pad, bool)])
+    bits = flags.reshape(-1, 32).astype(np.uint32)
+    return (bits << np.arange(32, dtype=np.uint32)[None, :]).sum(
+        axis=1, dtype=np.uint32)
+
+
+def unpack_bitmap(words: np.ndarray, n: int) -> np.ndarray:
+    """Inverse of ``pack_bitmap``: (W,) uint32 -> (n,) bool."""
+    words = np.asarray(words, np.uint32)
+    bits = (words[:, None] >> np.arange(32, dtype=np.uint32)[None, :]) & 1
+    return bits.reshape(-1)[:n].astype(bool)
+
+
+def bit_test_global(words: jax.Array, ids: jax.Array) -> jax.Array:
+    """Packed global bitmap test: words (W,) uint32, ids (...,) int -> bool.
+    Negative ids test bit 0 of word 0 (callers mask them separately)."""
+    safe = jnp.maximum(ids, 0)
+    w = jnp.take(words, safe >> 5, axis=0, mode="clip")
+    return ((w >> (safe & 31).astype(jnp.uint32)) & 1).astype(jnp.bool_)
 
 
 def quantize_rows_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -75,16 +153,21 @@ class CorpusStore:
     (N, 1) float32 for int8 (None otherwise). ``take(ids)`` gathers +
     dequantizes to float32 rows for any integer ids shape — the reference
     gather used everywhere the Pallas index-fused kernels don't run.
+    ``tombstones`` is an optional packed (ceil(N/32),) uint32 bitmap of
+    deleted rows (streaming deletes — the engine scores them -inf).
     """
 
+    is_paged = False
+
     def __init__(self, data: jax.Array, scales: Optional[jax.Array],
-                 dtype: str):
+                 dtype: str, tombstones: Optional[jax.Array] = None):
         if dtype not in CORPUS_DTYPES:
             raise ValueError(f"corpus_dtype must be one of {CORPUS_DTYPES}, "
                              f"got {dtype!r}")
         self.data = data
         self.scales = scales
         self.dtype = dtype
+        self.tombstones = tombstones
 
     @property
     def n(self) -> int:
@@ -130,27 +213,259 @@ class CorpusStore:
             total += self.scales.size * self.scales.dtype.itemsize
         return int(total)
 
+    def with_tombstones(self, flags: Optional[np.ndarray]) -> "CorpusStore":
+        """A view of this store with the given (N,) bool delete flags
+        packed into the tombstone bitmap (None clears it)."""
+        words = None if flags is None else jnp.asarray(pack_bitmap(flags))
+        return CorpusStore(self.data, self.scales, self.dtype, words)
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"CorpusStore(n={self.data.shape[0]}, dim={self.dim}, "
                 f"dtype={self.dtype})")
 
 
 def _store_flatten(s: CorpusStore):
-    return (s.data, s.scales), s.dtype
+    return (s.data, s.scales, s.tombstones), s.dtype
 
 
 def _store_unflatten(dtype, children):
-    data, scales = children
-    return CorpusStore(data, scales, dtype)
+    data, scales, tombstones = children
+    return CorpusStore(data, scales, dtype, tombstones)
 
 
 jax.tree_util.register_pytree_node(CorpusStore, _store_flatten,
                                    _store_unflatten)
 
 
-def make_corpus_store(base: jax.Array, corpus_dtype: str = "float32"
-                      ) -> CorpusStore:
-    """Quantize/cast an (N, D) float corpus into residency format."""
+# ---------------------------------------------------------------------------
+# paged residency
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PageCacheStats:
+    """Host-side pager accounting (benchmarks/residency.py reports these)."""
+    hits: int = 0
+    faults: int = 0
+    evictions: int = 0
+    resident_bytes: int = 0
+    peak_resident_bytes: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.faults
+        return self.hits / total if total else 0.0
+
+
+class _PageCache:
+    """Host pager: fixed ``page_rows`` row pages over a payload array (an
+    ``np.memmap`` from io v3's page-aligned files, or a host ndarray),
+    faulted on demand into an LRU dict bounded by ``cache_bytes``. Pages
+    needed by the in-flight gather are pinned — the budget evicts cold
+    pages, never the working set — so a single gather larger than the
+    budget still completes (peak_resident_bytes records the overshoot)."""
+
+    def __init__(self, data: np.ndarray, scales: Optional[np.ndarray],
+                 dtype: str, policy: ResidencyPolicy):
+        if dtype not in CORPUS_DTYPES:
+            raise ValueError(f"corpus_dtype must be one of {CORPUS_DTYPES}, "
+                             f"got {dtype!r}")
+        self.data = data
+        self.scales = scales
+        self.dtype = dtype
+        self.policy = policy
+        self.n, self.dim = data.shape
+        self.page_rows = int(policy.page_rows)
+        self.n_pages = -(-self.n // self.page_rows)
+        self._pages: "collections.OrderedDict[int, tuple]" = \
+            collections.OrderedDict()
+        self.stats = PageCacheStats()
+
+    def _fault(self, pid: int) -> None:
+        s, e = pid * self.page_rows, min((pid + 1) * self.page_rows, self.n)
+        payload = np.array(self.data[s:e])          # copy out of the mmap
+        scales = None if self.scales is None else np.array(self.scales[s:e])
+        nbytes = payload.nbytes + (0 if scales is None else scales.nbytes)
+        self._pages[pid] = (payload, scales, nbytes)
+        self.stats.faults += 1
+        self.stats.resident_bytes += nbytes
+        self.stats.peak_resident_bytes = max(self.stats.peak_resident_bytes,
+                                             self.stats.resident_bytes)
+
+    def _evict_cold(self, pinned: set) -> None:
+        while self.stats.resident_bytes > self.policy.cache_bytes:
+            victim = next((p for p in self._pages if p not in pinned), None)
+            if victim is None:
+                break                               # working set > budget
+            _, _, nbytes = self._pages.pop(victim)
+            self.stats.evictions += 1
+            self.stats.resident_bytes -= nbytes
+
+    def _dequant(self, rows: np.ndarray,
+                 scales: Optional[np.ndarray]) -> np.ndarray:
+        # numpy twins of CorpusStore.take's dequant pipelines — elementwise
+        # IEEE fp32 ops, so paged rows are bit-identical to whole-resident
+        if self.dtype == "bfloat16":
+            return (rows.astype(np.uint32) << 16).view(np.float32)
+        if self.dtype == "int8":
+            return rows.astype(np.float32) * scales
+        return rows.astype(np.float32)
+
+    def gather(self, ids: np.ndarray) -> np.ndarray:
+        """ids (any shape) -> (..., D) float32 dequantized rows; out-of-range
+        ids clamp (the whole store's ``mode="clip"`` contract)."""
+        shape = ids.shape
+        flat = np.clip(np.asarray(ids, np.int64).reshape(-1), 0, self.n - 1)
+        pids = flat // self.page_rows
+        need = np.unique(pids)
+        for pid in need:
+            pid = int(pid)
+            if pid in self._pages:
+                self._pages.move_to_end(pid)
+                self.stats.hits += 1
+            else:
+                self._fault(pid)
+        self._evict_cold(pinned=set(int(p) for p in need))
+        out = np.empty((flat.size, self.dim), np.float32)
+        for pid in need:
+            m = pids == pid
+            payload, scales, _ = self._pages[int(pid)]
+            local = flat[m] - int(pid) * self.page_rows
+            srows = None if scales is None else scales[local]
+            out[m] = self._dequant(payload[local], srows)
+        return out.reshape(shape + (self.dim,))
+
+    def materialize(self) -> np.ndarray:
+        """The full (N, D) float32 corpus straight off the backing files —
+        bypasses (and never populates) the page cache."""
+        return self._dequant(np.array(self.data),
+                             None if self.scales is None
+                             else np.array(self.scales))
+
+
+class PagedCorpusStore:
+    """Residency-policy twin of ``CorpusStore``: same ``take`` contract,
+    but the payload lives behind a host ``_PageCache`` and gathers run as
+    ``jax.pure_callback``s — usable inside jitted searches (the engine's
+    tile plan issues ONE combined gather per step through this path).
+
+    Registered as a pytree whose only array child is the tombstone bitmap;
+    the pager itself rides as static aux data (hashed by identity), so each
+    store instance compiles once and every call reuses the trace."""
+
+    is_paged = True
+
+    def __init__(self, cache: _PageCache,
+                 tombstones: Optional[jax.Array] = None):
+        self.cache = cache
+        self.tombstones = tombstones
+
+    @property
+    def dtype(self) -> str:
+        return self.cache.dtype
+
+    @property
+    def policy(self) -> ResidencyPolicy:
+        return self.cache.policy
+
+    @property
+    def n(self) -> int:
+        return self.cache.n
+
+    @property
+    def dim(self) -> int:
+        return self.cache.dim
+
+    @property
+    def stats(self) -> PageCacheStats:
+        return self.stats_snapshot()
+
+    def stats_snapshot(self) -> PageCacheStats:
+        return dataclasses.replace(self.cache.stats)
+
+    def take(self, ids: jax.Array, in_bounds: bool = False) -> jax.Array:
+        """Page-fault-aware gather: same (..., D) float32 rows as the
+        whole-resident ``take`` (the pager's dequant pipelines are numpy
+        twins of the jnp ones), faulting only the touched pages. The
+        ``in_bounds`` promise is already the pager's behavior (clamp)."""
+        ids = jnp.asarray(ids)
+        out = jax.ShapeDtypeStruct(ids.shape + (self.dim,), jnp.float32)
+        return jax.pure_callback(self.cache.gather, out, ids)
+
+    def dequantize(self) -> jax.Array:
+        """The full (N, D) float32 corpus (materializes — debugging / ground
+        truth only; reads the backing store, never populates the cache)."""
+        return jnp.asarray(self.cache.materialize())
+
+    def nbytes(self) -> int:
+        """RESIDENT bytes — the LRU cache's current footprint, not the
+        backing payload (that's the whole point of paging)."""
+        return int(self.cache.stats.resident_bytes)
+
+    def with_tombstones(self,
+                        flags: Optional[np.ndarray]) -> "PagedCorpusStore":
+        words = None if flags is None else jnp.asarray(pack_bitmap(flags))
+        return PagedCorpusStore(self.cache, words)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"PagedCorpusStore(n={self.n}, dim={self.dim}, "
+                f"dtype={self.dtype}, page_rows={self.cache.page_rows}, "
+                f"cache_bytes={self.policy.cache_bytes})")
+
+
+def _paged_flatten(s: PagedCorpusStore):
+    return (s.tombstones,), s.cache
+
+
+def _paged_unflatten(cache, children):
+    (tombstones,) = children
+    return PagedCorpusStore(cache, tombstones)
+
+
+jax.tree_util.register_pytree_node(PagedCorpusStore, _paged_flatten,
+                                   _paged_unflatten)
+
+
+def make_paged_store(data: np.ndarray, corpus_dtype: str,
+                     policy: ResidencyPolicy,
+                     scales: Optional[np.ndarray] = None,
+                     tombstones: Optional[np.ndarray] = None
+                     ) -> PagedCorpusStore:
+    """Paged store over a payload already in residency format — typically
+    ``np.load(..., mmap_mode="r")`` memmaps of io v3's page-aligned files
+    (``scales`` required for int8). ``tombstones``: (N,) bool delete flags."""
+    if corpus_dtype == "int8" and scales is None:
+        raise ValueError("int8 paged residency requires per-row scales")
+    cache = _PageCache(data, scales, corpus_dtype, policy)
+    words = None if tombstones is None \
+        else jnp.asarray(pack_bitmap(tombstones))
+    return PagedCorpusStore(cache, words)
+
+
+AnyCorpusStore = Union[CorpusStore, PagedCorpusStore]
+
+
+def make_corpus_store(base: jax.Array, corpus_dtype: str = "float32",
+                      residency: Optional[ResidencyPolicy] = None,
+                      tombstones: Optional[np.ndarray] = None
+                      ) -> AnyCorpusStore:
+    """Quantize/cast an (N, D) float corpus into residency format under the
+    given policy (None = whole, today's behavior). The paged path quantizes
+    host-side and serves pages off the host array — file-backed pages (the
+    bounded-RAM story) come from io v3 via ``load_corpus_store``."""
+    if residency is not None and residency.kind == "paged":
+        base_np = np.asarray(base, np.float32)
+        if corpus_dtype == "float32":
+            data, scales = base_np, None
+        elif corpus_dtype == "bfloat16":
+            data, scales = np.asarray(f32_to_bf16_bits(base_np)), None
+        elif corpus_dtype == "int8":
+            q8, sc = quantize_rows_int8(base_np)
+            data, scales = np.asarray(q8), np.asarray(sc)
+        else:
+            raise ValueError(f"corpus_dtype must be one of {CORPUS_DTYPES}, "
+                             f"got {corpus_dtype!r}")
+        return make_paged_store(data, corpus_dtype, residency, scales,
+                                tombstones)
     base = jnp.asarray(base)
     if corpus_dtype == "float32":
         data = base.astype(jnp.float32)
@@ -163,16 +478,29 @@ def make_corpus_store(base: jax.Array, corpus_dtype: str = "float32"
     else:
         raise ValueError(f"corpus_dtype must be one of {CORPUS_DTYPES}, "
                          f"got {corpus_dtype!r}")
-    return CorpusStore(data, scales, corpus_dtype)
+    words = None if tombstones is None \
+        else jnp.asarray(pack_bitmap(tombstones))
+    return CorpusStore(data, scales, corpus_dtype, words)
 
 
-def as_corpus_store(base: Union[jax.Array, CorpusStore],
-                    corpus_dtype: str = "float32") -> CorpusStore:
+def as_corpus_store(base: Union[jax.Array, AnyCorpusStore],
+                    corpus_dtype: str = "float32") -> AnyCorpusStore:
     """Coerce an array or an existing store to residency format. A store
     already in the requested dtype passes through untouched (the serving
-    path quantizes once, up front)."""
+    path quantizes once, up front). A paged store never re-quantizes — a
+    dtype mismatch there is a configuration error, not a conversion."""
+    if isinstance(base, PagedCorpusStore):
+        if base.dtype != corpus_dtype:
+            raise ValueError(
+                f"paged store holds {base.dtype!r} pages but the engine "
+                f"wants {corpus_dtype!r}; rebuild the paged store in the "
+                f"serving dtype (re-quantizing on the fly would materialize "
+                f"the corpus and defeat paging)")
+        return base
     if isinstance(base, CorpusStore):
         if base.dtype != corpus_dtype:
-            return make_corpus_store(base.dequantize(), corpus_dtype)
+            store = make_corpus_store(base.dequantize(), corpus_dtype)
+            store.tombstones = base.tombstones  # deletes survive requantize
+            return store
         return base
     return make_corpus_store(base, corpus_dtype)

@@ -67,7 +67,8 @@ from repro.core.bundles import (  # noqa: F401  (re-exported compat surface)
     make_vmap_measure_stage, register_bundle, resolve_stages,
     use_pallas_impl,
 )
-from repro.core.corpus import CorpusStore, as_corpus_store
+from repro.core.corpus import (CorpusStore, as_corpus_store,
+                               bit_test_global)
 from repro.kernels import autotune
 from repro.kernels.neighbor_rank import neighbor_rank
 from repro.kernels.neighbor_rank.ref import neighbor_rank_ref
@@ -445,10 +446,26 @@ class ExpansionEngine:
         N = store.n
         ef = self.cfg.ef
         nwords = (N + 31) // 32
-        if self.measure_fused is not None:
+        if store.is_paged and self.pallas_fused:
+            raise ValueError(
+                "paged residency requires ref-routed fused stages: Pallas "
+                "fused kernels gather from the device-resident payload "
+                "(store.data), which a paged store does not hold; use "
+                "rank_impl/measure_impl/grad_impl='ref' (the tile plan) or "
+                "whole residency")
+        if self.measure_fused is not None and not store.is_paged:
             e_scores = self.measure_fused(params, store, entries, queries)
         else:
+            # paged stores seed through take() — ONE pager callback — and
+            # the fp32 measure math is identical, so fused/unfused seeding
+            # is bit-identical either way
             e_scores = self.measure(params, store.take(entries), queries)
+        if store.tombstones is not None:
+            # a tombstoned entry must never surface in results; the lane
+            # simply exhausts (mutate.delete_rows reassigns live entries,
+            # so this only triggers for callers bypassing it)
+            e_scores = jnp.where(bit_test_global(store.tombstones, entries),
+                                 -jnp.inf, e_scores)
         pool_scores = jnp.full((Q, ef), -jnp.inf,
                                jnp.float32).at[:, 0].set(e_scores)
         pool_ids = jnp.full((Q, ef), -1, jnp.int32).at[:, 0].set(entries)
@@ -526,6 +543,12 @@ class ExpansionEngine:
             return False
         if self.grad_fused is not None and self.grad is None:
             return False
+        if store.is_paged:
+            # paged residency always tiles: ONE combined [frontier |
+            # neighbors] gather per step means ONE pager callback instead
+            # of three — and the tile plan is already pinned bit-identical
+            # to every other fused-ref plan at fp32
+            return True
         cfg_t = autotune.resolve(
             "engine_step", q=Q, m=n_degree, d=store.dim,
             dtype=self.corpus_dtype,
@@ -600,6 +623,12 @@ class ExpansionEngine:
             flat_scores = self.measure(params, sel_vecs.reshape(Q * C, -1),
                                        qs_flat)
         scores = jnp.where(sel_mask, flat_scores.reshape(Q, C), -jnp.inf)
+        if store.tombstones is not None:
+            # streaming deletes: tombstoned candidates score -inf — the
+            # padded-row convention of the sharded merge — so they stay
+            # traversable (their edges still route) but never enter results
+            scores = jnp.where(bit_test_global(store.tombstones, sel_ids),
+                               -jnp.inf, scores)
 
         s = s._replace(
             visited=bit_set_rows(s.visited, sel_ids, sel_mask),

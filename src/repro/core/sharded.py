@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.corpus import ResidencyPolicy, make_corpus_store
 from repro.core.engine import EngineOptions, build_engine_from_fn
 from repro.core.measures import Measure
 from repro.core.search import SearchConfig, SearchResult
@@ -165,3 +166,59 @@ def sharded_search_host(measure: Measure, index: ShardedIndex,
             jnp.asarray(index.neighbors), jnp.asarray(index.entries),
             jnp.asarray(index.global_ids), jnp.asarray(queries))
     return SearchResult(*[np.asarray(x) for x in fn(*args)])
+
+
+# ---------------------------------------------------------------------------
+# residency-aware sharded search (host merge over per-shard stores)
+# ---------------------------------------------------------------------------
+
+def shard_stores(index: ShardedIndex, corpus_dtype: str = "float32",
+                 residency: ResidencyPolicy | None = None) -> List[Any]:
+    """Per-shard corpus stores under a residency policy: each partition
+    quantizes its own rows (row scales stay partition-local, exactly like
+    the shard_map path) and, when ``residency.kind == 'paged'``, pages its
+    rows independently — S pagers, each with its own LRU budget."""
+    return [make_corpus_store(index.base[s], corpus_dtype,
+                              residency=residency)
+            for s in range(index.n_shards)]
+
+
+def sharded_search_stores(measure: Measure, stores: List[Any],
+                          index: ShardedIndex, queries: np.ndarray,
+                          cfg: SearchConfig,
+                          options: EngineOptions = EngineOptions()
+                          ) -> SearchResult:
+    """Sharded search against pre-built per-shard stores — the path paged
+    residency takes (a host pager cannot cross a ``shard_map`` boundary, so
+    the per-shard searches run as ordinary jitted calls and the merge runs
+    on host). Same math as ``local_search``: per-shard ``engine.search``,
+    global-id remap with padded rows -> -1, ``merge_topk``, counters
+    summed (n_eval/n_grad) and maxed (n_iters) over shards — bit-identical
+    merged results to ``sharded_search_host`` when the stores hold the
+    same payload."""
+    engine = build_engine_from_fn(measure.score_fn, cfg, options,
+                                  meta=tuple(m) if (
+                                      m := getattr(measure, "meta", None))
+                                  is not None else None)
+    queries = jnp.asarray(queries)
+    Q = queries.shape[0]
+    per_ids, per_scores = [], []
+    n_eval = jnp.zeros((Q,), jnp.int32)
+    n_grad = jnp.zeros((Q,), jnp.int32)
+    n_iters = jnp.zeros((Q,), jnp.int32)
+    for s, store in enumerate(stores):
+        entries = jnp.full((Q,), int(index.entries[s]), jnp.int32)
+        res = engine.search(measure.params, store,
+                            jnp.asarray(index.neighbors[s]), queries,
+                            entries)
+        gids = jnp.asarray(index.global_ids[s])
+        per_ids.append(jnp.where(res.ids >= 0,
+                                 gids[jnp.maximum(res.ids, 0)], -1))
+        per_scores.append(res.scores)
+        n_eval = n_eval + res.n_eval
+        n_grad = n_grad + res.n_grad
+        n_iters = jnp.maximum(n_iters, res.n_iters)
+    ids, scores = merge_topk(jnp.stack(per_ids, axis=1),
+                             jnp.stack(per_scores, axis=1), cfg.k)
+    return SearchResult(*[np.asarray(x) for x in
+                          (ids, scores, n_eval, n_grad, n_iters)])

@@ -30,10 +30,20 @@ class GraphIndex:
     neighbors: np.ndarray        # (N, M) int32, -1 padded
     entry: int                   # medoid entry point
     base: np.ndarray             # (N, D) float32 base vectors
+    # (N,) bool delete flags from streaming deletes (graph/mutate.py);
+    # None = nothing deleted. Tombstoned rows stay in base/neighbors (still
+    # traversable) but the engine scores them -inf and compact() drops them.
+    tombstones: Optional[np.ndarray] = None
 
     @property
     def n(self) -> int:
         return self.base.shape[0]
+
+    @property
+    def n_alive(self) -> int:
+        if self.tombstones is None:
+            return self.n
+        return int(self.n - np.asarray(self.tombstones, bool).sum())
 
     @property
     def max_degree(self) -> int:

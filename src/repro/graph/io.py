@@ -1,27 +1,35 @@
 """Index serialization: build once, serve/benchmark/test many times.
 
-An index directory holds two files:
+An index directory holds:
 
-- ``arrays.npz``  — the numeric payload (compressed npz);
+- ``arrays.npz``  — graph-side numeric payload (neighbors, shard tables,
+  tombstones) as compressed npz;
+- ``base*.npy``   — **v3** corpus payload as raw, page-aligned ``.npy``
+  files (``base.npy`` fp32 | ``base_bf16.npy`` uint16 bit patterns |
+  ``base_q8.npy`` + ``base_scales.npy``). Raw npy — unlike npz members —
+  supports ``np.load(mmap_mode="r")``, which is what paged residency
+  serves from: a page fault reads only its page's rows off disk;
 - ``meta.json``   — versioned metadata: ``format_version``, ``kind``
   (``graph`` | ``sharded``), ``corpus_dtype``, scalar fields (entry points,
-  shard count) and summary stats. The JSON is the human-readable half —
-  ops can inspect an index without loading arrays.
+  shard count), summary stats, and (v3) the page layout: ``page_rows``,
+  ``n_pages``, and per-page row ``page_offsets``. The JSON is the
+  human-readable half — ops can inspect an index without loading arrays.
 
 ``save_index`` / ``load_index`` round-trip ``GraphIndex`` and
 ``ShardedIndex`` exactly (tests pin array equality). Loading rejects
 unknown kinds and format versions newer than this reader — bump
 ``FORMAT_VERSION`` and keep a reader branch when the layout changes.
 
-Format v2 adds **quantized corpus residency**: ``save_index(...,
-corpus_dtype=...)`` stores the base vectors as bf16 (``base_bf16``, a
-uint16 bit-pattern view — npz has no native bfloat16) or per-row-scaled
-int8 (``base_q8`` + ``base_scales``, the scales layout of
-``core.corpus.quantize_rows_int8``). ``load_index`` always reconstructs a
-float32 ``base`` (quantization round-trip applied — what you serve is what
-you saved), while ``load_corpus_store`` loads the payload *without*
-dequantizing, handing the engine a bf16/int8-resident ``CorpusStore`` for
-the index-fused search path. v1 files (always fp32) remain readable.
+Format v2 added **quantized corpus residency** (bf16 bit patterns /
+per-row-scaled int8 payloads, kept quantized by ``load_corpus_store``).
+Format v3 adds **paged residency + streaming mutation**: the corpus
+payload moves from npz members to mmap-able page-aligned ``.npy`` files,
+``load_corpus_store(residency=...)`` returns a ``PagedCorpusStore`` whose
+LRU page cache faults pages straight off those files, and an optional
+``tombstones`` array (packed delete bitmap from ``graph/mutate.py``)
+round-trips with the index. v1 (always fp32) and v2 files remain readable
+— including under a paged policy (their npz payload pages from host
+memory instead of disk).
 """
 from __future__ import annotations
 
@@ -31,18 +39,31 @@ from typing import Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.corpus import (CORPUS_DTYPES, CorpusStore,
+from repro.core.corpus import (CORPUS_DTYPES, CorpusStore, ResidencyPolicy,
                                dequantize_rows_int8, make_corpus_store,
-                               quantize_rows_int8)
+                               make_paged_store, pack_bitmap,
+                               quantize_rows_int8, unpack_bitmap)
 from repro.graph.build import GraphIndex
 
-FORMAT_VERSION = 2
+FORMAT_VERSION = 3
 _ARRAYS = "arrays.npz"
 _META = "meta.json"
 
+# corpus payload: npz member name -> v3 file name (raw npy mmaps; npz
+# members do not)
+_PAYLOAD_KEYS = {
+    "float32": ("base",),
+    "bfloat16": ("base_bf16",),
+    "int8": ("base_q8", "base_scales"),
+}
+
+
+def _payload_file(key: str) -> str:
+    return f"{key}.npy"
+
 
 def _encode_base(base: np.ndarray, corpus_dtype: str) -> dict:
-    """float32 (N|S, ..., D) base -> npz payload arrays per residency."""
+    """float32 (N|S, ..., D) base -> payload arrays per residency format."""
     if corpus_dtype == "float32":
         return {"base": np.asarray(base, np.float32)}
     if corpus_dtype == "bfloat16":
@@ -57,38 +78,61 @@ def _encode_base(base: np.ndarray, corpus_dtype: str) -> dict:
 
 
 def _decode_base(arrays: dict, corpus_dtype: str) -> np.ndarray:
-    """npz payload -> float32 base (the quantization round-trip applied)."""
+    """payload arrays -> float32 base (the quantization round-trip applied)."""
     if corpus_dtype == "float32":
-        return arrays["base"]
+        return np.asarray(arrays["base"])
     if corpus_dtype == "bfloat16":
         import ml_dtypes
-        return arrays["base_bf16"].view(ml_dtypes.bfloat16).astype(np.float32)
+        return np.asarray(arrays["base_bf16"]).view(
+            ml_dtypes.bfloat16).astype(np.float32)
     if corpus_dtype == "int8":
-        return np.asarray(dequantize_rows_int8(arrays["base_q8"],
-                                               arrays["base_scales"]))
+        return np.asarray(dequantize_rows_int8(
+            np.asarray(arrays["base_q8"]),
+            np.asarray(arrays["base_scales"])))
     raise ValueError(f"index has unknown corpus_dtype {corpus_dtype!r}")
 
 
 def save_index(path: str, index, corpus_dtype: str = "float32",
-               extra_meta: Optional[dict] = None) -> str:
+               extra_meta: Optional[dict] = None,
+               page_rows: int = 4096) -> str:
     """Write a GraphIndex or ShardedIndex under directory ``path``, with the
     base vectors stored in ``corpus_dtype`` residency (fp32 exact; bf16 /
-    per-row int8 quantized — 2x / ~4x smaller payload). ``extra_meta``:
+    per-row int8 quantized — 2x / ~4x smaller payload). Graph-kind corpus
+    payloads are written as raw page-aligned ``.npy`` files (v3) so paged
+    residency can mmap them; ``page_rows`` sets the page granularity
+    recorded in meta (the ``load_corpus_store`` default). ``extra_meta``:
     JSON-serializable provenance merged into meta.json (e.g. the measure
     family a BEGIN graph was built under — serve.py warns on mismatch).
-    Returns the path to the meta file."""
+    A ``GraphIndex.tombstones`` delete bitmap (streaming deletes,
+    graph/mutate.py) round-trips alongside the arrays. Returns the path to
+    the meta file."""
     from repro.core.sharded import ShardedIndex  # local: avoid import cycle
 
+    if page_rows < 1:
+        raise ValueError(f"page_rows must be >= 1, got {page_rows}")
     os.makedirs(path, exist_ok=True)
+    payload = {}
     if isinstance(index, GraphIndex):
         kind = "graph"
-        arrays = {"neighbors": index.neighbors,
-                  **_encode_base(index.base, corpus_dtype)}
-        meta = {"entry": int(index.entry), "n": int(index.n),
+        arrays = {"neighbors": index.neighbors}
+        payload = _encode_base(index.base, corpus_dtype)
+        n = int(index.n)
+        n_pages = -(-n // page_rows)
+        meta = {"entry": int(index.entry), "n": n,
                 "dim": int(index.base.shape[1]),
                 "max_degree": int(index.max_degree),
-                "avg_degree": float(index.avg_degree)}
+                "avg_degree": float(index.avg_degree),
+                "page_rows": int(page_rows), "n_pages": n_pages,
+                "page_offsets": [int(p * page_rows)
+                                 for p in range(n_pages)],
+                "payload_files": {k: _payload_file(k) for k in payload}}
+        tombstones = getattr(index, "tombstones", None)
+        if tombstones is not None:
+            arrays["tombstones"] = pack_bitmap(np.asarray(tombstones))
     elif isinstance(index, ShardedIndex):
+        # sharded payloads stay npz members: paged residency shards
+        # through per-partition stores (core.sharded.shard_stores), not
+        # through this file layout
         kind = "sharded"
         arrays = {"neighbors": index.neighbors, "entries": index.entries,
                   "global_ids": index.global_ids,
@@ -101,6 +145,8 @@ def save_index(path: str, index, corpus_dtype: str = "float32",
         raise TypeError(f"cannot serialize {type(index).__name__}")
 
     np.savez_compressed(os.path.join(path, _ARRAYS), **arrays)
+    for key, arr in payload.items():
+        np.save(os.path.join(path, _payload_file(key)), arr)
     meta = {"format_version": FORMAT_VERSION, "kind": kind,
             "corpus_dtype": corpus_dtype, **meta, **(extra_meta or {})}
     meta_path = os.path.join(path, _META)
@@ -109,10 +155,26 @@ def save_index(path: str, index, corpus_dtype: str = "float32",
     return meta_path
 
 
+def _load_payload(path: str, meta: dict, mmap: bool = False) -> dict:
+    """The corpus payload arrays for a graph index: v3 reads the raw .npy
+    files (optionally mmap'd — the paged path), v1/v2 fall back to the npz
+    members (never mmap-able)."""
+    dtype = meta.get("corpus_dtype", "float32")
+    if meta.get("format_version", 1) >= 3 and meta.get("kind") == "graph":
+        mode = "r" if mmap else None
+        return {k: np.load(os.path.join(path, _payload_file(k)),
+                           mmap_mode=mode)
+                for k in _PAYLOAD_KEYS[dtype]}
+    with np.load(os.path.join(path, _ARRAYS)) as z:
+        return {k: z[k] for k in _PAYLOAD_KEYS[dtype] if k in z.files}
+
+
 def _read(path: str) -> Tuple[dict, dict]:
     meta = load_index_meta(path)
     with np.load(os.path.join(path, _ARRAYS)) as z:
         arrays = {k: z[k] for k in z.files}
+    if meta.get("format_version", 1) >= 3 and meta.get("kind") == "graph":
+        arrays.update(_load_payload(path, meta))
     return meta, arrays
 
 
@@ -131,6 +193,12 @@ def load_index_meta(path: str) -> dict:
     return meta
 
 
+def _tombstone_flags(meta: dict, arrays: dict) -> Optional[np.ndarray]:
+    if "tombstones" not in arrays:
+        return None
+    return unpack_bitmap(arrays["tombstones"], int(meta["n"]))
+
+
 def load_index(path: str) -> Union[GraphIndex, "ShardedIndex"]:
     """Load an index directory written by ``save_index``. The returned
     index always carries a float32 ``base`` (bf16/int8 payloads are
@@ -138,24 +206,37 @@ def load_index(path: str) -> Union[GraphIndex, "ShardedIndex"]:
     from repro.core.sharded import ShardedIndex  # local: avoid import cycle
 
     meta, arrays = _read(path)
-    base = _decode_base(arrays, meta.get("corpus_dtype", "float32"))
     kind = meta.get("kind")
+    if kind not in ("graph", "sharded"):
+        raise ValueError(f"index at {path!r} has unknown kind {kind!r}")
+    base = _decode_base(arrays, meta.get("corpus_dtype", "float32"))
     if kind == "graph":
         return GraphIndex(neighbors=arrays["neighbors"],
-                          entry=int(meta["entry"]), base=base)
-    if kind == "sharded":
-        return ShardedIndex(base=base,
-                            neighbors=arrays["neighbors"],
-                            entries=arrays["entries"],
-                            global_ids=arrays["global_ids"],
-                            n_shards=int(meta["n_shards"]))
-    raise ValueError(f"index at {path!r} has unknown kind {kind!r}")
+                          entry=int(meta["entry"]), base=base,
+                          tombstones=_tombstone_flags(meta, arrays))
+    return ShardedIndex(base=base,
+                        neighbors=arrays["neighbors"],
+                        entries=arrays["entries"],
+                        global_ids=arrays["global_ids"],
+                        n_shards=int(meta["n_shards"]))
 
 
-def load_corpus_store(path: str) -> CorpusStore:
-    """Load a graph index's base vectors as a resident ``CorpusStore`` in
-    the dtype they were saved in — bf16/int8 payloads stay quantized (no
-    fp32 materialization of the corpus; the engine dequantizes on gather)."""
+def load_corpus_store(path: str,
+                      residency: Optional[ResidencyPolicy] = None):
+    """Load a graph index's base vectors as a corpus store in the dtype
+    they were saved in — bf16/int8 payloads stay quantized (no fp32
+    materialization of the corpus; the engine dequantizes on gather).
+
+    ``residency=None`` (or ``kind='whole'``) loads the payload device-
+    resident, exactly as before. A ``paged`` policy returns a
+    ``PagedCorpusStore``: for v3 files the payload is ``np.load(...,
+    mmap_mode='r')``-backed, so rows enter host memory page-fault by
+    page-fault and the resident footprint is bounded by the policy's
+    ``cache_bytes``; v1/v2 files page from their (host-loaded) npz arrays.
+    When the policy keeps the default ``page_rows`` (4096), the page size
+    recorded in the index meta is used instead — pages then line up with
+    the layout the file was written under. Any saved tombstone bitmap is
+    carried onto the store either way."""
     meta, arrays = _read(path)
     if meta.get("kind") != "graph":
         raise ValueError(
@@ -163,16 +244,33 @@ def load_corpus_store(path: str) -> CorpusStore:
             f"index at {path!r} has kind {meta.get('kind')!r} (sharded "
             f"residency quantizes per partition via EngineOptions)")
     corpus_dtype = meta.get("corpus_dtype", "float32")
+    if corpus_dtype not in CORPUS_DTYPES:
+        raise ValueError(f"index at {path!r} has unknown corpus_dtype "
+                         f"{corpus_dtype!r}")
+    flags = _tombstone_flags(meta, arrays)
+
+    if residency is not None and residency.kind == "paged":
+        if residency.page_rows == ResidencyPolicy().page_rows \
+                and "page_rows" in meta:
+            residency = ResidencyPolicy("paged", int(meta["page_rows"]),
+                                        residency.cache_bytes)
+        payload = _load_payload(path, meta, mmap=True)
+        keys = _PAYLOAD_KEYS[corpus_dtype]
+        data = payload[keys[0]]
+        scales = payload[keys[1]] if len(keys) > 1 else None
+        return make_paged_store(data, corpus_dtype, residency,
+                                scales=scales, tombstones=flags)
+
     import jax.numpy as jnp
+    words = None if flags is None else jnp.asarray(pack_bitmap(flags))
     if corpus_dtype == "float32":
-        return make_corpus_store(arrays["base"], "float32")
+        store = make_corpus_store(arrays["base"], "float32")
+        store.tombstones = words
+        return store
     if corpus_dtype == "bfloat16":
         # the store's residency format IS the uint16 bit pattern — load
         # straight through (see core/corpus.py)
         return CorpusStore(jnp.asarray(arrays["base_bf16"]), None,
-                           "bfloat16")
-    if corpus_dtype == "int8":
-        return CorpusStore(jnp.asarray(arrays["base_q8"]),
-                           jnp.asarray(arrays["base_scales"]), "int8")
-    raise ValueError(f"index at {path!r} has unknown corpus_dtype "
-                     f"{corpus_dtype!r}")
+                           "bfloat16", words)
+    return CorpusStore(jnp.asarray(arrays["base_q8"]),
+                       jnp.asarray(arrays["base_scales"]), "int8", words)

@@ -1,0 +1,221 @@
+"""Streaming index mutation: insert / delete / compact without a rebuild.
+
+The live-deployment story (PAPERS.md's Alibaba-style serving) is an index
+that takes traffic while the catalog churns. This module mutates a
+``GraphIndex`` in three primitives:
+
+- ``insert_rows`` — append rows and repair the graph *incrementally*: the
+  new rows get occlusion-pruned edges from a brute-force candidate pool,
+  and only the TOUCHED neighborhood (nodes that gained a reverse edge)
+  re-runs the keep-set recurrence (``prune.occlusion_prune_nodes`` — the
+  same jitted kernel full construction uses, on a (touched, kc, D) block).
+  Cost scales with rows-inserted x degree, not with N.
+- ``delete_rows`` — tombstone rows in an (N,) bool bitmap. Nothing is
+  rewritten: tombstoned rows stay traversable (their edges still route
+  searches through dense regions — the DiskANN/FreshDiskANN lazy-delete
+  design) but the engine scores them ``-inf`` at pool insert (the padded
+  -row convention of the sharded merge), so they can never surface in
+  results. A tombstoned entry point is reassigned to the nearest alive
+  row, keeping searches bootable.
+- ``compact`` — rewrite the index without its dead rows: pages shrink,
+  neighbor lists remap through the old->new id map (edges into dead rows
+  drop, survivors repack to the row prefix), tombstones clear.
+
+Every mutation appends to a ``MutationJournal`` — an append-only op log
+(JSON) that rides next to the index files, so a mutated index
+round-trips: ``save_index`` persists the tombstone bitmap, the journal
+records provenance (what was inserted/deleted/compacted and when, in
+op order), and ``load_journal`` restores it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.graph.build import GraphIndex, brute_force_knn
+from repro.graph.prune import occlusion_prune_nodes
+
+_JOURNAL = "journal.json"
+
+
+@dataclasses.dataclass
+class MutationJournal:
+    """Append-only mutation log for one index lineage. ``n_base`` is the
+    row count of the originally built index; ``ops`` is the ordered list
+    of mutations applied since (dicts — JSON all the way down)."""
+    n_base: int
+    ops: List[dict] = dataclasses.field(default_factory=list)
+
+    def record(self, op: str, **fields) -> None:
+        self.ops.append({"op": op, **fields})
+
+    @property
+    def n_inserted(self) -> int:
+        return sum(o.get("n", 0) for o in self.ops if o["op"] == "insert")
+
+    @property
+    def n_deleted(self) -> int:
+        return sum(len(o.get("ids", ())) for o in self.ops
+                   if o["op"] == "delete")
+
+
+def save_journal(path: str, journal: MutationJournal) -> str:
+    """Write the journal as ``journal.json`` inside an index directory
+    (atomically — temp + replace, same discipline as the tuning cache)."""
+    os.makedirs(path, exist_ok=True)
+    out = os.path.join(path, _JOURNAL)
+    tmp = out + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"n_base": journal.n_base, "ops": journal.ops}, f,
+                  indent=2)
+    os.replace(tmp, out)
+    return out
+
+
+def load_journal(path: str) -> Optional[MutationJournal]:
+    """The index directory's mutation journal, or None if it has never
+    been mutated (no journal file)."""
+    p = os.path.join(path, _JOURNAL)
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        raw = json.load(f)
+    return MutationJournal(n_base=int(raw["n_base"]),
+                           ops=list(raw["ops"]))
+
+
+def _pack_rows(rows: np.ndarray, width: int) -> np.ndarray:
+    """Compact each row's valid (>= 0) entries into its prefix and clip
+    to ``width`` columns."""
+    packed = np.argsort(rows < 0, axis=1, kind="stable")
+    return np.take_along_axis(rows, packed, axis=1)[:, :width]
+
+
+def insert_rows(index: GraphIndex, new_rows: np.ndarray,
+                k_candidates: int = 64,
+                journal: Optional[MutationJournal] = None) -> GraphIndex:
+    """Append ``new_rows`` (K, D) to the index and repair the graph
+    incrementally. Returns a NEW GraphIndex (the input is not mutated);
+    new rows occupy global ids [N, N+K).
+
+    Repair: (1) each new row's out-edges come from occlusion-pruning its
+    ``k_candidates`` exact nearest neighbors over the grown corpus (new
+    rows can select each other); (2) each node that a new row selected
+    gains the reverse edge, and ONLY those touched nodes re-prune — their
+    candidate pool is their current neighbor list plus the incoming new
+    ids, through the same keep-set recurrence as full construction. The
+    de-novo build and the incremental repair converge to near-identical
+    neighborhoods (recall within 1% on the smoke shape — pinned by tests).
+    """
+    new_rows = np.asarray(new_rows, np.float32)
+    if new_rows.ndim != 2 or new_rows.shape[1] != index.base.shape[1]:
+        raise ValueError(
+            f"new_rows must be (K, {index.base.shape[1]}), got "
+            f"{new_rows.shape}")
+    K = new_rows.shape[0]
+    N0 = index.n
+    m = index.max_degree
+    base2 = np.concatenate([np.asarray(index.base, np.float32), new_rows])
+    new_ids = np.arange(N0, N0 + K, dtype=np.int32)
+
+    # (1) out-edges for the new rows: exact candidates over the grown
+    # corpus (self-candidates are masked inside the prune kernel)
+    kc = min(k_candidates, N0 + K)
+    cand = brute_force_knn(base2, kc, queries=new_rows)
+    # never select a tombstoned row as a neighbor of a NEW node — dead
+    # rows keep their existing edges, but fresh edges should route to
+    # live regions
+    if index.tombstones is not None:
+        dead = np.concatenate([np.asarray(index.tombstones, bool),
+                               np.zeros(K, bool)])
+        cand = np.where(dead[np.maximum(cand, 0)], -1, cand)
+    new_nbrs = occlusion_prune_nodes(base2, new_ids, cand, m,
+                                     assume_unique=True)
+
+    neighbors2 = np.concatenate(
+        [np.asarray(index.neighbors, np.int32), new_nbrs])
+
+    # (2) reverse edges + incremental repair of the touched neighborhood
+    src = np.repeat(new_ids, m)
+    dst = new_nbrs.reshape(-1)
+    ok = dst >= 0
+    src, dst = src[ok], dst[ok]
+    touched = np.unique(dst)
+    if touched.size:
+        incoming_max = int(np.bincount(dst, minlength=N0 + K)[touched].max())
+        kc_t = m + incoming_max
+        cand_t = np.full((touched.size, kc_t), -1, np.int32)
+        cand_t[:, :m] = neighbors2[touched]
+        pos = {int(t): m for t in touched}
+        row_of = {int(t): i for i, t in enumerate(touched)}
+        for s, d in zip(src, dst):
+            i = row_of[int(d)]
+            cand_t[i, pos[int(d)]] = s
+            pos[int(d)] += 1
+        neighbors2[touched] = occlusion_prune_nodes(base2, touched, cand_t,
+                                                    m)
+
+    tombstones2 = None
+    if index.tombstones is not None:
+        tombstones2 = np.concatenate(
+            [np.asarray(index.tombstones, bool), np.zeros(K, bool)])
+    if journal is not None:
+        journal.record("insert", n=int(K))
+    return GraphIndex(neighbors=neighbors2, entry=index.entry, base=base2,
+                      tombstones=tombstones2)
+
+
+def delete_rows(index: GraphIndex, ids: Sequence[int],
+                journal: Optional[MutationJournal] = None) -> GraphIndex:
+    """Tombstone rows by global id. O(len(ids)) — nothing is rewritten;
+    the engine honors the bitmap at pool insert (deleted rows score -inf,
+    stay traversable). If the entry point dies, the nearest alive row
+    takes over as entry (a dead entry would seed every search at -inf and
+    exhaust it immediately). Returns a NEW GraphIndex."""
+    ids = np.asarray(list(ids), np.int64)
+    if ids.size and (ids.min() < 0 or ids.max() >= index.n):
+        raise ValueError(f"delete ids must be in [0, {index.n})")
+    flags = (np.zeros(index.n, bool) if index.tombstones is None
+             else np.asarray(index.tombstones, bool).copy())
+    flags[ids] = True
+    if flags.all():
+        raise ValueError("cannot tombstone every row in the index")
+    entry = int(index.entry)
+    if flags[entry]:
+        alive = np.flatnonzero(~flags)
+        d2 = ((index.base[alive] - index.base[entry]) ** 2).sum(axis=1)
+        entry = int(alive[np.argmin(d2)])
+    if journal is not None:
+        journal.record("delete", ids=[int(i) for i in ids])
+    return GraphIndex(neighbors=index.neighbors, entry=entry,
+                      base=index.base, tombstones=flags)
+
+
+def compact(index: GraphIndex,
+            journal: Optional[MutationJournal] = None) -> GraphIndex:
+    """Rewrite the index without its tombstoned rows: alive rows repack
+    densely (pages shrink when saved), neighbor lists remap old->new ids
+    (edges into dead rows drop; survivors compact to the row prefix), the
+    entry follows the remap, and the tombstone bitmap clears. A no-op
+    (returns the index unchanged) when nothing is deleted."""
+    if index.tombstones is None or not np.asarray(index.tombstones).any():
+        if journal is not None:
+            journal.record("compact", n_dropped=0)
+        return index
+    flags = np.asarray(index.tombstones, bool)
+    alive = np.flatnonzero(~flags)
+    remap = np.full(index.n, -1, np.int64)
+    remap[alive] = np.arange(alive.size)
+    nbrs = np.asarray(index.neighbors, np.int32)[alive]
+    nbrs = np.where(nbrs >= 0, remap[np.maximum(nbrs, 0)], -1)
+    nbrs = _pack_rows(nbrs.astype(np.int32), index.max_degree)
+    entry = int(remap[int(index.entry)])
+    if journal is not None:
+        journal.record("compact", n_dropped=int(flags.sum()))
+    return GraphIndex(neighbors=nbrs, entry=entry,
+                      base=np.asarray(index.base, np.float32)[alive],
+                      tombstones=None)

@@ -144,6 +144,24 @@ def _prune_block(base: jax.Array, node_ids: jax.Array, cand: jax.Array,
     return out
 
 
+def occlusion_prune_nodes(base: np.ndarray, node_ids: np.ndarray,
+                          cand: np.ndarray, m: int,
+                          assume_unique: bool = False) -> np.ndarray:
+    """Occlusion-prune an ARBITRARY node set: (Nb,) node ids + (Nb, kc)
+    candidate ids -> (Nb, m) int32, -1 padded. This is the incremental-
+    repair entry point (graph/mutate.py): streaming inserts re-run the
+    same jitted keep-set recurrence on just the touched neighborhood — a
+    (touched, kc, D) block — instead of the whole corpus. Self-candidates
+    and -1 padding are masked inside the kernel; semantics are identical
+    to the corresponding rows of a full ``occlusion_prune`` pass."""
+    node_ids = np.asarray(node_ids, np.int32)
+    cand = np.asarray(cand, np.int32)
+    out = _prune_block(jnp.asarray(base, jnp.float32),
+                       jnp.asarray(node_ids), jnp.asarray(cand), m,
+                       assume_unique)
+    return np.asarray(out)
+
+
 def occlusion_prune(base: np.ndarray, knn: np.ndarray, m: int,
                     block: int = 4096,
                     assume_unique: bool = False) -> np.ndarray:

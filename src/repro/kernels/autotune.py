@@ -41,6 +41,7 @@ import json
 import os
 import pathlib
 import tempfile
+import warnings
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 _DEFAULTS_PATH = pathlib.Path(__file__).with_name("tuning_defaults.json")
@@ -92,13 +93,31 @@ def cache_path() -> str:
 
 
 def _load_entries(path) -> Dict[str, dict]:
+    """Entries from a cache file; a missing file is normal ({}), but a
+    file that EXISTS and won't parse is a corrupt/truncated local cache
+    (e.g. a concurrent writer predating the atomic-replace discipline, or
+    hand-editing) — warn once and fall back to the shipped defaults
+    instead of crashing plan resolution."""
     try:
         with open(path) as f:
             doc = json.load(f)
-        entries = doc.get("entries", {})
-        return entries if isinstance(entries, dict) else {}
-    except (OSError, ValueError):
+    except OSError:
         return {}
+    except ValueError:
+        warnings.warn(
+            f"tuning cache at {path!r} is corrupt (unparsable JSON); "
+            f"ignoring it — plans fall back to shipped defaults. Delete "
+            f"the file or re-run autotune to repair it.",
+            RuntimeWarning, stacklevel=2)
+        return {}
+    entries = doc.get("entries", {}) if isinstance(doc, dict) else None
+    if not isinstance(entries, dict):
+        warnings.warn(
+            f"tuning cache at {path!r} has an unexpected layout (no "
+            f"'entries' mapping); ignoring it — plans fall back to "
+            f"shipped defaults.", RuntimeWarning, stacklevel=2)
+        return {}
+    return entries
 
 
 def load_cache() -> Dict[str, dict]:
@@ -153,8 +172,17 @@ def _wildcard(kernel: str, backend: Optional[str]) -> str:
 def _from_entry(entry: Optional[dict]) -> Optional[TileConfig]:
     if not isinstance(entry, dict):
         return None
-    return TileConfig(plan=str(entry.get("plan", "rowwise")),
-                      bt=int(entry.get("bt", 8)))
+    try:
+        plan = str(entry.get("plan", "rowwise"))
+        bt = int(entry.get("bt", 8))
+    except (TypeError, ValueError):
+        # garbage values inside an otherwise-parsable cache entry (e.g.
+        # "bt": "fast") must not poison resolution — skip the entry so
+        # the lookup falls through to the next precedence level
+        return None
+    if plan not in ("tile", "rowwise") or bt < 1:
+        return None
+    return TileConfig(plan=plan, bt=bt)
 
 
 def lookup(kernel: str, q: int = 0, m: int = 0, d: int = 0,

@@ -60,6 +60,19 @@ def main(argv: Optional[Sequence[str]] = None) -> str:
                          "quarters the vector payload (per-row scales); "
                          "serve.py loads it straight into the index-fused "
                          "search path")
+    ap.add_argument("--page-rows", type=int, default=4096,
+                    help="rows per page in the saved (v3) payload layout — "
+                         "the page granularity paged residency faults at "
+                         "(recorded in meta; load_corpus_store defaults "
+                         "to it)")
+    ap.add_argument("--residency", choices=["whole", "paged"],
+                    default="whole",
+                    help="post-build verification residency: 'paged' "
+                         "reloads the saved index through the paged store "
+                         "and checks a sample gather against the whole-"
+                         "resident payload (the layout on disk is the "
+                         "same either way — residency is a LOAD-time "
+                         "policy)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", type=str, required=True,
                     help="output index directory")
@@ -107,10 +120,27 @@ def main(argv: Optional[Sequence[str]] = None) -> str:
     if args.graph == "begin":
         extra["measure_family"] = args.measure
     meta_path = save_index(args.out, index, corpus_dtype=args.corpus_dtype,
-                           extra_meta=extra)
+                           extra_meta=extra, page_rows=args.page_rows)
     print(f"[build_index] {base.shape[0]} items dim={base.shape[1]}: {desc}, "
           f"built in {dt:.1f}s -> {args.out} "
-          f"(corpus_dtype={args.corpus_dtype})")
+          f"(corpus_dtype={args.corpus_dtype}, page_rows={args.page_rows})")
+    if args.residency == "paged" and args.shards == 0:
+        import jax.numpy as jnp
+
+        from repro.core.corpus import ResidencyPolicy
+        from repro.graph import load_corpus_store
+        paged = load_corpus_store(args.out,
+                                  residency=ResidencyPolicy("paged"))
+        whole = load_corpus_store(args.out)
+        probe = jnp.arange(min(256, index.n if args.shards == 0 else 1))
+        if not np.array_equal(np.asarray(paged.take(probe)),
+                              np.asarray(whole.take(probe))):
+            raise SystemExit("[build_index] paged-residency verification "
+                             "FAILED: paged gather != whole gather")
+        st = paged.stats_snapshot()
+        print(f"[build_index] paged verification ok: page_rows="
+              f"{paged.cache.page_rows}, faults={st.faults}, "
+              f"resident_bytes={st.resident_bytes}")
     return meta_path
 
 

@@ -196,6 +196,18 @@ def main() -> None:
                     help="serve a prebuilt index directory (graph/io.py)")
     ap.add_argument("--save-index", type=str, default=None,
                     help="persist the built index to this directory")
+    ap.add_argument("--residency", choices=["whole", "paged"],
+                    default="whole",
+                    help="corpus residency policy: 'paged' serves --index "
+                         "payloads straight off their mmap'd page files "
+                         "through an LRU page cache (bounded resident "
+                         "bytes) instead of loading the corpus whole")
+    ap.add_argument("--page-rows", type=int, default=4096,
+                    help="paged residency: rows per page (the index meta's "
+                         "saved page_rows wins when this is left at the "
+                         "default)")
+    ap.add_argument("--cache-mb", type=int, default=64,
+                    help="paged residency: LRU page-cache byte budget (MiB)")
     args = ap.parse_args()
 
     if args.list_measures:
@@ -221,6 +233,11 @@ def main() -> None:
 
     rng = np.random.default_rng(0)
     store = None
+    paged_policy = None
+    if args.residency == "paged":
+        from repro.core.corpus import ResidencyPolicy
+        paged_policy = ResidencyPolicy("paged", args.page_rows,
+                                       args.cache_mb << 20)
     if args.index:
         graph = load_index(args.index)
         if not isinstance(graph, GraphIndex):
@@ -229,14 +246,32 @@ def main() -> None:
                              "core.sharded / launch.dryrun)")
         base = graph.base
         args.items, args.dim = base.shape
-        if fused:
-            saved = load_corpus_store(args.index)
+        index_meta = load_index_meta(args.index)
+        saved_dtype = index_meta.get("corpus_dtype", "float32")
+        if saved_dtype != args.corpus_dtype:
+            # mirror the measure-mismatch warning below: never silently
+            # serve a different residency than the operator asked for
+            print(f"[serve] WARNING: index at {args.index} stores the "
+                  f"corpus as {saved_dtype!r} but --corpus-dtype="
+                  f"{args.corpus_dtype!r} was requested — re-quantizing "
+                  f"the loaded payload to {args.corpus_dtype!r} "
+                  f"({saved_dtype!r} round-trip error carries over; "
+                  f"rebuild with --corpus-dtype {args.corpus_dtype} to "
+                  f"serve exactly what was quantized at build time)")
+            if paged_policy is not None:
+                raise SystemExit(
+                    "[serve] --residency paged cannot re-quantize (paging "
+                    "serves the on-disk payload as-is); rebuild the index "
+                    f"with --corpus-dtype {args.corpus_dtype} or serve "
+                    f"--corpus-dtype {saved_dtype}")
+        if paged_policy is not None:
+            store = load_corpus_store(args.index, residency=paged_policy)
+        elif fused and saved_dtype == args.corpus_dtype:
             # reuse the stored payload when it matches the requested
             # residency — no fp32 round-trip, no requantization
-            store = saved if saved.dtype == args.corpus_dtype else None
+            store = load_corpus_store(args.index)
         print(f"[serve] index: loaded {args.index} ({graph.n} items, "
-              f"degree {graph.avg_degree:.1f})")
-        index_meta = load_index_meta(args.index)
+              f"degree {graph.avg_degree:.1f}, residency={args.residency})")
         # carried through --save-index below so provenance survives copies
         provenance = {k: index_meta[k]
                       for k in ("graph_kind", "measure_family")
@@ -274,17 +309,30 @@ def main() -> None:
 
     base_j = jnp.asarray(base)
     nbrs_j = jnp.asarray(graph.neighbors)
+    if store is None and paged_policy is not None:
+        # synthetic corpus under a paged policy: quantize host-side and
+        # page from host memory (file-backed pages need --index)
+        store = make_corpus_store(base, args.corpus_dtype,
+                                  residency=paged_policy)
     if store is None and fused:
         # quantize once, up front — every batch then searches the resident
         # (possibly bf16/int8) payload without per-call conversion
         store = make_corpus_store(base_j, args.corpus_dtype)
     corpus_arg = store if store is not None else base_j
-    if fused:
+    if store is not None and getattr(store, "is_paged", False):
+        print(f"[serve] corpus paged: dtype={store.dtype} page_rows="
+              f"{store.cache.page_rows} cache_budget={args.cache_mb} MiB "
+              f"(resident bytes bounded; LRU page faults on demand)")
+    elif fused:
         mib = store.nbytes() / 2**20
         print(f"[serve] corpus resident: dtype={store.dtype} {mib:.1f} MiB "
               f"(fused gather-rank-score path)")
 
-    if args.autotune and fused:
+    if args.autotune and store is not None \
+            and getattr(store, "is_paged", False):
+        print("[serve] autotune: skipped (paged residency always runs the "
+              "tile plan — one combined pager gather per step)")
+    elif args.autotune and fused:
         # sweep the fused-step plan at the exact serving shape before any
         # traffic; a prior run at this shape is a cache hit (no sweep)
         from repro.kernels import autotune

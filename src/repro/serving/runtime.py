@@ -71,6 +71,7 @@ class Completion:
     n_iters: int
     lane: int
     record: RequestRecord
+    epoch: int = 0         # index version the request was admitted under
 
 
 def poisson_arrivals(n: int, qps: float, seed: int = 0) -> np.ndarray:
@@ -106,6 +107,9 @@ class ContinuousRuntime:
         self.steps_per_tick = steps_per_tick
         self._now = now_fn
 
+        self.epoch = 0
+        self._pending_index: Optional[tuple] = None
+        self._lane_epoch: List[int] = [0] * n_lanes
         self.queue: collections.deque[Request] = collections.deque()
         self._lane_req: List[Optional[Request]] = [None] * n_lanes
         self._admit_time: List[float] = [0.0] * n_lanes
@@ -162,10 +166,44 @@ class ContinuousRuntime:
                                   entry, deadline, budget_iters))
         return rid
 
+    # -- index-version epochs (streaming mutation) --------------------------
+
+    def install_index(self, corpus, neighbors, entry: Optional[int] = None
+                      ) -> int:
+        """Stage a new index version (mutated / compacted corpus store +
+        neighbor lists + optional new entry point). The swap is deferred:
+        in-flight lanes FINISH against the epoch they were admitted under
+        (their pools, visited bitmaps, and neighbor ids are all old-index
+        coordinates), admissions hold while the swap is pending, and once
+        the runtime drains the staged index swaps in atomically — queued
+        and future requests then search the new epoch. Returns the epoch
+        number the staged index will serve as; each ``Completion.epoch``
+        records the version its request actually ran against."""
+        self._pending_index = (corpus, neighbors, entry)
+        return self.epoch + 1
+
+    def _maybe_swap_index(self) -> bool:
+        if self._pending_index is None or self.in_flight:
+            return False
+        corpus, neighbors, entry = self._pending_index
+        self._pending_index = None
+        self.store = as_corpus_store(corpus, self.engine.corpus_dtype)
+        self.neighbors = jnp.asarray(neighbors)
+        if entry is not None:
+            self.default_entry = int(entry)
+        self._entries_np[:] = self.default_entry
+        # shapes may change (inserts grow N, compaction shrinks it); the
+        # jitted reset/tick retrace on the new shapes automatically
+        self._state = self.engine.idle_state(self.n_lanes, self.store.n)
+        self.epoch += 1
+        return True
+
     # -- scheduler round ----------------------------------------------------
 
     def _admit(self, now: float) -> List[Completion]:
         dropped: List[Completion] = []
+        if self._pending_index is not None:
+            return dropped      # admissions hold until the staged epoch
         free = [l for l in range(self.n_lanes) if self._lane_req[l] is None]
         if not free or not self.queue:
             return dropped
@@ -182,13 +220,14 @@ class ContinuousRuntime:
                 self.metrics.observe(rec)
                 c = Completion(req.rid, np.full((k,), -1, np.int32),
                                np.full((k,), -np.inf, np.float32),
-                               0, 0, 0, -1, rec)
+                               0, 0, 0, -1, rec, self.epoch)
                 self.completions.append(c)
                 dropped.append(c)
                 continue
             lane = free.pop(0)
             mask[lane] = True
             self._lane_req[lane] = req
+            self._lane_epoch[lane] = self.epoch
             self._admit_time[lane] = now
             self._queries_np[lane] = req.query
             self._entries_np[lane] = (req.entry if req.entry is not None
@@ -239,7 +278,8 @@ class ContinuousRuntime:
                                 int(n_iters[lane]))
             c = Completion(req.rid, ids[lane].copy(), scores[lane].copy(),
                            int(n_eval[lane]), int(n_grad[lane]),
-                           int(n_iters[lane]), lane, rec)
+                           int(n_iters[lane]), lane, rec,
+                           self._lane_epoch[lane])
             self.metrics.observe(rec)
             self.completions.append(c)
             self._lane_req[lane] = None
@@ -248,7 +288,10 @@ class ContinuousRuntime:
 
     def step_once(self) -> List[Completion]:
         """One admit → tick → harvest round; returns every request that
-        resolved this round — harvested results AND deadline drops."""
+        resolved this round — harvested results AND deadline drops. A
+        staged index (``install_index``) swaps in at the top of the round
+        once the previous epoch's lanes have all harvested."""
+        self._maybe_swap_index()
         dropped = self._admit(self._now())
         self._tick()
         return dropped + self._harvest(self._now())
@@ -329,6 +372,26 @@ class ShardedContinuousRuntime:
         self._partial: Dict[int, List[Completion]] = {}
         self._rid_gen = itertools.count()
         self._merge = jax.jit(_merge_one, static_argnames=("k",))
+        self._indices: Dict[int, object] = {0: index}
+
+    def install_index(self, index) -> int:
+        """Stage a new ``ShardedIndex`` version on every shard runtime.
+        Each shard swaps when ITS lanes drain (per-shard epochs advance in
+        lockstep — one install bumps every shard by one), and the merge
+        remaps each partial's local ids through the global_ids of the
+        epoch that shard actually searched, so harvests straddling the
+        swap stay correct. Returns the staged epoch number."""
+        if index.n_shards != len(self.runtimes):
+            raise ValueError(
+                f"staged index has {index.n_shards} shards, runtime has "
+                f"{len(self.runtimes)}")
+        epoch = max(self._indices) + 1
+        self._indices[epoch] = index
+        self.index = index
+        for s, rt in enumerate(self.runtimes):
+            rt.install_index(index.base[s], index.neighbors[s],
+                             int(index.entries[s]))
+        return epoch
 
     @property
     def in_flight(self) -> int:
@@ -384,7 +447,8 @@ class ShardedContinuousRuntime:
                 scores = np.full((k,), -np.inf, np.float32)
             else:
                 gl = [np.where(p.ids >= 0,
-                               self.index.global_ids[s][np.maximum(p.ids, 0)],
+                               self._indices[p.epoch]
+                               .global_ids[s][np.maximum(p.ids, 0)],
                                -1) for s, p in enumerate(parts)]
                 ids, scores = self._merge(
                     jnp.asarray(np.stack(gl))[None],
@@ -398,7 +462,8 @@ class ShardedContinuousRuntime:
                 sum(p.n_eval for p in parts), sum(p.n_grad for p in parts),
                 max(p.n_iters for p in parts), timed_out=timed_out)
             c = Completion(rid, ids, scores,
-                           rec.n_eval, rec.n_grad, rec.n_iters, -1, rec)
+                           rec.n_eval, rec.n_grad, rec.n_iters, -1, rec,
+                           max(p.epoch for p in parts))
             self.metrics.observe(rec)
             self.completions.append(c)
             out.append(c)

@@ -260,3 +260,53 @@ def test_engine_tile_plan_bit_matches_rowwise_and_unfused(mode):
                                       np.asarray(r.scores))
         np.testing.assert_array_equal(np.asarray(r_un.n_eval),
                                       np.asarray(r.n_eval))
+
+
+# ---------------------------------------------------------------------------
+# cache hardening: corrupt / malformed caches degrade to shipped defaults
+# ---------------------------------------------------------------------------
+
+def test_corrupt_cache_warns_and_falls_back(tmp_cache, monkeypatch):
+    """A cache file that exists but won't parse (truncated write,
+    hand-editing) must not crash plan resolution: one RuntimeWarning, then
+    lookup falls through to the shipped defaults."""
+    monkeypatch.setattr(autotune, "shipped_defaults", lambda: {
+        "cpu|engine_step|*": {"plan": "tile", "bt": 8}})
+    tmp_cache.write_text("{ this is not json")
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        cfg = autotune.lookup("engine_step", backend="cpu")
+    assert cfg == autotune.TileConfig(plan="tile", bt=8)
+    # resolve() (the caller every kernel uses) keeps working too
+    with pytest.warns(RuntimeWarning):
+        assert autotune.resolve("engine_step", backend="cpu").plan == "tile"
+
+
+def test_unexpected_cache_layout_warns(tmp_cache, monkeypatch):
+    monkeypatch.setattr(autotune, "shipped_defaults", lambda: {})
+    tmp_cache.write_text('{"entries": [1, 2, 3]}')      # list, not mapping
+    with pytest.warns(RuntimeWarning, match="unexpected layout"):
+        assert autotune.load_cache() == {}
+
+
+def test_garbage_entry_values_fall_through(tmp_cache, monkeypatch):
+    """Unparsable values INSIDE a parsable cache ("bt": "fast", bogus
+    plans) skip the entry so the next precedence level wins, instead of
+    poisoning resolution."""
+    monkeypatch.setattr(autotune, "shipped_defaults", lambda: {
+        "cpu|engine_step|*": {"plan": "rowwise", "bt": 4}})
+    key = autotune.make_key("engine_step", 8, 24, 32, "float32", "cpu")
+    autotune.save_cache({key: {"plan": "tile", "bt": "fast"},
+                         "cpu|engine_step|*": {"plan": "diagonal", "bt": 2}})
+    cfg = autotune.lookup("engine_step", 8, 24, 32, "float32", backend="cpu")
+    assert cfg == autotune.TileConfig(plan="rowwise", bt=4)
+
+
+def test_corrupt_cache_is_repairable_by_save(tmp_cache):
+    tmp_cache.write_text("garbage")
+    with pytest.warns(RuntimeWarning):
+        assert autotune.load_cache() == {}
+    autotune.record("engine_step", autotune.TileConfig("tile", 16),
+                    backend="cpu")
+    key = autotune.make_key("engine_step", 0, 0, 0, "float32", "cpu")
+    assert autotune._from_entry(autotune.load_cache()[key]) \
+        == autotune.TileConfig("tile", 16)

@@ -263,20 +263,24 @@ def test_meta_records_corpus_dtype(rng, tmp_path):
     save_index(str(tmp_path / "idx"), g, corpus_dtype="int8")
     meta = json.load(open(tmp_path / "idx" / "meta.json"))
     assert meta["corpus_dtype"] == "int8"
-    assert meta["format_version"] == 2
+    assert meta["format_version"] == 3
 
 
 def test_v1_indexes_still_load(rng, tmp_path):
-    """A v1 directory (pre-residency layout: fp32 'base', no corpus_dtype
-    key) must keep loading — the reader branch the version bump promised."""
+    """A v1 directory (pre-residency layout: fp32 'base' inside the npz,
+    no corpus_dtype key) must keep loading — the reader branch the version
+    bumps promised. Written the way a v1 writer actually wrote it, since
+    save_index now emits the v3 page-aligned layout."""
     import json
     base = rng.normal(size=(150, 8)).astype(np.float32)
     g = build_l2_graph(base, m=8, k_construction=20)
     path = tmp_path / "idx"
-    save_index(str(path), g)       # v2 fp32 layout == v1 layout + new keys
-    meta = json.load(open(path / "meta.json"))
-    meta.pop("corpus_dtype")
-    meta["format_version"] = 1
+    path.mkdir()
+    np.savez_compressed(path / "arrays.npz",
+                        neighbors=g.neighbors, base=g.base)
+    meta = {"format_version": 1, "kind": "graph", "entry": int(g.entry),
+            "n": g.n, "dim": 8, "max_degree": int(g.max_degree),
+            "avg_degree": float(g.avg_degree)}
     json.dump(meta, open(path / "meta.json", "w"))
     g2 = load_index(str(path))
     assert np.array_equal(g2.base, g.base)

@@ -93,3 +93,98 @@ def test_build_index_cli_from_npy(tmp_path, rng):
                           "--out", out])
     g = load_index(out)
     assert np.array_equal(g.base, corpus)
+
+
+# ---------------------------------------------------------------------------
+# format versions: v3 layout + synthesized v1/v2 readers
+# ---------------------------------------------------------------------------
+
+def _write_legacy(path, g, version, corpus_dtype="float32"):
+    """Write an index directory in the pre-v3 layout (corpus payload as npz
+    members, no page metadata) — what v1/v2 writers produced."""
+    from repro.graph.io import _encode_base
+    path.mkdir(parents=True, exist_ok=True)
+    arrays = {"neighbors": g.neighbors, **_encode_base(g.base, corpus_dtype)}
+    np.savez_compressed(path / "arrays.npz", **arrays)
+    meta = {"format_version": version, "kind": "graph",
+            "entry": int(g.entry), "n": g.n,
+            "dim": int(g.base.shape[1]), "max_degree": int(g.max_degree),
+            "avg_degree": float(g.avg_degree)}
+    if version >= 2:
+        meta["corpus_dtype"] = corpus_dtype
+    json.dump(meta, open(path / "meta.json", "w"))
+
+
+@pytest.mark.parametrize("version,dtype", [(1, "float32"),
+                                           (2, "float32"),
+                                           (2, "int8"),
+                                           (2, "bfloat16")])
+def test_legacy_versions_still_load(rng, tmp_path, version, dtype):
+    """v1 (always fp32) and v2 (quantized residency) directories stay
+    readable by the v3 reader — load_index AND paged load_corpus_store
+    (legacy payloads page from host npz arrays instead of mmap)."""
+    from repro.core.corpus import ResidencyPolicy
+    from repro.graph import load_corpus_store
+    g = _graph(rng, n=260)
+    path = tmp_path / f"v{version}-{dtype}"
+    _write_legacy(path, g, version, dtype)
+    g2 = load_index(str(path))
+    assert np.array_equal(g.neighbors, g2.neighbors)
+    if dtype == "float32":
+        assert np.array_equal(g.base, g2.base)
+    else:
+        assert np.abs(g.base - g2.base).max() < 0.1   # quantized round trip
+    whole = load_corpus_store(str(path))
+    paged = load_corpus_store(str(path),
+                              residency=ResidencyPolicy("paged", 64))
+    ids = np.arange(260)
+    np.testing.assert_array_equal(np.asarray(whole.take(ids)),
+                                  paged.cache.gather(ids))
+
+
+def test_v3_layout_on_disk(rng, tmp_path):
+    """The v3 graph layout: corpus payload in raw page-aligned .npy files
+    (mmap-able), page geometry in meta, npz holding only graph-side
+    arrays."""
+    g = _graph(rng, n=300)
+    path = tmp_path / "v3"
+    save_index(str(path), g, page_rows=64)
+    assert (path / "base.npy").exists()
+    with np.load(path / "arrays.npz") as z:
+        assert "base" not in z.files and "neighbors" in z.files
+    meta = json.load(open(path / "meta.json"))
+    assert meta["format_version"] == 3
+    assert meta["page_rows"] == 64 and meta["n_pages"] == 5
+    assert meta["page_offsets"] == [0, 64, 128, 192, 256]
+    assert meta["payload_files"] == {"base": "base.npy"}
+
+
+def test_v3_paged_load_is_mmap_backed(rng, tmp_path):
+    """Paged loads of a v3 index serve pages off an np.memmap — rows reach
+    host memory page-fault by page-fault, and meta's page_rows is the
+    default page size."""
+    from repro.core.corpus import ResidencyPolicy
+    from repro.graph import load_corpus_store
+    g = _graph(rng, n=300)
+    save_index(str(tmp_path / "idx"), g, page_rows=64)
+    st = load_corpus_store(str(tmp_path / "idx"),
+                           residency=ResidencyPolicy("paged"))
+    assert isinstance(st.cache.data, np.memmap)
+    assert st.cache.page_rows == 64          # meta wins at default policy
+    whole = load_corpus_store(str(tmp_path / "idx"))
+    ids = np.arange(300)
+    np.testing.assert_array_equal(paged_rows := st.cache.gather(ids),
+                                  np.asarray(whole.take(ids)))
+    assert paged_rows.dtype == np.float32
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_v3_round_trip_every_dtype(rng, tmp_path, dtype):
+    g = _graph(rng, n=200)
+    save_index(str(tmp_path / dtype), g, corpus_dtype=dtype, page_rows=128)
+    g2 = load_index(str(tmp_path / dtype))
+    assert np.array_equal(g.neighbors, g2.neighbors)
+    if dtype == "float32":
+        assert np.array_equal(g.base, g2.base)
+    else:
+        assert np.abs(g.base - g2.base).max() < 0.1

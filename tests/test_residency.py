@@ -1,0 +1,372 @@
+"""Paged corpus residency + streaming index mutation (DESIGN.md §11).
+
+The acceptance pins: paged searches are BIT-IDENTICAL to whole-resident
+searches at fp32 (single engine, sharded host merge, continuous runtime —
+both measure bundles), the LRU pager stays inside its byte budget (modulo
+the in-flight pinned working set), tombstoned rows never surface in
+results while staying traversable, streaming inserts track a from-scratch
+rebuild's recall within 1%, and delete→compact round-trips through io v3.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (EngineOptions, SearchConfig, build_engine,
+                        deepfm_measure, make_corpus_store, mlp_measure,
+                        recall)
+from repro.core.corpus import (PagedCorpusStore, ResidencyPolicy,
+                               make_paged_store, pack_bitmap, unpack_bitmap)
+from repro.core.sharded import (build_sharded_index, shard_stores,
+                                sharded_search_stores)
+from repro.graph import (MutationJournal, build_l2_graph, compact,
+                         delete_rows, insert_rows, load_corpus_store,
+                         load_index, load_journal, save_index, save_journal)
+from repro.models import deepfm as deepfm_lib
+from repro.serving import ContinuousRuntime, Request
+
+PAGED = ResidencyPolicy("paged", page_rows=128, cache_bytes=1 << 20)
+
+
+def _measure(family: str, dim: int):
+    if family == "mlp":
+        return mlp_measure(jax.random.PRNGKey(1), dim, dim, hidden=(32,))
+    cfg_m = deepfm_lib.DeepFMConfig()
+    assert cfg_m.vec_dim == dim
+    params, _ = deepfm_lib.init_measure(jax.random.PRNGKey(0), cfg_m)
+    return deepfm_measure(params, cfg_m)
+
+
+@pytest.fixture(scope="module")
+def system():
+    dim = deepfm_lib.DeepFMConfig().vec_dim
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(600, dim)).astype(np.float32) * 0.5
+    queries = rng.normal(size=(12, dim)).astype(np.float32) * 0.5
+    graph = build_l2_graph(base, m=8, k_construction=24)
+    return dict(base=base, queries=queries, graph=graph, dim=dim)
+
+
+# ---------------------------------------------------------------------------
+# paged == whole: the bit-identity pins
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["deepfm", "mlp"])
+@pytest.mark.parametrize("fused", [False, True])
+def test_paged_search_bit_identical_single(system, family, fused):
+    """fp32 paged search returns bit-identical ids AND scores (and
+    counters) to the whole-resident run, fused and unfused, both measure
+    bundles — residency is a policy, not a different search."""
+    s = system
+    measure = _measure(family, s["dim"])
+    cfg = SearchConfig(k=10, ef=32, mode="guitar", budget=6, alpha=1.1)
+    eng = build_engine(measure, cfg, EngineOptions(fused=fused))
+    nbrs = jnp.asarray(s["graph"].neighbors)
+    q = jnp.asarray(s["queries"])
+    entries = jnp.full((q.shape[0],), s["graph"].entry, jnp.int32)
+    whole = make_corpus_store(s["base"])
+    paged = make_corpus_store(s["base"], residency=PAGED)
+    r_w = eng.search(measure.params, whole, nbrs, q, entries)
+    r_p = eng.search(measure.params, paged, nbrs, q, entries)
+    np.testing.assert_array_equal(np.asarray(r_w.ids), np.asarray(r_p.ids))
+    np.testing.assert_array_equal(np.asarray(r_w.scores),
+                                  np.asarray(r_p.scores))
+    np.testing.assert_array_equal(np.asarray(r_w.n_eval),
+                                  np.asarray(r_p.n_eval))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_paged_take_matches_whole(system, dtype):
+    """The pager's host-side dequant twins reproduce the device gather
+    bit-for-bit in every residency dtype."""
+    s = system
+    rng = np.random.default_rng(1)
+    ids = jnp.asarray(rng.integers(0, 600, size=(5, 7)).astype(np.int32))
+    whole = make_corpus_store(s["base"], dtype)
+    paged = make_corpus_store(s["base"], dtype, residency=PAGED)
+    np.testing.assert_array_equal(np.asarray(whole.take(ids)),
+                                  np.asarray(paged.take(ids)))
+
+
+@pytest.mark.parametrize("family", ["deepfm", "mlp"])
+def test_paged_search_bit_identical_sharded(system, family):
+    """sharded_search_stores over paged per-shard stores == whole stores."""
+    s = system
+    measure = _measure(family, s["dim"])
+    cfg = SearchConfig(k=5, ef=24, mode="guitar", budget=6, alpha=1.1)
+    idx = build_sharded_index(s["base"], n_shards=2, m=8, k_construction=24)
+    r_w = sharded_search_stores(measure, shard_stores(idx), idx,
+                                s["queries"], cfg)
+    r_p = sharded_search_stores(measure,
+                                shard_stores(idx, residency=PAGED), idx,
+                                s["queries"], cfg)
+    np.testing.assert_array_equal(r_w.ids, r_p.ids)
+    np.testing.assert_array_equal(r_w.scores, r_p.scores)
+    np.testing.assert_array_equal(r_w.n_eval, r_p.n_eval)
+    np.testing.assert_array_equal(r_w.n_iters, r_p.n_iters)
+
+
+def test_paged_search_bit_identical_continuous(system):
+    """The continuous-batching runtime accepts a paged store and completes
+    the same stream bit-identically to the whole-resident runtime."""
+    s = system
+    measure = _measure("mlp", s["dim"])
+    cfg = SearchConfig(k=5, ef=24, mode="guitar", budget=6, alpha=1.1)
+    eng = build_engine(measure, cfg,
+                       EngineOptions(rank_impl="ref", measure_impl="vmap"))
+    g = s["graph"]
+    Q = s["queries"].shape[0]
+    stream = [Request(rid=i, query=s["queries"][i]) for i in range(Q)]
+    comps = {}
+    for name, corpus in (("whole", s["base"]),
+                         ("paged", make_corpus_store(s["base"],
+                                                     residency=PAGED))):
+        rt = ContinuousRuntime(eng, measure.params, corpus, g.neighbors,
+                               n_lanes=4, query_dim=s["dim"], entry=g.entry,
+                               steps_per_tick=3)
+        comps[name] = {c.rid: c for c in rt.run_stream(stream,
+                                                       realtime=False)}
+    for i in range(Q):
+        w, p = comps["whole"][i], comps["paged"][i]
+        np.testing.assert_array_equal(w.ids, p.ids)
+        np.testing.assert_array_equal(w.scores, p.scores)
+        assert w.n_eval == p.n_eval and w.n_iters == p.n_iters
+
+
+def test_paged_rejects_pallas_fused(system):
+    """The Pallas index-fused kernels read device-resident payloads; a
+    paged (host-pager) store cannot feed them — fail loudly at init."""
+    s = system
+    measure = _measure("mlp", s["dim"])
+    eng = build_engine(measure, SearchConfig(k=5, ef=16),
+                       EngineOptions(fused=True, rank_impl="pallas"))
+    paged = make_corpus_store(s["base"], residency=PAGED)
+    q = jnp.asarray(s["queries"][:2])
+    with pytest.raises(ValueError, match="paged"):
+        eng.init_state(measure.params, paged, jnp.asarray(
+            s["graph"].neighbors), q, jnp.zeros((2,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# the pager itself
+# ---------------------------------------------------------------------------
+
+def test_lru_evicts_cold_pages_under_budget(system):
+    """Disjoint sequential gathers over a corpus larger than the budget:
+    cold pages are evicted, the footprint stays at budget + the in-flight
+    pinned working set, and every gather is still exact."""
+    base = system["base"]
+    page_rows, dim = 64, base.shape[1]
+    page_bytes = page_rows * dim * 4
+    policy = ResidencyPolicy("paged", page_rows=page_rows,
+                             cache_bytes=3 * page_bytes)
+    store = make_paged_store(base, "float32", policy)
+    for start in range(0, 512, page_rows):      # 8 disjoint pages
+        ids = np.arange(start, start + page_rows)
+        np.testing.assert_array_equal(store.cache.gather(ids), base[ids])
+    st = store.stats_snapshot()
+    assert st.evictions > 0
+    assert st.resident_bytes <= policy.cache_bytes
+    assert st.peak_resident_bytes <= policy.cache_bytes + page_bytes
+    # a re-gather of the hottest (most recent) page is a pure hit
+    hits0 = st.hits
+    store.cache.gather(np.arange(512 - page_rows, 512))
+    assert store.stats_snapshot().hits > hits0
+
+
+def test_pack_unpack_bitmap_round_trip():
+    rng = np.random.default_rng(2)
+    flags = rng.random(197) < 0.3
+    assert np.array_equal(unpack_bitmap(pack_bitmap(flags), 197), flags)
+
+
+def test_paged_store_is_jit_compatible(system):
+    """A PagedCorpusStore flows through jit as a pytree (the page cache is
+    static aux data; the callback gathers on host)."""
+    paged = make_corpus_store(system["base"], residency=PAGED)
+    assert isinstance(paged, PagedCorpusStore)
+
+    @jax.jit
+    def take2(store, ids):
+        return store.take(ids) * 2.0
+    ids = jnp.asarray([1, 5, 599])
+    np.testing.assert_allclose(np.asarray(take2(paged, ids)),
+                               system["base"][np.asarray(ids)] * 2.0,
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# streaming mutation
+# ---------------------------------------------------------------------------
+
+def test_deleted_rows_never_surface(system):
+    """Tombstoned rows are scored -inf at pool insert: they stay
+    traversable (graph connectivity) but cannot appear in results."""
+    s = system
+    measure = _measure("mlp", s["dim"])
+    cfg = SearchConfig(k=10, ef=32, mode="guitar", budget=6, alpha=1.1)
+    eng = build_engine(measure, cfg)
+    # delete the whole-resident run's top answers — the strongest attractors
+    whole = make_corpus_store(s["base"])
+    nbrs = jnp.asarray(s["graph"].neighbors)
+    q = jnp.asarray(s["queries"])
+    entries = jnp.full((q.shape[0],), s["graph"].entry, jnp.int32)
+    r0 = eng.search(measure.params, whole, nbrs, q, entries)
+    victims = np.unique(np.asarray(r0.ids)[:, :3].ravel())
+    victims = victims[victims >= 0]
+    g2 = delete_rows(s["graph"], victims)
+    for residency in (None, PAGED):
+        store = make_corpus_store(s["base"], residency=residency,
+                                  tombstones=g2.tombstones)
+        entries2 = jnp.full((q.shape[0],), g2.entry, jnp.int32)
+        r = eng.search(measure.params, store, nbrs, q, entries2)
+        ids = np.asarray(r.ids)
+        assert not np.isin(ids[ids >= 0], victims).any()
+        assert (ids >= 0).any()     # searches still return live answers
+
+
+def test_insert_recall_within_1pct_of_rebuild(system):
+    """Streaming insert of 100 rows into a 500-row index: engine recall on
+    the grown index stays within 1% of a from-scratch rebuild over the
+    same 600 rows (the ISSUE smoke shape)."""
+    s = system
+    base, dim = s["base"], s["dim"]
+    old, new = base[:500], base[500:600]
+    g_inc = insert_rows(build_l2_graph(old, m=8, k_construction=24), new)
+    g_reb = build_l2_graph(base[:600], m=8, k_construction=24)
+    assert g_inc.n == 600 and g_inc.base.shape == g_reb.base.shape
+
+    measure = _measure("mlp", dim)
+    cfg = SearchConfig(k=10, ef=32, mode="guitar", budget=6, alpha=1.1)
+    eng = build_engine(measure, cfg)
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(64, dim)).astype(np.float32) * 0.5)
+    from repro.core import brute_force_topk
+    true_ids, _ = brute_force_topk(measure, jnp.asarray(g_reb.base), q, 10)
+    recalls = {}
+    for name, g in (("inc", g_inc), ("reb", g_reb)):
+        res = eng.search(measure.params, jnp.asarray(g.base),
+                         jnp.asarray(g.neighbors), q,
+                         jnp.full((64,), g.entry, jnp.int32))
+        recalls[name] = float(recall(res.ids, true_ids))
+    assert recalls["inc"] >= recalls["reb"] - 0.01, recalls
+
+
+def test_insert_neighbors_stay_valid(system):
+    g = build_l2_graph(system["base"][:300], m=8, k_construction=24)
+    rng = np.random.default_rng(7)
+    new = rng.normal(size=(40, system["dim"])).astype(np.float32) * 0.5
+    g2 = insert_rows(g, new)
+    assert g2.n == 340
+    nbrs = g2.neighbors
+    assert nbrs.shape[0] == 340 and nbrs.max() < 340
+    # new nodes are reachable: somebody points at them
+    assert np.isin(np.arange(300, 340), nbrs).any()
+    # no self-loops anywhere
+    rows = np.arange(340)[:, None]
+    assert not (nbrs == rows).any()
+
+
+def test_delete_reassigns_dead_entry(system):
+    g = build_l2_graph(system["base"][:200], m=8, k_construction=24)
+    g2 = delete_rows(g, [g.entry])
+    assert g2.entry != g.entry and not g2.tombstones[g2.entry]
+    with pytest.raises(ValueError):
+        delete_rows(g2, np.arange(200))    # cannot delete every row
+
+
+def test_compact_remaps_and_drops_tombstones(system):
+    base = system["base"][:250]
+    g = build_l2_graph(base, m=8, k_construction=24)
+    dead = np.asarray([3, 17, 101, 249])
+    g2 = compact(delete_rows(g, dead))
+    assert g2.n == 246 and g2.tombstones is None
+    # survivors keep their vectors, in order
+    keep = np.setdiff1d(np.arange(250), dead)
+    np.testing.assert_array_equal(g2.base, base[keep])
+    assert g2.neighbors.max() < 246
+    # no survivor's neighbor list references a dropped row's old id: remap
+    # happened (valid ids point at the same VECTOR as before)
+    old_of = keep
+    for i in [0, 100, 245]:
+        for j in g2.neighbors[i]:
+            if j >= 0:
+                np.testing.assert_array_equal(g2.base[j], base[old_of[j]])
+
+
+def test_mutation_journal_round_trip(tmp_path):
+    j = MutationJournal(n_base=500)
+    j.record("insert", n=100)
+    j.record("delete", ids=[1, 2, 3])
+    save_journal(str(tmp_path / "idx"), j)
+    j2 = load_journal(str(tmp_path / "idx"))
+    assert j2.n_base == 500 and j2.n_inserted == 100 and j2.n_deleted == 3
+    assert j2.ops == j.ops
+    assert load_journal(str(tmp_path / "nope")) is None
+
+
+def test_delete_compact_io_v3_round_trip(system, tmp_path):
+    """delete → save (tombstones persisted) → load → compact → save → load:
+    every leg round-trips through the v3 on-disk layout."""
+    base = system["base"][:300]
+    g = delete_rows(build_l2_graph(base, m=8, k_construction=24),
+                    [5, 50, 150])
+    save_index(str(tmp_path / "a"), g, page_rows=64)
+    g2 = load_index(str(tmp_path / "a"))
+    np.testing.assert_array_equal(g2.tombstones, g.tombstones)
+    assert g2.n_alive == 297
+    # paged load honors the persisted tombstones too
+    st = load_corpus_store(str(tmp_path / "a"),
+                           residency=ResidencyPolicy("paged"))
+    assert st.tombstones is not None
+    gc = compact(g2)
+    save_index(str(tmp_path / "b"), gc, page_rows=64)
+    g3 = load_index(str(tmp_path / "b"))
+    assert g3.n == 297 and g3.tombstones is None
+    np.testing.assert_array_equal(g3.base, gc.base)
+    np.testing.assert_array_equal(g3.neighbors, gc.neighbors)
+
+
+# ---------------------------------------------------------------------------
+# index-version epochs in the continuous runtime
+# ---------------------------------------------------------------------------
+
+def test_install_index_epochs(system):
+    """In-flight lanes finish on the epoch they were admitted under; the
+    staged index swaps once they drain; later admissions search the new
+    epoch (and can return the inserted rows)."""
+    s = system
+    measure = _measure("mlp", s["dim"])
+    cfg = SearchConfig(k=5, ef=24, mode="guitar", budget=6, alpha=1.1)
+    eng = build_engine(measure, cfg,
+                       EngineOptions(rank_impl="ref", measure_impl="vmap"))
+    g = s["graph"]
+    rt = ContinuousRuntime(eng, measure.params, s["base"], g.neighbors,
+                           n_lanes=2, query_dim=s["dim"], entry=g.entry,
+                           steps_per_tick=1)
+    rt.submit(s["queries"][0], rid=0)
+    rt.step_once()                       # rid 0 admitted under epoch 0
+    assert rt.in_flight == 1
+
+    rng = np.random.default_rng(9)
+    new = rng.normal(size=(30, s["dim"])).astype(np.float32) * 0.5
+    g2 = insert_rows(g, new)
+    staged = rt.install_index(np.asarray(g2.base), g2.neighbors, g2.entry)
+    assert staged == 1 and rt.epoch == 0
+    rt.submit(s["queries"][1], rid=1)    # queued; holds for the swap
+    comps = []
+    for _ in range(600):
+        comps += rt.step_once()
+        if len(comps) == 2:
+            break
+    by = {c.rid: c for c in comps}
+    assert by[0].epoch == 0 and by[1].epoch == 1
+    assert rt.epoch == 1 and rt.store.n == g2.n
+    # the post-swap result is exactly the one-shot search on the new index
+    ref = eng.search(measure.params, jnp.asarray(g2.base),
+                     jnp.asarray(g2.neighbors),
+                     jnp.asarray(s["queries"][1:2]),
+                     jnp.full((1,), g2.entry, jnp.int32))
+    np.testing.assert_array_equal(by[1].ids, np.asarray(ref.ids)[0])
+    np.testing.assert_array_equal(by[1].scores, np.asarray(ref.scores)[0])

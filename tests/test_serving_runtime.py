@@ -252,6 +252,70 @@ def test_deadline_drops_stale_requests(system):
     assert summ["n_timed_out"] == 1 and summ["n_completed"] == 1
 
 
+def test_sharded_deadline_partial_harvest(system):
+    """Deadline expiry with only SOME shards harvested: per-shard queues
+    drain at different rates (per-shard n_iters differ), so one shard can
+    complete a request while another drops it at admit time. The merged
+    completion must be dropped consistently — a top-k missing a whole
+    partition is not a valid answer — and the merged metrics must agree
+    (one timed-out, one completed)."""
+    s = system
+    eng, m = s["engine"], s["measure"]
+    queries = s["queries"]
+    Q = queries.shape[0]
+    idx = build_sharded_index(s["base"], n_shards=2, m=8, k_construction=24)
+    # pick a blocker whose per-shard iteration counts differ the most —
+    # that spread is the window where shard queues disagree
+    per_ni = []
+    for sh in range(2):
+        r = eng.search(m.params, jnp.asarray(idx.base[sh]),
+                       jnp.asarray(idx.neighbors[sh]), jnp.asarray(queries),
+                       jnp.full((Q,), int(idx.entries[sh]), jnp.int32))
+        per_ni.append(np.asarray(r.n_iters))
+    spread = np.abs(per_ni[0] - per_ni[1])
+    blocker = int(np.argmax(spread))
+    # the victim runs under budget_iters=1 (one tick once admitted), so a
+    # blocker spread of >= 2 ticks is the window where the fast shard
+    # admits+completes the victim while the slow shard still blocks it
+    assert spread[blocker] >= 2, "fixture queries never diverge across shards"
+    victim = (blocker + 1) % Q
+
+    clock = {"t": 0.0}
+    rt = ShardedContinuousRuntime(eng, m.params, idx, n_lanes=1,
+                                  query_dim=16, steps_per_tick=1,
+                                  now_fn=lambda: clock["t"])
+    rt.submit(queries[blocker], rid=0, deadline=100.0, t_arrive=0.0)
+    rt.submit(queries[victim], rid=1, deadline=1.0, t_arrive=0.0,
+              budget_iters=1)
+    # phase 1 (clock < deadline): step until the faster shard has fully
+    # harvested rid 1 while the slower shard is STILL running the blocker
+    partial_seen = False
+    comps = []
+    for _ in range(600):
+        comps += rt.step_once()
+        parts = rt._partial.get(1)
+        blocked = [sub._lane_req[0] is not None
+                   and sub._lane_req[0].rid == 0 for sub in rt.runtimes]
+        if parts is not None and any(p is not None for p in parts) \
+                and any(blocked):
+            partial_seen = True
+            break
+    assert partial_seen, "faster shard never got ahead of the slower one"
+    # phase 2: the clock jumps past rid 1's deadline before the slow
+    # shard's lane frees — that shard drops rid 1 at admit
+    clock["t"] = 5.0
+    for _ in range(600):
+        comps += rt.step_once()
+        if len(comps) == 2:
+            break
+    by = {c.rid: c for c in comps}
+    assert not by[0].record.timed_out and (by[0].ids >= 0).any()
+    assert by[1].record.timed_out
+    assert (by[1].ids == -1).all() and (by[1].scores == -np.inf).all()
+    summ = rt.metrics.summary()
+    assert summ["n_timed_out"] == 1 and summ["n_completed"] == 1
+
+
 def test_poisson_arrivals_rate():
     arr = poisson_arrivals(4000, qps=100.0, seed=0)
     assert arr.shape == (4000,) and (np.diff(arr) > 0).all()
