@@ -1,0 +1,300 @@
+"""Chaos benchmark: serving availability and correctness under injected
+faults (DESIGN.md §12).
+
+Three deterministic fault stories, each driven by a seeded ``FaultPlan``
+(same schedule, same workload, same outcome — every run, every machine):
+
+1. **Shard outage** — a sharded continuous runtime takes a paced request
+   wave while one shard's ticks crash until its circuit breaker opens,
+   cools down, and the shard re-admits via a half-open probe. Gates:
+   availability (ok + flagged-partial) >= 0.95, every unflagged ("ok")
+   completion BIT-IDENTICAL to the fault-free reference run, every rid
+   resolved exactly once, and the breaker both opened and recovered.
+2. **Pager degradation** — paged residency under transient page-I/O error
+   bursts (absorbed by bounded retries) and under a persistent outage
+   (degrades to the whole-payload fallback). Gate: both ladders return
+   results bit-identical to the whole-resident store.
+3. **Mutation kill** — a mid-mutation process death injected at the
+   post-journal commit point; recovery must replay the journaled tail to
+   the bit-exact uninterrupted index. Gate: exact base/neighbors/entry
+   equality.
+
+Rows follow the standard ``name,us_per_call,derived`` format; gate rows
+carry the availability / wrong-result counters CI asserts on.
+
+    PYTHONPATH=src python -m benchmarks.chaos            # quick
+    PYTHONPATH=src python -m benchmarks.chaos --smoke --gate   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from collections import Counter
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import (EngineOptions, SearchConfig, build_engine,
+                        mlp_measure)
+from repro.core.corpus import ResidencyPolicy, make_corpus_store
+from repro.core.sharded import build_sharded_index
+from repro.graph import DurableIndex, build_l2_graph
+from repro.serving import (Completion, FaultEvent, FaultPlan, InjectedKill,
+                           ShardedContinuousRuntime)
+
+AVAILABILITY_GATE = 0.95
+
+
+def build_setup(n_items: int, dim: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(n_items, dim)).astype(np.float32)
+    measure = mlp_measure(jax.random.PRNGKey(seed), dim, dim, hidden=(32,))
+    cfg = SearchConfig(k=10, ef=32, mode="guitar", budget=8, alpha=1.05)
+    engine = build_engine(measure, cfg,
+                          EngineOptions(rank_impl="ref", measure_impl="vmap"))
+    index = build_sharded_index(base, n_shards=2, m=8, k_construction=24)
+    return base, measure, engine, index
+
+
+def wave_drive(rt: ShardedContinuousRuntime, queries: np.ndarray,
+               per_round: int = 2) -> Dict[int, Completion]:
+    """Paced open-loop driver: ``per_round`` submissions per scheduler
+    round. (An all-upfront backlog would sit entirely in the victim
+    shard's queue when its breaker opens — the whole stream degrades and
+    the run shows nothing about recovery. Pacing bounds the blast radius
+    to what was actually in flight, which is the regime the availability
+    gate is about.)"""
+    i, out = 0, {}
+    while i < len(queries) or rt.in_flight or rt.queued or rt._partial \
+            or any(r.completions for r in rt.runtimes):
+        for _ in range(per_round):
+            if i < len(queries):
+                rt.submit(queries[i], rid=i)
+                i += 1
+        for c in rt.step_once():
+            out[c.rid] = c
+    return out
+
+
+# ---------------------------------------------------------------------------
+# scenario 1: shard outage under a paced wave
+# ---------------------------------------------------------------------------
+
+def scenario_shard_outage(engine, measure, index, queries,
+                          lanes: int) -> tuple:
+    def make(plan):
+        return ShardedContinuousRuntime(
+            engine, measure.params, index, n_lanes=lanes,
+            query_dim=queries.shape[1], steps_per_tick=2, k_failures=3,
+            cooldown_rounds=4, fault_plan=plan)
+
+    ref = wave_drive(make(None), queries)          # fault-free twin
+    plan = FaultPlan([FaultEvent("shard_crash", site="shard:1/tick",
+                                 start=4, count=5)], seed=0)
+    rt = make(plan)
+    t0 = time.perf_counter()
+    got = wave_drive(rt, queries)
+    wall = time.perf_counter() - t0
+
+    statuses = Counter(c.status for c in got.values())
+    wrong_unflagged = 0
+    for rid, c in got.items():
+        if c.status == "ok" and not (
+                np.array_equal(c.ids, ref[rid].ids)
+                and np.array_equal(c.scores, ref[rid].scores)):
+            wrong_unflagged += 1
+    availability = (statuses["ok"] + statuses["partial"]) / len(queries)
+
+    failures = []
+    if sorted(got) != list(range(len(queries))):
+        failures.append(f"chaos: {len(queries) - len(got)} rid(s) never "
+                        f"resolved")
+    if availability < AVAILABILITY_GATE:
+        failures.append(f"chaos availability {availability:.3f} < "
+                        f"{AVAILABILITY_GATE} with one shard down")
+    if wrong_unflagged:
+        failures.append(f"chaos: {wrong_unflagged} unflagged completion(s) "
+                        f"differ from the fault-free run")
+    if rt.health.n_opened < 1:
+        failures.append("chaos: breaker never opened under the crash plan")
+    if rt.health.states() != ["healthy"] * index.n_shards:
+        failures.append(f"chaos: shards did not recover "
+                        f"({rt.health.states()})")
+
+    rows = [csv_row(
+        f"chaos_shard_outage_q{len(queries)}_l{lanes}",
+        1e6 * wall / len(queries),
+        f"ok={statuses['ok']};partial={statuses['partial']}"
+        f";failed={statuses['failed']}"
+        f";breaker_opens={rt.health.n_opened}"
+        f";end_states={'|'.join(rt.health.states())}"),
+        csv_row(
+        "gate/chaos_availability", 0.0,
+        f"availability={availability:.3f}"
+        f";wrong_unflagged={wrong_unflagged}"
+        f";gate_availability_ge_{AVAILABILITY_GATE}="
+        f"{availability >= AVAILABILITY_GATE}"
+        f";gate_zero_wrong={wrong_unflagged == 0}")]
+    return rows, failures
+
+
+# ---------------------------------------------------------------------------
+# scenario 2: pager retry / whole-fallback parity
+# ---------------------------------------------------------------------------
+
+def scenario_pager(base: np.ndarray) -> tuple:
+    whole = make_corpus_store(base, "float32")
+    ids = np.arange(0, base.shape[0], 3)
+    want = np.asarray(whole.take(ids))
+
+    def paged():
+        return make_corpus_store(
+            base, "float32",
+            residency=ResidencyPolicy("paged", page_rows=256,
+                                      cache_bytes=1 << 22,
+                                      retry_backoff_s=0.0))
+
+    failures, rows = [], []
+    # transient burst: bounded retries absorb it, no degradation
+    s1 = paged()
+    s1.set_read_hook(FaultPlan([FaultEvent("page_io_error", site="pager",
+                                           start=1, count=2)]).pager_hook())
+    t0 = time.perf_counter()
+    got1 = np.asarray(s1.take(ids))
+    w1 = time.perf_counter() - t0
+    st1 = s1.stats_snapshot()
+    if not np.array_equal(got1, want):
+        failures.append("chaos pager: retried gather differs from whole")
+    if st1.fallback or st1.retries < 2:
+        failures.append(f"chaos pager: expected retry absorption, got "
+                        f"fallback={st1.fallback!r} retries={st1.retries}")
+    # persistent outage: degrade to the whole-payload fallback
+    s2 = paged()
+    s2.set_read_hook(FaultPlan([FaultEvent("page_io_error", site="pager",
+                                           count=10 ** 6)]).pager_hook())
+    t0 = time.perf_counter()
+    got2 = np.asarray(s2.take(ids))
+    w2 = time.perf_counter() - t0
+    st2 = s2.stats_snapshot()
+    if not np.array_equal(got2, want):
+        failures.append("chaos pager: whole-fallback gather differs")
+    if st2.fallback != "whole":
+        failures.append(f"chaos pager: expected whole fallback, got "
+                        f"{st2.fallback!r}")
+    rows.append(csv_row(
+        "chaos_pager_transient_retry", 1e6 * w1,
+        f"retries={st1.retries};io_errors={st1.io_errors}"
+        f";mode={st1.fallback or 'paged'}"
+        f";bit_identical={np.array_equal(got1, want)}"))
+    rows.append(csv_row(
+        "chaos_pager_whole_fallback", 1e6 * w2,
+        f"io_errors={st2.io_errors};mode={st2.fallback or 'paged'}"
+        f";bit_identical={np.array_equal(got2, want)}"))
+    return rows, failures
+
+
+# ---------------------------------------------------------------------------
+# scenario 3: mid-mutation kill -> bit-exact recovery
+# ---------------------------------------------------------------------------
+
+def scenario_mutation_kill(tmp_root: str, dim: int = 8) -> tuple:
+    rng = np.random.default_rng(5)
+    base = rng.normal(size=(120, dim)).astype(np.float32)
+    new_rows = rng.normal(size=(6, dim)).astype(np.float32)
+    graph = build_l2_graph(base, m=4, k_construction=12)
+
+    import os
+    ref_dir = os.path.join(tmp_root, "chaos_ref")
+    vic_dir = os.path.join(tmp_root, "chaos_victim")
+    ref = DurableIndex.create(ref_dir, graph)
+    ref.insert(new_rows, k_candidates=16)
+    ref.delete([3, 17, 121])
+    ref.compact()
+
+    plan = FaultPlan([FaultEvent("kill", site="mutate/post-journal",
+                                 start=1)])
+    vic = DurableIndex.create(vic_dir, graph, kill_hook=plan.kill_hook())
+    t0 = time.perf_counter()
+    vic.insert(new_rows, k_candidates=16)
+    killed = False
+    try:
+        vic.delete([3, 17, 121])      # dies right after the commit point
+    except InjectedKill:
+        killed = True
+    rec = DurableIndex.open(vic_dir)  # replays the journaled delete
+    rec.compact()
+    wall = time.perf_counter() - t0
+
+    exact = (np.array_equal(np.asarray(rec.index.base),
+                            np.asarray(ref.index.base))
+             and np.array_equal(np.asarray(rec.index.neighbors),
+                                np.asarray(ref.index.neighbors))
+             and int(rec.index.entry) == int(ref.index.entry))
+    failures = []
+    if not killed:
+        failures.append("chaos recovery: kill was never injected")
+    if not exact:
+        failures.append("chaos recovery: recovered index differs from the "
+                        "uninterrupted twin")
+    rows = [csv_row(
+        "chaos_mutation_kill_recovery", 1e6 * wall,
+        f"killed_at=post-journal;ops_replayed="
+        f"{len(rec.journal.ops)};bit_exact={exact}")]
+    return rows, failures
+
+
+def _run_impl(quick: bool, n_items: int = 4000, dim: int = 16,
+              n_requests: int = 96, lanes: int = 8) -> tuple:
+    if quick:
+        n_items, n_requests, lanes = 1500, 48, 4
+    base, measure, engine, index = build_setup(n_items, dim)
+    rng = np.random.default_rng(2)
+    queries = rng.normal(size=(n_requests, dim)).astype(np.float32)
+
+    rows, failures = scenario_shard_outage(engine, measure, index, queries,
+                                           lanes)
+    r2, f2 = scenario_pager(base)
+    rows += r2
+    failures += f2
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        r3, f3 = scenario_mutation_kill(tmp)
+    rows += r3
+    failures += f3
+    return rows, failures
+
+
+def run(quick: bool = True) -> List[str]:
+    """Row-generator entry point (benchmarks/run.py contract)."""
+    rows, failures = _run_impl(quick)
+    if failures:
+        raise RuntimeError("chaos gates failed: " + ", ".join(failures))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing (reduced corpus / request count)")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit non-zero if any chaos gate fails")
+    ap.add_argument("--n-items", type=int, default=4000)
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--lanes", type=int, default=8)
+    args = ap.parse_args()
+    rows, failures = _run_impl(args.smoke, n_items=args.n_items,
+                               n_requests=args.requests, lanes=args.lanes)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row, flush=True)
+    if failures:
+        msg = "chaos gates failed: " + ", ".join(failures)
+        if args.gate:
+            raise SystemExit(msg)
+        print(msg, flush=True)
+
+
+if __name__ == "__main__":
+    main()

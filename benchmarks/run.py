@@ -139,7 +139,7 @@ def main() -> None:
                     help="skip writing BENCH_<suite>.json files")
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,table2,fig6,fig7,roofline,"
-                         "kernels,graphbuild,serving,residency")
+                         "kernels,graphbuild,serving,residency,chaos")
     ap.add_argument("--compare", default=None, metavar="OLD.json",
                     help="regression-diff mode: after the run, diff each "
                          "suite's rows against this prior BENCH json "
@@ -156,9 +156,10 @@ def main() -> None:
             only = {old_payload["suite"]}
     run_stamp = time.time()
 
-    from benchmarks import (fig4_recall_qps, fig5_alpha, fig6_projection,
-                            fig7_begin, graph_build, kernels_micro, residency,
-                            roofline, serving_load, table2_breakdown)
+    from benchmarks import (chaos, fig4_recall_qps, fig5_alpha,
+                            fig6_projection, fig7_begin, graph_build,
+                            kernels_micro, residency, roofline, serving_load,
+                            table2_breakdown)
 
     jobs = [
         ("fig4", lambda: fig4_recall_qps.run(
@@ -176,6 +177,7 @@ def main() -> None:
         ("graphbuild", lambda: graph_build.run(quick=quick)),
         ("serving", lambda: serving_load.run(quick=quick)),
         ("residency", lambda: residency.run(quick=quick)),
+        ("chaos", lambda: chaos.run(quick=quick)),
         ("roofline", lambda: roofline.run(mesh="single") + roofline.run(mesh="multi")),
     ]
     print("name,us_per_call,derived")

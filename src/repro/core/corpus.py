@@ -50,7 +50,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Optional, Tuple, Union
+import time
+from typing import Callable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -73,10 +74,22 @@ class ResidencyPolicy:
     page_rows:   rows per page (paged only) — io v3 writes page-aligned
                  files so a page slice never straddles a read
     cache_bytes: LRU byte budget for resident page copies (paged only)
+
+    Failure policy (paged only — DESIGN.md §12): a physical page read that
+    raises ``OSError`` is retried up to ``max_retries`` times with
+    exponential backoff (``retry_backoff_s * 2**attempt``); if every retry
+    fails the pager *degrades* — it reads the whole payload once and serves
+    all further gathers from memory (``stats.fallback == 'whole'``), unless
+    that would exceed ``fallback_bytes`` (None = always allowed), in which
+    case ``CorpusUnavailableError`` surfaces and the shard above this store
+    is the fault domain that fails.
     """
     kind: str = "whole"
     page_rows: int = 4096
     cache_bytes: int = 64 << 20
+    max_retries: int = 3
+    retry_backoff_s: float = 0.001
+    fallback_bytes: Optional[int] = None
 
     def __post_init__(self):
         if self.kind not in RESIDENCY_KINDS:
@@ -84,6 +97,9 @@ class ResidencyPolicy:
                              f"{RESIDENCY_KINDS}, got {self.kind!r}")
         if self.kind == "paged" and self.page_rows < 1:
             raise ValueError(f"page_rows must be >= 1, got {self.page_rows}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, "
+                             f"got {self.max_retries}")
 
 
 WHOLE = ResidencyPolicy()
@@ -241,14 +257,24 @@ jax.tree_util.register_pytree_node(CorpusStore, _store_flatten,
 # paged residency
 # ---------------------------------------------------------------------------
 
+class CorpusUnavailableError(RuntimeError):
+    """The pager exhausted its retry budget AND could not degrade to whole
+    residency — the corpus behind this store is effectively offline. The
+    sharded runtime treats this as a shard failure (breaker strike)."""
+
+
 @dataclasses.dataclass
 class PageCacheStats:
-    """Host-side pager accounting (benchmarks/residency.py reports these)."""
+    """Host-side pager accounting (benchmarks/residency.py reports these;
+    the serving health line reports the failure counters)."""
     hits: int = 0
     faults: int = 0
     evictions: int = 0
     resident_bytes: int = 0
     peak_resident_bytes: int = 0
+    retries: int = 0         # physical reads re-attempted after OSError
+    io_errors: int = 0       # OSErrors observed (pre-retry, pre-fallback)
+    fallback: str = ""       # "" = paged; "whole" = degraded to resident
 
     @property
     def hit_rate(self) -> float:
@@ -279,11 +305,67 @@ class _PageCache:
         self._pages: "collections.OrderedDict[int, tuple]" = \
             collections.OrderedDict()
         self.stats = PageCacheStats()
+        # fault-injection surface: called as read_hook(pid, attempt) before
+        # every physical read (pid == -1 for the whole-payload fallback read);
+        # an OSError it raises is indistinguishable from a real I/O failure
+        self.read_hook: Optional[Callable[[int, int], None]] = None
+        self._whole: Optional[np.ndarray] = None
+        self._whole_scales: Optional[np.ndarray] = None
+
+    def _read_block(self, lo: int, hi: int, pid: int) -> tuple:
+        """One physical read with bounded exponential-backoff retries —
+        the first rung of the degradation ladder (DESIGN.md §12)."""
+        last: Optional[OSError] = None
+        for attempt in range(self.policy.max_retries + 1):
+            if attempt:
+                self.stats.retries += 1
+                if self.policy.retry_backoff_s > 0:
+                    time.sleep(self.policy.retry_backoff_s
+                               * (1 << (attempt - 1)))
+            try:
+                if self.read_hook is not None:
+                    self.read_hook(pid, attempt)
+                payload = np.array(self.data[lo:hi])    # copy off the mmap
+                scales = None if self.scales is None \
+                    else np.array(self.scales[lo:hi])
+                return payload, scales
+            except OSError as err:
+                self.stats.io_errors += 1
+                last = err
+        raise last
+
+    def _fallback_whole(self, cause: OSError) -> None:
+        """Retry budget exhausted on a page: degrade paged → whole (one bulk
+        read, then every gather is memory-resident) or, if the payload
+        exceeds ``fallback_bytes``, give up with CorpusUnavailableError."""
+        nbytes = self.data.size * self.data.dtype.itemsize
+        if self.scales is not None:
+            nbytes += self.scales.size * self.scales.dtype.itemsize
+        limit = self.policy.fallback_bytes
+        if limit is not None and nbytes > limit:
+            raise CorpusUnavailableError(
+                f"page read failed after {self.policy.max_retries} retries "
+                f"and the whole payload ({nbytes}B) exceeds "
+                f"fallback_bytes={limit}") from cause
+        try:
+            self._whole, self._whole_scales = self._read_block(0, self.n, -1)
+        except OSError as err:
+            raise CorpusUnavailableError(
+                f"page read failed after {self.policy.max_retries} retries "
+                f"and the whole-payload fallback read failed too") from err
+        self.stats.fallback = "whole"
+        self._pages.clear()                 # page copies are redundant now
+        self.stats.resident_bytes = nbytes
+        self.stats.peak_resident_bytes = max(self.stats.peak_resident_bytes,
+                                             nbytes)
 
     def _fault(self, pid: int) -> None:
         s, e = pid * self.page_rows, min((pid + 1) * self.page_rows, self.n)
-        payload = np.array(self.data[s:e])          # copy out of the mmap
-        scales = None if self.scales is None else np.array(self.scales[s:e])
+        try:
+            payload, scales = self._read_block(s, e, pid)
+        except OSError as err:
+            self._fallback_whole(err)
+            return
         nbytes = payload.nbytes + (0 if scales is None else scales.nbytes)
         self._pages[pid] = (payload, scales, nbytes)
         self.stats.faults += 1
@@ -315,15 +397,25 @@ class _PageCache:
         ids clamp (the whole store's ``mode="clip"`` contract)."""
         shape = ids.shape
         flat = np.clip(np.asarray(ids, np.int64).reshape(-1), 0, self.n - 1)
-        pids = flat // self.page_rows
-        need = np.unique(pids)
-        for pid in need:
-            pid = int(pid)
-            if pid in self._pages:
-                self._pages.move_to_end(pid)
-                self.stats.hits += 1
-            else:
-                self._fault(pid)
+        if self._whole is None:
+            pids = flat // self.page_rows
+            need = np.unique(pids)
+            for pid in need:
+                pid = int(pid)
+                if self._whole is not None:
+                    break                   # degraded mid-loop; serve below
+                if pid in self._pages:
+                    self._pages.move_to_end(pid)
+                    self.stats.hits += 1
+                else:
+                    self._fault(pid)
+        if self._whole is not None:
+            # degraded to whole residency: pure in-memory gather, same
+            # dequant pipeline, so results stay bit-identical
+            srows = None if self._whole_scales is None \
+                else self._whole_scales[flat]
+            return self._dequant(self._whole[flat],
+                                 srows).reshape(shape + (self.dim,))
         self._evict_cold(pinned=set(int(p) for p in need))
         out = np.empty((flat.size, self.dim), np.float32)
         for pid in need:
@@ -381,6 +473,12 @@ class PagedCorpusStore:
 
     def stats_snapshot(self) -> PageCacheStats:
         return dataclasses.replace(self.cache.stats)
+
+    def set_read_hook(self,
+                      hook: Optional[Callable[[int, int], None]]) -> None:
+        """Install a fault-injection read hook (see ``_PageCache.read_hook``;
+        typically ``FaultPlan.pager_hook()``). None uninstalls."""
+        self.cache.read_hook = hook
 
     def take(self, ids: jax.Array, in_bounds: bool = False) -> jax.Array:
         """Page-fault-aware gather: same (..., D) float32 rows as the

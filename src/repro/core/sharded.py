@@ -92,6 +92,15 @@ def merge_topk(all_ids: jax.Array, all_scores: jax.Array, k: int
     return jnp.where(jnp.isfinite(v), ids, -1), v
 
 
+def empty_topk(k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """The canonical no-result top-k (ids -1, scores -inf): what
+    ``merge_topk`` reports when every candidate in the window is invalid,
+    and what timed-out / shed / all-shards-failed completions carry
+    (DESIGN.md §12). One definition so the contracts can't drift."""
+    return (np.full((k,), -1, np.int32),
+            np.full((k,), -np.inf, np.float32))
+
+
 def make_sharded_search(score_fn, mesh: Mesh, cfg: SearchConfig,
                         options: EngineOptions = EngineOptions(),
                         meta=None):

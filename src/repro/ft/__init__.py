@@ -1,5 +1,5 @@
 from repro.ft.checkpoint import (  # noqa: F401
     latest_step, restore_checkpoint, save_checkpoint,
 )
-from repro.ft.straggler import StragglerMonitor  # noqa: F401
+from repro.ft.straggler import CircuitBreaker, StragglerMonitor  # noqa: F401
 from repro.ft.elastic import remesh_plan  # noqa: F401

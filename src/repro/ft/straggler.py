@@ -70,3 +70,58 @@ class StragglerMonitor:
 
     def healthy_hosts(self) -> List[int]:
         return [h for h in range(self.n_hosts) if h not in self.flagged]
+
+
+class CircuitBreaker:
+    """Classic three-state breaker guarding one fault domain (a shard, a
+    host, a downstream store).
+
+    CLOSED — normal operation; ``k_failures`` *consecutive* failures trip
+    it OPEN. OPEN — the domain is not used at all for ``cooldown`` calls
+    to ``tick()`` (one per serving round), then transitions to HALF_OPEN.
+    HALF_OPEN — the domain takes probe traffic: one real success closes
+    the breaker, any failure re-opens it immediately (no K-strike grace).
+    """
+
+    CLOSED = "closed"
+    OPEN = "open"
+    HALF_OPEN = "half-open"
+
+    def __init__(self, k_failures: int = 3, cooldown: int = 8):
+        if k_failures < 1 or cooldown < 1:
+            raise ValueError("k_failures and cooldown must be >= 1")
+        self.k_failures = k_failures
+        self.cooldown = cooldown
+        self.state = self.CLOSED
+        self.failures = 0          # consecutive failures while CLOSED
+        self.n_opened = 0          # lifetime count of CLOSED/HALF_OPEN -> OPEN
+        self._cooldown_left = 0
+
+    def record_failure(self) -> bool:
+        """Returns True iff this failure tripped the breaker OPEN."""
+        self.failures += 1
+        if self.state == self.OPEN:
+            return False
+        if self.state == self.HALF_OPEN or self.failures >= self.k_failures:
+            self.state = self.OPEN
+            self._cooldown_left = self.cooldown
+            self.n_opened += 1
+            return True
+        return False
+
+    def record_success(self) -> None:
+        self.failures = 0
+        if self.state == self.HALF_OPEN:
+            self.state = self.CLOSED
+
+    def tick(self) -> None:
+        """Advance one serving round; OPEN breakers count down to HALF_OPEN."""
+        if self.state == self.OPEN:
+            self._cooldown_left -= 1
+            if self._cooldown_left <= 0:
+                self.state = self.HALF_OPEN
+
+    @property
+    def serving(self) -> bool:
+        """Whether the guarded domain should receive work this round."""
+        return self.state != self.OPEN

@@ -6,7 +6,7 @@ from repro.graph.io import (  # noqa: F401
     load_corpus_store, load_index, load_index_meta, save_index,
 )
 from repro.graph.mutate import (  # noqa: F401
-    MutationJournal, compact, delete_rows, insert_rows, load_journal,
-    save_journal,
+    DurableIndex, MutationJournal, append_journal, apply_op, compact,
+    delete_rows, insert_rows, load_journal, recover_index, save_journal,
 )
 from repro.graph.prune import occlusion_prune_nodes  # noqa: F401

@@ -33,9 +33,10 @@ memory instead of disk).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
-from typing import Optional, Tuple, Union
+from typing import Callable, Optional, Tuple, Union
 
 import numpy as np
 
@@ -60,6 +61,31 @@ _PAYLOAD_KEYS = {
 
 def _payload_file(key: str) -> str:
     return f"{key}.npy"
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync the directory entry so renames inside it are durable (no-op on
+    platforms whose directories refuse O_RDONLY fsync)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+    except OSError:  # pragma: no cover - platform-dependent
+        pass
+
+
+def _atomic_write(path: str, write_fn: Callable) -> None:
+    """write-tmp → flush → fsync → rename (the ft/checkpoint.py discipline):
+    a crash mid-write never leaves a torn file at ``path`` — the previous
+    content survives until the atomic rename."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def _encode_base(base: np.ndarray, corpus_dtype: str) -> dict:
@@ -144,14 +170,21 @@ def save_index(path: str, index, corpus_dtype: str = "float32",
     else:
         raise TypeError(f"cannot serialize {type(index).__name__}")
 
-    np.savez_compressed(os.path.join(path, _ARRAYS), **arrays)
+    # Atomic, ordered save (DESIGN.md §12): every file lands via
+    # write-tmp → fsync → rename, and meta.json goes LAST — it is the
+    # commit point. A crash anywhere in between leaves the previous index
+    # version fully readable (recover_index replays the journal on top).
+    _atomic_write(os.path.join(path, _ARRAYS),
+                  lambda f: np.savez_compressed(f, **arrays))
     for key, arr in payload.items():
-        np.save(os.path.join(path, _payload_file(key)), arr)
+        _atomic_write(os.path.join(path, _payload_file(key)),
+                      lambda f, a=arr: np.save(f, a))
     meta = {"format_version": FORMAT_VERSION, "kind": kind,
             "corpus_dtype": corpus_dtype, **meta, **(extra_meta or {})}
     meta_path = os.path.join(path, _META)
-    with open(meta_path, "w") as f:
-        json.dump(meta, f, indent=2, sort_keys=True)
+    blob = json.dumps(meta, indent=2, sort_keys=True).encode()
+    _atomic_write(meta_path, lambda f: f.write(blob))
+    _fsync_dir(path)
     return meta_path
 
 
@@ -252,8 +285,10 @@ def load_corpus_store(path: str,
     if residency is not None and residency.kind == "paged":
         if residency.page_rows == ResidencyPolicy().page_rows \
                 and "page_rows" in meta:
-            residency = ResidencyPolicy("paged", int(meta["page_rows"]),
-                                        residency.cache_bytes)
+            # keep the caller's retry/fallback policy, only pin page_rows
+            # to the layout the file was written under
+            residency = dataclasses.replace(residency,
+                                            page_rows=int(meta["page_rows"]))
         payload = _load_payload(path, meta, mmap=True)
         keys = _PAYLOAD_KEYS[corpus_dtype]
         data = payload[keys[0]]

@@ -22,17 +22,32 @@ that takes traffic while the catalog churns. This module mutates a
   drop, survivors repack to the row prefix), tombstones clear.
 
 Every mutation appends to a ``MutationJournal`` — an append-only op log
-(JSON) that rides next to the index files, so a mutated index
+(JSON Lines) that rides next to the index files, so a mutated index
 round-trips: ``save_index`` persists the tombstone bitmap, the journal
 records provenance (what was inserted/deleted/compacted and when, in
 op order), and ``load_journal`` restores it.
+
+**Crash safety (DESIGN.md §12).** The journal is the write-ahead log of
+the index lineage: ops carry their full payload (insert rows included),
+``append_journal`` fsyncs each op line — the commit point of a mutation —
+and ``save_index`` is atomic with ``meta.json`` as ITS commit point,
+carrying ``journal_applied`` (how many journal ops the saved arrays
+already absorb). ``recover_index`` loads the last durable index and
+replays the journaled tail through ``apply_op``; every primitive is
+deterministic, so recovery reproduces the uninterrupted index *exactly*
+(pinned by tests). A torn tail (kill mid-append) truncates to the last
+valid record with a RuntimeWarning instead of poisoning the lineage.
+``DurableIndex`` packages the whole discipline — and exposes the
+``kill_hook`` stages the fault harness (serving/faults.py) uses to die at
+every interesting point.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
-from typing import List, Optional, Sequence
+import warnings
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -64,28 +79,88 @@ class MutationJournal:
 
 
 def save_journal(path: str, journal: MutationJournal) -> str:
-    """Write the journal as ``journal.json`` inside an index directory
-    (atomically — temp + replace, same discipline as the tuning cache)."""
+    """Write the whole journal as ``journal.json`` inside an index
+    directory: JSON Lines — a ``{"n_base": N}`` header line, then one op
+    per line — written atomically (temp + fsync + replace) so a crash
+    mid-rewrite never tears an existing journal. Incremental commits go
+    through ``append_journal``."""
     os.makedirs(path, exist_ok=True)
     out = os.path.join(path, _JOURNAL)
     tmp = out + ".tmp"
     with open(tmp, "w") as f:
-        json.dump({"n_base": journal.n_base, "ops": journal.ops}, f,
-                  indent=2)
+        f.write(json.dumps({"n_base": journal.n_base}) + "\n")
+        for op in journal.ops:
+            f.write(json.dumps(op) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, out)
     return out
 
 
+def append_journal(path: str, op: dict) -> str:
+    """Append ONE op line to an existing journal, flushed and fsynced —
+    this append is the COMMIT POINT of a mutation (a mutation whose line
+    is durable replays on recovery; one whose line never landed is the at
+    -most-one op a crash may lose). O(op), not O(history): the rewrite
+    path (``save_journal``) is for checkpoints."""
+    p = os.path.join(path, _JOURNAL)
+    if not os.path.exists(p):
+        raise FileNotFoundError(
+            f"no journal at {p}; write the header first (save_journal)")
+    with open(p, "a") as f:
+        f.write(json.dumps(op) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+    return p
+
+
 def load_journal(path: str) -> Optional[MutationJournal]:
     """The index directory's mutation journal, or None if it has never
-    been mutated (no journal file)."""
+    been mutated (no journal file) or the file has no readable header.
+
+    Tolerant of crash damage: a torn final line (kill mid-append), trailing
+    garbage bytes, or an empty file truncate to the last valid record with
+    a ``RuntimeWarning`` — recovery proceeds from what is durable instead
+    of refusing to start. Anything AFTER the first unparsable line is
+    dropped too (a torn region ends the trustworthy prefix). Pre-JSONL
+    whole-file journals (``{"n_base": ..., "ops": [...]}``) stay
+    readable."""
     p = os.path.join(path, _JOURNAL)
     if not os.path.exists(p):
         return None
     with open(p) as f:
-        raw = json.load(f)
-    return MutationJournal(n_base=int(raw["n_base"]),
-                           ops=list(raw["ops"]))
+        text = f.read()
+    try:            # legacy whole-file JSON format
+        raw = json.loads(text)
+        if isinstance(raw, dict) and "ops" in raw:
+            return MutationJournal(n_base=int(raw["n_base"]),
+                                   ops=list(raw["ops"]))
+    except ValueError:
+        pass
+    records: List[dict] = []
+    lines = [ln for ln in text.split("\n") if ln.strip()]
+    dropped = 0
+    for i, ln in enumerate(lines):
+        try:
+            rec = json.loads(ln)
+            if not isinstance(rec, dict):
+                raise ValueError("journal records are objects")
+            records.append(rec)
+        except ValueError:
+            dropped = len(lines) - i
+            break
+    if dropped:
+        warnings.warn(
+            f"journal at {p!r} has {dropped} torn/garbage trailing "
+            f"record(s); truncating to the last valid record",
+            RuntimeWarning)
+    if not records or "n_base" not in records[0]:
+        warnings.warn(
+            f"journal at {p!r} has no readable header; treating the index "
+            f"as unmutated", RuntimeWarning)
+        return None
+    return MutationJournal(n_base=int(records[0]["n_base"]),
+                           ops=records[1:])
 
 
 def _pack_rows(rows: np.ndarray, width: int) -> np.ndarray:
@@ -164,7 +239,11 @@ def insert_rows(index: GraphIndex, new_rows: np.ndarray,
         tombstones2 = np.concatenate(
             [np.asarray(index.tombstones, bool), np.zeros(K, bool)])
     if journal is not None:
-        journal.record("insert", n=int(K))
+        # full payload, not just a count: replayable ops are what make the
+        # journal a write-ahead log (float32 -> repr round-trips exactly
+        # through JSON, so replay is bit-exact)
+        journal.record("insert", n=int(K), k_candidates=int(k_candidates),
+                       rows=new_rows.tolist())
     return GraphIndex(neighbors=neighbors2, entry=index.entry, base=base2,
                       tombstones=tombstones2)
 
@@ -219,3 +298,159 @@ def compact(index: GraphIndex,
     return GraphIndex(neighbors=nbrs, entry=entry,
                       base=np.asarray(index.base, np.float32)[alive],
                       tombstones=None)
+
+
+# ---------------------------------------------------------------------------
+# crash-safe recovery (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def apply_op(index: GraphIndex, op: dict) -> GraphIndex:
+    """Replay one journal op against an index (recovery path — nothing is
+    re-recorded). Every mutation primitive is deterministic, so replaying
+    the journaled tail reproduces the uninterrupted index exactly."""
+    kind = op.get("op")
+    if kind == "insert":
+        if "rows" not in op:
+            raise ValueError(
+                "journal insert op has no row payload (written before "
+                "payload recording); it cannot be replayed — recover from "
+                "an index checkpoint that already absorbs it")
+        rows = np.asarray(op["rows"], np.float32)
+        return insert_rows(index, rows,
+                           k_candidates=int(op.get("k_candidates", 64)))
+    if kind == "delete":
+        return delete_rows(index, op["ids"])
+    if kind == "compact":
+        return compact(index)
+    raise ValueError(f"unknown journal op {kind!r}")
+
+
+def recover_index(path: str) -> Tuple[GraphIndex, MutationJournal]:
+    """Crash recovery: load the last durable index and replay the journal
+    ops its arrays have not absorbed. ``meta['journal_applied']`` (written
+    by ``DurableIndex.checkpoint``) is the replay watermark; a directory
+    without the marker (legacy save-after-every-mutation flow) defaults to
+    all-absorbed — no replay. With the append-fsync-then-apply commit
+    discipline, a kill at ANY point loses at most the single op whose
+    journal line never landed."""
+    from repro.graph.io import load_index, load_index_meta
+
+    meta = load_index_meta(path)
+    index = load_index(path)
+    if not isinstance(index, GraphIndex):
+        raise ValueError(
+            f"recover_index supports graph-kind indexes, got "
+            f"{meta.get('kind')!r}")
+    journal = load_journal(path)
+    if journal is None:
+        return index, MutationJournal(n_base=int(meta.get("n", index.n)))
+    applied = int(meta.get("journal_applied", len(journal.ops)))
+    for op in journal.ops[applied:]:
+        index = apply_op(index, op)
+    return index, journal
+
+
+class DurableIndex:
+    """Crash-safe mutation driver for one index directory.
+
+    Durability contract (DESIGN.md §12): each mutation applies in memory,
+    then its op line lands in the journal via ``append_journal`` (fsync —
+    the commit point); ``checkpoint()`` atomically re-saves the full index
+    with ``meta['journal_applied'] = len(ops)`` so later recoveries replay
+    only the tail. A process death anywhere loses at most the op whose
+    journal line never landed; ``open()`` → ``recover_index`` rebuilds the
+    exact uninterrupted state from what is durable.
+
+    ``kill_hook(stage)`` is the fault-injection surface, invoked at
+    ``pre-journal`` / ``post-journal`` (around the commit point) and
+    ``pre-save`` / ``post-save`` (around the checkpoint) — typically
+    ``FaultPlan.kill_hook()``, which raises ``InjectedKill`` on schedule.
+    """
+
+    def __init__(self, path: str, index: GraphIndex,
+                 journal: MutationJournal, corpus_dtype: str = "float32",
+                 page_rows: int = 4096,
+                 kill_hook: Optional[Callable[[str], None]] = None,
+                 extra_meta: Optional[dict] = None):
+        self.path = path
+        self.index = index
+        self.journal = journal
+        self.corpus_dtype = corpus_dtype
+        self.page_rows = page_rows
+        self.kill_hook = kill_hook
+        self.extra_meta = dict(extra_meta or {})
+
+    @classmethod
+    def create(cls, path: str, index: GraphIndex,
+               corpus_dtype: str = "float32", page_rows: int = 4096,
+               kill_hook: Optional[Callable[[str], None]] = None,
+               extra_meta: Optional[dict] = None) -> "DurableIndex":
+        """Start a lineage: checkpoint the index with an empty journal."""
+        self = cls(path, index, MutationJournal(n_base=int(index.n)),
+                   corpus_dtype, page_rows, kill_hook, extra_meta)
+        self.checkpoint()
+        return self
+
+    @classmethod
+    def open(cls, path: str,
+             kill_hook: Optional[Callable[[str], None]] = None
+             ) -> "DurableIndex":
+        """Recover a lineage from disk (read-only: replays the journal
+        tail in memory; call ``checkpoint()`` to make the recovered state
+        the new durable baseline)."""
+        from repro.graph.io import load_index_meta
+
+        index, journal = recover_index(path)
+        meta = load_index_meta(path)
+        return cls(path, index, journal,
+                   corpus_dtype=meta.get("corpus_dtype", "float32"),
+                   page_rows=int(meta.get("page_rows", 4096)),
+                   kill_hook=kill_hook)
+
+    def _kill(self, stage: str) -> None:
+        if self.kill_hook is not None:
+            self.kill_hook(stage)
+
+    def _commit(self, op: dict, apply_fn) -> GraphIndex:
+        self._kill("pre-journal")       # die here => op fully lost (never
+        new_index = apply_fn(self.index)  # journaled, never applied)
+        append_journal(self.path, op)   # <- commit point
+        self._kill("post-journal")      # die here => op replays on recovery
+        self.index = new_index
+        self.journal.ops.append(op)
+        return self.index
+
+    def insert(self, rows: np.ndarray, k_candidates: int = 64) -> GraphIndex:
+        rows = np.asarray(rows, np.float32)
+        op = {"op": "insert", "n": int(rows.shape[0]),
+              "k_candidates": int(k_candidates), "rows": rows.tolist()}
+        return self._commit(
+            op, lambda idx: insert_rows(idx, rows,
+                                        k_candidates=k_candidates))
+
+    def delete(self, ids: Sequence[int]) -> GraphIndex:
+        op = {"op": "delete", "ids": [int(i) for i in ids]}
+        return self._commit(op, lambda idx: delete_rows(idx, op["ids"]))
+
+    def compact(self) -> GraphIndex:
+        n_dead = (0 if self.index.tombstones is None
+                  else int(np.asarray(self.index.tombstones, bool).sum()))
+        op = {"op": "compact", "n_dropped": n_dead}
+        return self._commit(op, compact)
+
+    def checkpoint(self) -> str:
+        """Atomically persist the current index as the durable baseline:
+        arrays + meta (``journal_applied`` watermark, meta.json last = the
+        commit point), then the journal rewritten clean — a crash between
+        the two leaves index and journal consistent (same op count)."""
+        from repro.graph.io import save_index
+
+        self._kill("pre-save")          # die here => previous checkpoint
+        save_index(                     # survives, journal tail replays
+            self.path, self.index, corpus_dtype=self.corpus_dtype,
+            extra_meta={**self.extra_meta,
+                        "journal_applied": len(self.journal.ops)},
+            page_rows=self.page_rows)
+        out = save_journal(self.path, self.journal)
+        self._kill("post-save")
+        return out

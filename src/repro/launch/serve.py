@@ -114,10 +114,23 @@ def serve_continuous(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
     """Open-loop continuous batching: Poisson arrivals at --offered-qps
     into the lane-recycling runtime; per-request SLA metrics out."""
     engine = build_engine(measure, cfg, options)
+    fault_plan = None
+    fault_hook = None
+    if args.chaos:
+        from repro.serving import FaultPlan
+        fault_plan = FaultPlan.load(args.chaos)
+        fault_hook = fault_plan.tick_hook("tick")
+        print(f"[serve] chaos: replaying {args.chaos} "
+              f"(seed={fault_plan.seed}, {len(fault_plan.events)} event(s))")
     runtime = ContinuousRuntime(engine, measure.params, corpus_arg, nbrs_j,
                                 n_lanes=args.lanes, query_dim=args.dim,
                                 entry=graph.entry,
-                                steps_per_tick=args.steps_per_tick)
+                                steps_per_tick=args.steps_per_tick,
+                                max_queue=args.max_queue,
+                                fault_hook=fault_hook)
+    if fault_plan is not None and getattr(runtime.store, "is_paged", False):
+        # page-read faults only make sense against a pager
+        runtime.store.set_read_hook(fault_plan.pager_hook("pager"))
     queries = rng.normal(size=(args.queries, args.dim)).astype(np.float32)
     runtime.warmup(queries[0])  # compile reset + tick off the clock
 
@@ -125,20 +138,32 @@ def serve_continuous(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
     stream = [Request(rid=i, query=queries[i], t_arrive=float(arrivals[i]),
                       deadline=args.deadline)
               for i in range(args.queries)]
-    completions = runtime.run_stream(stream)
+    completions = runtime.run_stream(stream,
+                                     health_every_s=args.health_every)
 
     by_rid = {c.rid: c for c in completions}
     nr = min(16, args.queries)
+    ok_rids = [i for i in range(nr) if by_rid[i].status == "ok"]
+    if not ok_rids:
+        # everything in the recall probe window was shed / failed / timed
+        # out — report SLA metrics only instead of dividing by nothing
+        print(f"[serve] runtime=continuous lanes={args.lanes} "
+              f"offered={args.offered_qps:.0f} QPS — no ok completions in "
+              f"the recall window (degraded run)")
+        print(runtime.format_health())
+        print(runtime.metrics.report())
+        return
     true_ids, _ = brute_force_topk(measure, base_j,
                                    jnp.asarray(queries[:nr]), args.k)
-    got = jnp.asarray(np.stack([by_rid[i].ids for i in range(nr)]))
-    r = recall(got, true_ids)
+    got = jnp.asarray(np.stack([by_rid[i].ids for i in ok_rids]))
+    r = recall(got, jnp.asarray(np.asarray(true_ids)[ok_rids]))
     print(f"[serve] runtime=continuous lanes={args.lanes} "
           f"steps_per_tick={args.steps_per_tick} "
           f"offered={args.offered_qps:.0f} QPS mode={args.mode} "
           f"measure={args.measure} "
           f"corpus_dtype={args.corpus_dtype} fused={options.fused} "
           f"recall@{args.k}={r:.3f}")
+    print(runtime.format_health())
     print(runtime.metrics.report())
 
 
@@ -171,6 +196,20 @@ def main() -> None:
     ap.add_argument("--deadline", type=float, default=None,
                     help="continuous runtime: max seconds in queue before a "
                          "request is dropped as timed out")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="continuous runtime: bounded admission queue — "
+                         "submits beyond this depth are load-shed "
+                         "(status='shed') instead of queueing unboundedly "
+                         "(DESIGN.md §12)")
+    ap.add_argument("--chaos", type=str, default=None, metavar="PLAN.json",
+                    help="continuous runtime: replay a FaultPlan "
+                         "(serving/faults.py) — tick faults at site 'tick', "
+                         "page-read faults at site 'pager' when serving "
+                         "paged residency")
+    ap.add_argument("--health-every", type=float, default=None,
+                    metavar="SECONDS",
+                    help="continuous runtime: print a [health] line at this "
+                         "period while the stream drains")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--alpha", type=float, default=1.01)

@@ -3,6 +3,10 @@ engine — admission queue, lane-recycling scheduler, per-request metrics."""
 from repro.serving.batching import (  # noqa: F401
     BATCH_BUCKETS, bucket_pad, bucket_size,
 )
+from repro.serving.faults import (  # noqa: F401
+    FaultEvent, FaultPlan, InjectedFault, InjectedKill,
+)
+from repro.serving.health import ShardHealthTracker  # noqa: F401
 from repro.serving.metrics import (  # noqa: F401
     RequestRecord, ServingMetrics, latency_summary, percentile,
 )

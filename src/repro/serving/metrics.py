@@ -43,6 +43,9 @@ class RequestRecord:
     n_grad: int = 0
     n_iters: int = 0
     timed_out: bool = False
+    shed: bool = False      # load-shed at admission (queue full / draining)
+    failed: bool = False    # every fault domain that held it failed
+    partial: bool = False   # merged over surviving shards only
 
     @property
     def latency_ms(self) -> float:
@@ -61,9 +64,16 @@ class ServingMetrics:
         self.records: List[RequestRecord] = []
         self._busy_steps = 0
         self._lane_steps = 0
+        self._queue_depth_last = 0
+        self._queue_depth_max = 0
 
     def observe(self, rec: RequestRecord) -> None:
         self.records.append(rec)
+
+    def observe_queue_depth(self, depth: int) -> None:
+        """Admission-queue depth gauge, sampled once per serving round."""
+        self._queue_depth_last = int(depth)
+        self._queue_depth_max = max(self._queue_depth_max, int(depth))
 
     def observe_occupancy(self, busy: int, n_lanes: int, steps: int = 1
                           ) -> None:
@@ -81,13 +91,18 @@ class ServingMetrics:
         return self._busy_steps / self._lane_steps if self._lane_steps else 0.0
 
     def summary(self) -> Dict[str, float]:
-        done = [r for r in self.records if not r.timed_out]
+        done = [r for r in self.records
+                if not (r.timed_out or r.shed or r.failed)]
         lat = [r.latency_ms for r in done]
         queue = [r.queue_ms for r in done]
         iters = np.asarray([r.n_iters for r in done], np.float64)
         evals = np.asarray([r.n_eval for r in done], np.float64)
         out = {"n_completed": float(len(done)),
-               "n_timed_out": float(len(self.records) - len(done)),
+               "n_timed_out": float(sum(r.timed_out for r in self.records)),
+               "n_shed": float(sum(r.shed for r in self.records)),
+               "n_failed": float(sum(r.failed for r in self.records)),
+               "n_partial": float(sum(r.partial for r in done)),
+               "queue_depth_max": float(self._queue_depth_max),
                "occupancy": self.occupancy,
                "queue_p50_ms": percentile(queue, 50),
                "queue_p95_ms": percentile(queue, 95),
@@ -111,6 +126,8 @@ class ServingMetrics:
         lines = [
             f"{prefix} completed={s['n_completed']:.0f} "
             f"timed_out={s['n_timed_out']:.0f} "
+            f"shed={s['n_shed']:.0f} failed={s['n_failed']:.0f} "
+            f"partial={s['n_partial']:.0f} "
             f"steady-state {s['qps']:.0f} QPS "
             f"lane-occupancy={s['occupancy']:.2f}",
             f"{prefix} latency p50={s['p50_ms']:.1f}ms "

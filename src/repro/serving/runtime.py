@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core.corpus import as_corpus_store
 from repro.core.engine import ExpansionEngine, _freeze_done
+from repro.serving.health import ShardHealthTracker
 from repro.serving.metrics import RequestRecord, ServingMetrics
 
 
@@ -72,6 +73,13 @@ class Completion:
     lane: int
     record: RequestRecord
     epoch: int = 0         # index version the request was admitted under
+    # degradation ladder outcome (DESIGN.md §12): "ok" = full answer;
+    # "partial" = merged over surviving shards only; "timeout" = deadline
+    # drop; "shed" = load-shed at admission; "failed" = every fault domain
+    # holding it failed. Anything except "ok" carries ids -1 / scores -inf
+    # or a flagged subset — never a silently wrong full answer.
+    status: str = "ok"
+    partial: bool = False
 
 
 def poisson_arrivals(n: int, qps: float, seed: int = 0) -> np.ndarray:
@@ -92,6 +100,8 @@ class ContinuousRuntime:
                  n_lanes: int, query_dim: int, entry: int = 0,
                  steps_per_tick: int = 4,
                  now_fn: Callable[[], float] = time.perf_counter,
+                 max_queue: Optional[int] = None,
+                 fault_hook: Optional[Callable[[], float]] = None,
                  shared_fns: Optional[tuple] = None):
         if n_lanes < 1:
             raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
@@ -106,6 +116,15 @@ class ContinuousRuntime:
         self.default_entry = entry
         self.steps_per_tick = steps_per_tick
         self._now = now_fn
+        # bounded admission: beyond max_queue queued requests, submits are
+        # load-shed (immediate status="shed" completion) instead of growing
+        # the queue without bound; None = unbounded (previous behavior)
+        self.max_queue = max_queue
+        # chaos surface (serving/faults.py): consulted once per busy tick;
+        # returns extra reported tick-seconds or raises InjectedFault
+        self.fault_hook = fault_hook
+        self.tick_penalty_s = 0.0
+        self._closing = False
 
         self.epoch = 0
         self._pending_index: Optional[tuple] = None
@@ -162,9 +181,64 @@ class ContinuousRuntime:
                budget_iters: Optional[int] = None) -> int:
         rid = rid if rid is not None else next(self._rid_gen)
         t = t_arrive if t_arrive is not None else self._now()
+        if self._closing or (self.max_queue is not None
+                             and len(self.queue) >= self.max_queue):
+            self._resolve_sentinel(rid, t, "shed")
+            return rid
         self.queue.append(Request(rid, np.asarray(query, np.float32), t,
                                   entry, deadline, budget_iters))
         return rid
+
+    def _resolve_sentinel(self, rid: int, t_arrive: float,
+                          status: str) -> Completion:
+        """Resolve a request WITHOUT searching (shed / failed): the rid
+        completes exactly once with ids -1 / scores -inf, flagged by
+        ``status`` — downstream consumers never hang on it."""
+        now = self._now()
+        rec = RequestRecord(rid, t_arrive, now, now,
+                            shed=(status == "shed"),
+                            failed=(status == "failed"))
+        k = self.engine.cfg.k
+        c = Completion(rid, np.full((k,), -1, np.int32),
+                       np.full((k,), -np.inf, np.float32), 0, 0, 0, -1,
+                       rec, self.epoch, status=status)
+        self.metrics.observe(rec)
+        self.completions.append(c)
+        return c
+
+    def complete_failed(self, rid: int,
+                        t_arrive: Optional[float] = None) -> Completion:
+        """Resolve one rid as failed without queueing it (the sharded
+        runtime synthesizes parts for breaker-open shards this way)."""
+        t = t_arrive if t_arrive is not None else self._now()
+        return self._resolve_sentinel(rid, t, "failed")
+
+    def shed_queue(self) -> List[Completion]:
+        """Shed every queued request (graceful drain — nothing admitted)."""
+        out = []
+        while self.queue:
+            req = self.queue.popleft()
+            out.append(self._resolve_sentinel(req.rid, req.t_arrive, "shed"))
+        return out
+
+    def fail_all(self) -> List[Completion]:
+        """Resolve EVERYTHING this runtime holds as failed — in-flight
+        lanes and queued requests alike — and reset the engine state to
+        idle. Called when this runtime's fault domain is declared dead
+        (circuit breaker opens); a later re-admission starts clean."""
+        out = []
+        for lane in range(self.n_lanes):
+            req = self._lane_req[lane]
+            if req is not None:
+                self._lane_req[lane] = None
+                out.append(self._resolve_sentinel(req.rid, req.t_arrive,
+                                                  "failed"))
+        while self.queue:
+            req = self.queue.popleft()
+            out.append(self._resolve_sentinel(req.rid, req.t_arrive,
+                                              "failed"))
+        self._state = self.engine.idle_state(self.n_lanes, self.store.n)
+        return out
 
     # -- index-version epochs (streaming mutation) --------------------------
 
@@ -245,9 +319,15 @@ class ContinuousRuntime:
         return dropped
 
     def _tick(self) -> None:
+        self.tick_penalty_s = 0.0
         busy = self.in_flight
         if not busy:
             return
+        if self.fault_hook is not None:
+            # may raise InjectedFault (crash) or report extra seconds
+            # (stall/slow tick) — the sharded runtime adds the penalty to
+            # the measured tick time before its deadline check
+            self.tick_penalty_s = float(self.fault_hook() or 0.0)
         self._state = self._tick_fn(self.params, self.store, self.neighbors,
                                     self._queries_j, self._state)
         self.metrics.observe_occupancy(busy, self.n_lanes,
@@ -292,13 +372,53 @@ class ContinuousRuntime:
         staged index (``install_index``) swaps in at the top of the round
         once the previous epoch's lanes have all harvested."""
         self._maybe_swap_index()
+        self.metrics.observe_queue_depth(len(self.queue))
         dropped = self._admit(self._now())
         self._tick()
         return dropped + self._harvest(self._now())
 
+    def close(self) -> List[Completion]:
+        """Graceful drain: stop admitting (late submits are shed), shed the
+        queue, finish the in-flight lanes. Returns everything that resolved
+        during the drain (also visible via ``pop_completions``)."""
+        self._closing = True
+        out = self.shed_queue()
+        while self.in_flight:
+            out += self.step_once()
+        return out
+
     def pop_completions(self) -> List[Completion]:
         out, self.completions = self.completions, []
         return out
+
+    # -- observability ------------------------------------------------------
+
+    def health_snapshot(self) -> dict:
+        recs = self.metrics.records
+        snap = {"queue": len(self.queue), "in_flight": self.in_flight,
+                "completed": sum(not (r.timed_out or r.shed or r.failed)
+                                 for r in recs),
+                "timed_out": sum(r.timed_out for r in recs),
+                "shed": sum(r.shed for r in recs),
+                "failed": sum(r.failed for r in recs)}
+        if getattr(self.store, "is_paged", False):
+            st = self.store.stats_snapshot()
+            snap["pager"] = {"hit_rate": round(st.hit_rate, 3),
+                             "retries": st.retries,
+                             "io_errors": st.io_errors,
+                             "mode": st.fallback or "paged"}
+        return snap
+
+    def format_health(self) -> str:
+        s = self.health_snapshot()
+        line = (f"[health] queue={s['queue']} in_flight={s['in_flight']} "
+                f"completed={s['completed']} timed_out={s['timed_out']} "
+                f"shed={s['shed']} failed={s['failed']}")
+        if "pager" in s:
+            p = s["pager"]
+            line += (f" pager(mode={p['mode']} hit_rate={p['hit_rate']} "
+                     f"retries={p['retries']} io_errors={p['io_errors']})")
+        return line
 
     def warmup(self, query: np.ndarray) -> None:
         """Compile the jitted reset + tick off the clock: run one sentinel
@@ -312,18 +432,26 @@ class ContinuousRuntime:
     # -- open-loop driver ---------------------------------------------------
 
     def run_stream(self, requests: Sequence[Request],
-                   realtime: bool = True) -> List[Completion]:
+                   realtime: bool = True,
+                   health_every_s: Optional[float] = None
+                   ) -> List[Completion]:
         """Drive a pre-scheduled stream to completion. ``t_arrive`` offsets
         are seconds from the start of the run; arrivals are open-loop —
         independent of completions. ``realtime=False`` collapses the
         schedule — every request is due immediately and is stamped as
         arriving at submission (honoring future offsets in the records
         would make latency/queue times negative); arrival ORDER still
-        follows the offsets, which is all the deterministic tests need."""
+        follows the offsets, which is all the deterministic tests need.
+        ``health_every_s`` prints a periodic ``format_health`` line."""
         pending = collections.deque(
             sorted(requests, key=lambda r: r.t_arrive))
         t0 = self._now()
+        t_health = t0
         while pending or self.queue or self.in_flight:
+            if health_every_s is not None \
+                    and self._now() - t_health >= health_every_s:
+                t_health = self._now()
+                print(self.format_health())
             now = self._now() - t0
             while pending and (not realtime or pending[0].t_arrive <= now):
                 r = pending.popleft()
@@ -348,13 +476,35 @@ class ShardedContinuousRuntime:
     one-shot sharded path (bit-identical merged results). Counters follow
     the sharded accounting: ``n_eval``/``n_grad`` sum over shards (total
     work), ``n_iters`` is the max (shards step in parallel — the critical
-    path)."""
+    path).
+
+    Each shard is a **fault domain** (DESIGN.md §12): a per-shard
+    ``ShardHealthTracker`` (circuit breaker + straggler monitor) takes a
+    strike whenever a shard's tick raises or blows ``tick_deadline_s``;
+    ``k_failures`` consecutive strikes open the breaker — the shard's
+    in-flight work resolves as failed parts, it receives no traffic for
+    ``cooldown_rounds`` rounds, then probes half-open and one clean busy
+    tick re-admits it. Merges proceed over the surviving shards with the
+    completion flagged ``partial=True``; only if EVERY shard failed does
+    the rid resolve as ``failed`` (ids -1). ``fault_plan`` installs a
+    chaos schedule's tick hooks (site ``shard:<s>/tick``) for tests and
+    ``benchmarks/chaos.py``."""
 
     def __init__(self, engine: ExpansionEngine, params, index, n_lanes: int,
                  query_dim: int, steps_per_tick: int = 4,
-                 now_fn: Callable[[], float] = time.perf_counter):
+                 now_fn: Callable[[], float] = time.perf_counter,
+                 max_queue: Optional[int] = None,
+                 tick_deadline_s: Optional[float] = None,
+                 k_failures: int = 3, cooldown_rounds: int = 8,
+                 fault_plan=None):
         self.engine = engine
         self.index = index
+        self.max_queue = max_queue
+        self.tick_deadline_s = tick_deadline_s
+        self._closing = False
+        self.health = ShardHealthTracker(index.n_shards,
+                                         k_failures=k_failures,
+                                         cooldown_rounds=cooldown_rounds)
         self.runtimes: List[ContinuousRuntime] = []
         for s in range(index.n_shards):
             # partitions are equal-shape by construction, so every shard
@@ -362,11 +512,13 @@ class ShardedContinuousRuntime:
             # compile, not n_shards identical ones
             shared = (None if not self.runtimes else
                       (self.runtimes[0]._reset_fn, self.runtimes[0]._tick_fn))
+            hook = (fault_plan.tick_hook(f"shard:{s}/tick")
+                    if fault_plan is not None else None)
             self.runtimes.append(ContinuousRuntime(
                 engine, params, index.base[s], index.neighbors[s], n_lanes,
                 query_dim, entry=int(index.entries[s]),
                 steps_per_tick=steps_per_tick, now_fn=now_fn,
-                shared_fns=shared))
+                fault_hook=hook, shared_fns=shared))
         self.metrics = ServingMetrics(n_lanes * index.n_shards)
         self.completions: List[Completion] = []
         self._partial: Dict[int, List[Completion]] = {}
@@ -410,20 +562,72 @@ class ShardedContinuousRuntime:
         cannot mean anything across shards — each shard searches from its
         own entry point."""
         rid = rid if rid is not None else next(self._rid_gen)
-        for rt in self.runtimes:
-            rt.submit(query, rid=rid, deadline=deadline, t_arrive=t_arrive,
-                      budget_iters=budget_iters)
+        now_fn = self.runtimes[0]._now
+        t = t_arrive if t_arrive is not None else now_fn()
+        if self._closing or (self.max_queue is not None
+                             and self.queued >= self.max_queue):
+            # shed at the TOP level: per-shard sheds would desync rid
+            # resolution across the fan-out
+            now = now_fn()
+            rec = RequestRecord(rid, t, now, now, shed=True)
+            k = self.engine.cfg.k
+            self.metrics.observe(rec)
+            self.completions.append(Completion(
+                rid, np.full((k,), -1, np.int32),
+                np.full((k,), -np.inf, np.float32), 0, 0, 0, -1, rec,
+                max(self._indices), status="shed"))
+            return rid
+        for s, rt in enumerate(self.runtimes):
+            if self.health.serving(s):
+                rt.submit(query, rid=rid, deadline=deadline, t_arrive=t,
+                          budget_iters=budget_iters)
+            else:
+                # breaker open: synthesize this shard's part as failed up
+                # front so the rid's merge window is never missing a slot
+                rt.complete_failed(rid, t)
         return rid
 
+    def _shard_failed(self, s: int, reason: str) -> bool:
+        opened = self.health.record_failure(s, reason)
+        if opened:
+            # out of rotation: everything the shard holds resolves as
+            # failed parts, so no merge window waits on a dead shard.
+            # (A strike SHORT of opening leaves its work in place — the
+            # next round retries it, and transient faults recover free.)
+            self.runtimes[s].fail_all()
+        return opened
+
     def step_once(self) -> List[Completion]:
-        for rt in self.runtimes:
-            rt.step_once()
+        self.health.on_round()
+        now_fn = self.runtimes[0]._now
+        times = {}
+        for s, rt in enumerate(self.runtimes):
+            if not self.health.serving(s):
+                continue
+            probe = rt.in_flight > 0 or bool(rt.queue)
+            t0 = now_fn()
+            try:
+                rt.step_once()
+            except Exception as err:  # noqa: BLE001 — injected faults,
+                # CorpusUnavailableError, pager callbacks dying inside XLA:
+                # ANY tick death is a strike against this fault domain
+                self._shard_failed(s, repr(err))
+                continue
+            dt = (now_fn() - t0) + rt.tick_penalty_s
+            if self.tick_deadline_s is not None and dt > self.tick_deadline_s:
+                self._shard_failed(
+                    s, f"tick {dt:.3f}s > deadline {self.tick_deadline_s}s")
+                continue
+            times[s] = min(dt, 1e6)     # stalls report inf; keep medians sane
+            self.health.record_success(s, probed=probe)
+        self.health.record_tick_times(times)
         # merged occupancy mirrors the per-shard tick observations (the
         # sub-runtimes own the raw samples; without this the sharded
         # report would always read occupancy 0)
         self.metrics.sync_occupancy(
             sum(rt.metrics._busy_steps for rt in self.runtimes),
             sum(rt.metrics._lane_steps for rt in self.runtimes))
+        self.metrics.observe_queue_depth(self.queued)
         return self._merge_ready()
 
     def _merge_ready(self) -> List[Completion]:
@@ -432,38 +636,62 @@ class ShardedContinuousRuntime:
             for c in rt.pop_completions():
                 self._partial.setdefault(c.rid, [None] * S)[s] = c
         out = []
+        k = self.engine.cfg.k
         for rid in [r for r, ps in self._partial.items()
                     if all(p is not None for p in ps)]:
             parts = self._partial.pop(rid)
-            k = self.engine.cfg.k
-            timed_out = any(p.record.timed_out for p in parts)
-            if timed_out:
+            live = [(s, p) for s, p in enumerate(parts)
+                    if p.status not in ("failed", "shed")]
+            n_failed = sum(p.status == "failed" for p in parts)
+            shed = any(p.status == "shed" for p in parts)
+            none_ids = np.full((k,), -1, np.int32)
+            none_scores = np.full((k,), -np.inf, np.float32)
+            if shed:
+                # drain-time shed on the serving shards => the rid is shed
+                # at the merged level too
+                status, ids, scores = "shed", none_ids, none_scores
+            elif not live:
+                # EVERY shard in the window failed — the empty-harvest
+                # path: resolve completed-with-all-ids-(-1) (the deadline
+                # contract) instead of raising or waiting forever
+                status, ids, scores = "failed", none_ids, none_scores
+            elif any(p.record.timed_out for _, p in live):
                 # per-shard queues can disagree about a deadline (admit
                 # times differ per shard); a merged answer missing a whole
                 # partition's candidates is NOT a valid top-k, so the
                 # single-runtime contract holds end to end: timed out =>
                 # ids all -1
-                ids = np.full((k,), -1, np.int32)
-                scores = np.full((k,), -np.inf, np.float32)
+                status, ids, scores = "timeout", none_ids, none_scores
             else:
+                # merge over the shards that actually answered; a missing
+                # (failed) shard makes the answer partial — flagged, never
+                # silently passed off as a full top-k
                 gl = [np.where(p.ids >= 0,
                                self._indices[p.epoch]
                                .global_ids[s][np.maximum(p.ids, 0)],
-                               -1) for s, p in enumerate(parts)]
-                ids, scores = self._merge(
+                               -1) for s, p in live]
+                m_ids, m_scores = self._merge(
                     jnp.asarray(np.stack(gl))[None],
-                    jnp.asarray(np.stack([p.scores for p in parts]))[None],
+                    jnp.asarray(np.stack([p.scores for _, p in live]))[None],
                     k=k)
-                ids, scores = np.asarray(ids)[0], np.asarray(scores)[0]
+                ids, scores = np.asarray(m_ids)[0], np.asarray(m_scores)[0]
+                status = "partial" if n_failed else "ok"
+            live_p = [p for _, p in live]
+            src = live_p if live_p else parts
             rec = RequestRecord(
-                rid, parts[0].record.t_arrive,
-                max(p.record.t_admit for p in parts),
-                max(p.record.t_done for p in parts),
-                sum(p.n_eval for p in parts), sum(p.n_grad for p in parts),
-                max(p.n_iters for p in parts), timed_out=timed_out)
+                rid, min(p.record.t_arrive for p in parts),
+                max(p.record.t_admit for p in src),
+                max(p.record.t_done for p in src),
+                sum(p.n_eval for p in live_p),
+                sum(p.n_grad for p in live_p),
+                max((p.n_iters for p in live_p), default=0),
+                timed_out=(status == "timeout"), shed=(status == "shed"),
+                failed=(status == "failed"),
+                partial=(status == "partial"))
             c = Completion(rid, ids, scores,
                            rec.n_eval, rec.n_grad, rec.n_iters, -1, rec,
-                           max(p.epoch for p in parts))
+                           max(p.epoch for p in parts), status=status,
+                           partial=(status == "partial"))
             self.metrics.observe(rec)
             self.completions.append(c)
             out.append(c)
@@ -473,13 +701,58 @@ class ShardedContinuousRuntime:
         out, self.completions = self.completions, []
         return out
 
+    def close(self) -> List[Completion]:
+        """Graceful drain at the merged level: admits nothing new, sheds
+        queued requests (their merge windows resolve as shed), then rounds
+        continue until every in-flight rid has merged."""
+        self._closing = True
+        out = []
+        for rt in self.runtimes:
+            rt.shed_queue()
+        # un-popped per-shard parts (e.g. synthesized failures) count as
+        # unresolved work: every rid must merge before the drain ends
+        while self.in_flight or self._partial \
+                or any(rt.completions for rt in self.runtimes):
+            out += self.step_once()
+        return out
+
+    # -- observability ------------------------------------------------------
+
+    def health_snapshot(self) -> dict:
+        recs = self.metrics.records
+        return {"shards": self.health.states(),
+                "breaker_opens": self.health.n_opened,
+                "queue": self.queued, "in_flight": self.in_flight,
+                "completed": sum(not (r.timed_out or r.shed or r.failed)
+                                 for r in recs),
+                "partial": sum(r.partial for r in recs),
+                "timed_out": sum(r.timed_out for r in recs),
+                "shed": sum(r.shed for r in recs),
+                "failed": sum(r.failed for r in recs)}
+
+    def format_health(self) -> str:
+        s = self.health_snapshot()
+        return (f"[health] shards=[{','.join(s['shards'])}] "
+                f"opens={s['breaker_opens']} queue={s['queue']} "
+                f"in_flight={s['in_flight']} completed={s['completed']} "
+                f"partial={s['partial']} timed_out={s['timed_out']} "
+                f"shed={s['shed']} failed={s['failed']}")
+
     def run_stream(self, requests: Sequence[Request],
-                   realtime: bool = True) -> List[Completion]:
+                   realtime: bool = True,
+                   health_every_s: Optional[float] = None
+                   ) -> List[Completion]:
         now_fn = self.runtimes[0]._now
         pending = collections.deque(
             sorted(requests, key=lambda r: r.t_arrive))
         t0 = now_fn()
-        while pending or self.queued or self.in_flight or self._partial:
+        t_health = t0
+        while pending or self.queued or self.in_flight or self._partial \
+                or any(rt.completions for rt in self.runtimes):
+            if health_every_s is not None \
+                    and now_fn() - t_health >= health_every_s:
+                t_health = now_fn()
+                print(self.format_health())
             now = now_fn() - t0
             while pending and (not realtime or pending[0].t_arrive <= now):
                 r = pending.popleft()

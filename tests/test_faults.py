@@ -1,0 +1,352 @@
+"""Fault-domain serving: the injection harness, pager degradation ladder,
+circuit-breaker shard health, partial-failure merges, load shedding, and
+graceful drain (DESIGN.md §12).
+
+House invariant, extended to failure: a completion is either flagged
+(partial / shed / failed / timeout) or BIT-IDENTICAL to the fault-free
+run — degraded operation may lose coverage, never correctness.
+"""
+import sys
+from collections import Counter
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import (EngineOptions, SearchConfig, build_engine,
+                        mlp_measure)
+from repro.core.corpus import (CorpusUnavailableError, ResidencyPolicy,
+                               make_corpus_store)
+from repro.core.sharded import build_sharded_index, empty_topk, merge_topk
+from repro.ft.straggler import CircuitBreaker
+from repro.serving import (ContinuousRuntime, FaultEvent, FaultPlan,
+                           InjectedFault, Request, ShardedContinuousRuntime,
+                           ShardHealthTracker)
+from repro.graph import build_l2_graph
+
+
+@pytest.fixture(scope="module")
+def system():
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(600, 16)).astype(np.float32)
+    queries = rng.normal(size=(24, 16)).astype(np.float32)
+    graph = build_l2_graph(base, m=8, k_construction=24)
+    measure = mlp_measure(jax.random.PRNGKey(1), 16, 16, hidden=(32,))
+    cfg = SearchConfig(k=5, ef=24, mode="guitar", budget=6, alpha=1.1)
+    engine = build_engine(measure, cfg,
+                          EngineOptions(rank_impl="ref", measure_impl="vmap"))
+    sharded = build_sharded_index(base, n_shards=2, m=8, k_construction=24)
+    return dict(base=base, queries=queries, graph=graph, measure=measure,
+                cfg=cfg, engine=engine, sharded=sharded)
+
+
+def _drive(rt, queries, per_round=2):
+    """Paced deterministic driver: submit ``per_round`` requests per
+    scheduler round (unlike run_stream(realtime=False), which queues the
+    whole stream up front — uninteresting for outage dynamics)."""
+    i = 0
+    done = []
+    while i < len(queries) or rt.in_flight or rt.queued or rt._partial \
+            or any(r.completions for r in rt.runtimes):
+        for _ in range(per_round):
+            if i < len(queries):
+                rt.submit(queries[i], rid=i)
+                i += 1
+        done += rt.step_once()
+    return {c.rid: c for c in done}
+
+
+# ---------------------------------------------------------------------------
+# the harness itself
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_deterministic_and_json_round_trip(tmp_path):
+    events = [FaultEvent("shard_crash", site="shard:0/tick", start=3,
+                         count=2),
+              FaultEvent("page_io_error", site="pager", start=0, count=100,
+                         rate=0.3),
+              FaultEvent("slow_tick", seconds=0.5)]
+    p1 = FaultPlan(events, seed=7)
+    path = p1.save(str(tmp_path / "plan.json"))
+    p2 = FaultPlan.load(path)
+    assert p2.to_dict() == p1.to_dict()
+    # same plan, same site, same invocation sequence -> same firings
+    a1 = p1.arm("pager", ("page_io_error",))
+    a2 = p2.arm("pager", ("page_io_error",))
+    fires1 = [a1.next() is not None for _ in range(200)]
+    fires2 = [a2.next() is not None for _ in range(200)]
+    assert fires1 == fires2
+    assert 20 < sum(fires1) < 60      # rate=0.3 over the 100-wide window
+
+    # windows are exact when rate=1
+    tick = p1.tick_hook("shard:0/tick")
+    got = []
+    for i in range(8):
+        try:
+            tick()
+            got.append(False)
+        except InjectedFault:
+            got.append(True)
+    assert got == [False] * 3 + [True] * 2 + [False] * 3
+
+
+def test_fault_plan_rejects_bad_events():
+    with pytest.raises(ValueError):
+        FaultEvent("meteor_strike")
+    with pytest.raises(ValueError):
+        FaultEvent("kill", rate=1.5)
+
+
+def test_kill_hook_counts_per_stage():
+    plan = FaultPlan([FaultEvent("kill", site="mutate/post-journal",
+                                 start=1)])
+    hook = plan.kill_hook()
+    hook("pre-journal")          # different site: never fires
+    hook("post-journal")         # idx 0: before the window
+    with pytest.raises(InjectedFault):
+        hook("post-journal")     # idx 1: fires
+    hook("post-journal")         # idx 2: past the window
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker + shard health state machine
+# ---------------------------------------------------------------------------
+
+def test_circuit_breaker_state_machine():
+    b = CircuitBreaker(k_failures=3, cooldown=2)
+    assert not b.record_failure() and not b.record_failure()
+    assert b.state == CircuitBreaker.CLOSED and b.serving
+    assert b.record_failure()            # 3rd consecutive strike trips it
+    assert b.state == CircuitBreaker.OPEN and not b.serving
+    b.tick()
+    assert b.state == CircuitBreaker.OPEN
+    b.tick()
+    assert b.state == CircuitBreaker.HALF_OPEN and b.serving
+    assert b.record_failure()            # half-open failure reopens at once
+    assert b.state == CircuitBreaker.OPEN
+    b.tick(); b.tick()
+    b.record_success()
+    assert b.state == CircuitBreaker.CLOSED and b.failures == 0
+
+
+def test_shard_health_idle_probe_does_not_close():
+    h = ShardHealthTracker(2, k_failures=1, cooldown_rounds=1)
+    assert h.record_failure(1, "boom")
+    assert h.states() == ["healthy", "open"]
+    h.on_round()
+    assert h.states() == ["healthy", "half-open"]
+    h.record_success(1, probed=False)    # idle tick: no evidence
+    assert h.states() == ["healthy", "half-open"]
+    h.record_success(1, probed=True)     # real work: re-admitted
+    assert h.states() == ["healthy", "healthy"]
+
+
+# ---------------------------------------------------------------------------
+# pager degradation ladder: retry -> whole fallback -> unavailable
+# ---------------------------------------------------------------------------
+
+def _paged(base, **policy_kw):
+    policy = ResidencyPolicy("paged", page_rows=64, cache_bytes=1 << 20,
+                             retry_backoff_s=0.0, **policy_kw)
+    return make_corpus_store(base, "float32", residency=policy)
+
+
+def test_pager_retries_absorb_transient_errors(system):
+    base = system["base"]
+    whole = make_corpus_store(base, "float32")
+    store = _paged(base)
+    plan = FaultPlan([FaultEvent("page_io_error", site="pager", start=1,
+                                 count=2)])
+    store.set_read_hook(plan.pager_hook())
+    ids = np.array([[0, 70, 130], [599, 3, 64]])
+    got = np.asarray(store.take(ids))
+    np.testing.assert_array_equal(got, np.asarray(whole.take(ids)))
+    st = store.stats_snapshot()
+    assert st.io_errors == 2 and st.retries >= 2
+    assert st.fallback == ""             # never degraded
+
+
+def test_pager_falls_back_to_whole_and_stays_bit_identical(system):
+    base = system["base"]
+    whole = make_corpus_store(base, "float32")
+    store = _paged(base)
+    plan = FaultPlan([FaultEvent("page_io_error", site="pager", start=0,
+                                 count=10 ** 6)])
+    store.set_read_hook(plan.pager_hook())
+    ids = np.arange(0, 600, 7)
+    got = np.asarray(store.take(ids))
+    np.testing.assert_array_equal(got, np.asarray(whole.take(ids)))
+    st = store.stats_snapshot()
+    assert st.fallback == "whole"
+    assert st.resident_bytes == base.nbytes
+    # degraded mode serves every further gather without touching the hook
+    errs_before = st.io_errors
+    got2 = np.asarray(store.take(ids[::2]))
+    np.testing.assert_array_equal(got2, np.asarray(whole.take(ids[::2])))
+    assert store.stats_snapshot().io_errors == errs_before
+
+
+def test_pager_unavailable_when_fallback_exceeds_budget(system):
+    store = _paged(system["base"], fallback_bytes=128)
+    plan = FaultPlan([FaultEvent("page_io_error", site="pager", start=0,
+                                 count=10 ** 6)])
+    store.set_read_hook(plan.pager_hook())
+    with pytest.raises(CorpusUnavailableError):
+        store.cache.gather(np.array([5]))
+
+
+def test_pager_unavailable_when_whole_read_also_fails(system):
+    store = _paged(system["base"])
+    plan = FaultPlan([FaultEvent("page_io_error", site="pager", start=0,
+                                 count=10 ** 6),
+                      FaultEvent("page_io_error", site="pager/whole",
+                                 start=0, count=10 ** 6)])
+    store.set_read_hook(plan.pager_hook())
+    with pytest.raises(CorpusUnavailableError):
+        store.cache.gather(np.array([5]))
+
+
+# ---------------------------------------------------------------------------
+# sharded partial failure + recovery
+# ---------------------------------------------------------------------------
+
+def test_sharded_one_shard_down_partial_and_recovers(system):
+    s = system
+    qs = np.random.default_rng(3).normal(size=(48, 16)).astype(np.float32)
+    ref_rt = ShardedContinuousRuntime(
+        s["engine"], s["measure"].params, s["sharded"], n_lanes=4,
+        query_dim=16, steps_per_tick=2)
+    ref = _drive(ref_rt, qs)
+
+    plan = FaultPlan([FaultEvent("shard_crash", site="shard:1/tick",
+                                 start=4, count=3)], seed=0)
+    rt = ShardedContinuousRuntime(
+        s["engine"], s["measure"].params, s["sharded"], n_lanes=4,
+        query_dim=16, steps_per_tick=2, k_failures=3, cooldown_rounds=4,
+        fault_plan=plan)
+    got = _drive(rt, qs)
+
+    assert set(got) == set(range(48))          # every rid resolves once
+    statuses = Counter(c.status for c in got.values())
+    assert statuses["partial"] > 0 and statuses["ok"] > 0
+    assert rt.health.n_opened >= 1
+    assert rt.health.states() == ["healthy", "healthy"]   # re-admitted
+    for rid, c in got.items():
+        if c.status == "ok":                   # unflagged => bit-identical
+            np.testing.assert_array_equal(c.ids, ref[rid].ids)
+            np.testing.assert_array_equal(c.scores, ref[rid].scores)
+        else:
+            assert c.status == "partial" and c.partial
+            assert c.record.partial
+            assert (c.ids >= 0).any()          # survivors still answered
+    m = rt.metrics.summary()
+    assert m["n_partial"] == statuses["partial"]
+
+
+def test_sharded_all_shards_down_empty_harvest(system):
+    s = system
+    plan = FaultPlan([FaultEvent("shard_crash", site="shard:0/tick",
+                                 start=0, count=50),
+                      FaultEvent("shard_crash", site="shard:1/tick",
+                                 start=0, count=50)])
+    rt = ShardedContinuousRuntime(
+        s["engine"], s["measure"].params, s["sharded"], n_lanes=4,
+        query_dim=16, steps_per_tick=2, k_failures=1, cooldown_rounds=100,
+        fault_plan=plan)
+    got = _drive(rt, s["queries"][:4])
+    assert len(got) == 4                       # resolves instead of hanging
+    for c in got.values():
+        assert c.status == "failed" and c.record.failed
+        assert (c.ids == -1).all() and (c.scores == -np.inf).all()
+    assert rt.metrics.summary()["n_failed"] == 4
+
+
+def test_merge_topk_all_invalid_window(system):
+    ids = np.full((1, 2, 5), -1, np.int32)
+    scores = np.random.default_rng(0).normal(size=(1, 2, 5)) \
+        .astype(np.float32)                    # scores of invalid ids ignored
+    m_ids, m_scores = merge_topk(ids, scores, k=5)
+    e_ids, e_scores = empty_topk(5)
+    np.testing.assert_array_equal(np.asarray(m_ids)[0], e_ids)
+    np.testing.assert_array_equal(np.asarray(m_scores)[0], e_scores)
+
+
+# ---------------------------------------------------------------------------
+# load shedding + graceful drain
+# ---------------------------------------------------------------------------
+
+def test_bounded_queue_sheds(system):
+    s = system
+    rt = ContinuousRuntime(s["engine"], s["measure"].params, s["base"],
+                           s["graph"].neighbors, n_lanes=2, query_dim=16,
+                           entry=s["graph"].entry, steps_per_tick=2,
+                           max_queue=2)
+    shed_rids = []
+    for i in range(6):                         # 2 queue slots, 4 over
+        rt.submit(s["queries"][i], rid=i)
+    comps = {c.rid: c for c in rt.pop_completions()}
+    assert len(comps) == 4
+    for c in comps.values():
+        assert c.status == "shed" and c.record.shed
+        assert (c.ids == -1).all()
+    while rt.queue or rt.in_flight:
+        rt.step_once()
+    done = {c.rid: c for c in rt.pop_completions()}
+    assert sum(c.status == "ok" for c in done.values()) == 2
+    m = rt.metrics.summary()
+    assert m["n_shed"] == 4 and m["n_completed"] == 2
+    assert m["queue_depth_max"] == 2
+
+
+def test_close_drains_gracefully(system):
+    s = system
+    rt = ContinuousRuntime(s["engine"], s["measure"].params, s["base"],
+                           s["graph"].neighbors, n_lanes=2, query_dim=16,
+                           entry=s["graph"].entry, steps_per_tick=2)
+    for i in range(5):
+        rt.submit(s["queries"][i], rid=i)
+    rt.step_once()
+    assert rt.in_flight == 2                   # lanes filled, rest queued
+    rt.close()
+    assert rt.in_flight == 0 and not rt.queue
+    done = {c.rid: c for c in rt.pop_completions()}
+    assert set(done) == set(range(5))          # every rid resolved once
+    statuses = Counter(c.status for c in done.values())
+    assert statuses["ok"] >= 2                 # in-flight lanes finished
+    assert statuses["ok"] + statuses["shed"] == 5
+    assert rt.submit(s["queries"][0], rid=99) == 99
+    assert rt.pop_completions()[-1].status == "shed"   # admits nothing new
+
+
+def test_sharded_shed_and_close(system):
+    s = system
+    rt = ShardedContinuousRuntime(
+        s["engine"], s["measure"].params, s["sharded"], n_lanes=2,
+        query_dim=16, steps_per_tick=2, max_queue=2)
+    for i in range(6):
+        rt.submit(s["queries"][i], rid=i)
+    done = {c.rid: c for c in rt.pop_completions()}
+    assert sum(c.status == "shed" for c in done.values()) == 4
+    while len(done) < 6:                       # the 2 admitted finish ok
+        for c in rt.step_once():
+            done[c.rid] = c
+    assert set(done) == set(range(6))
+    assert Counter(c.status for c in done.values()) \
+        == Counter({"shed": 4, "ok": 2})
+    rt.pop_completions()
+    rt.close()
+    assert rt.submit(s["queries"][0], rid=99) == 99    # late submit: shed
+    assert rt.pop_completions()[-1].status == "shed"
+    assert rt.metrics.summary()["n_shed"] == 5
+
+
+def test_health_line_mentions_shard_states(system):
+    s = system
+    rt = ShardedContinuousRuntime(
+        s["engine"], s["measure"].params, s["sharded"], n_lanes=2,
+        query_dim=16)
+    line = rt.format_health()
+    assert "shards=[healthy,healthy]" in line and "shed=0" in line

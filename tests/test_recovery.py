@@ -1,0 +1,205 @@
+"""Crash-safe mutation recovery (DESIGN.md §12): torn-journal tolerance,
+the append-fsync commit point, the ``journal_applied`` watermark, and the
+headline contract — a kill injected at ANY durability stage of ANY op
+recovers to the bit-exact uninterrupted index (at most the un-journaled
+op is lost, and re-applying it restores equality)."""
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.graph import (DurableIndex, MutationJournal, append_journal,
+                         apply_op, build_l2_graph, insert_rows, load_index,
+                         load_journal, save_index, save_journal)
+from repro.serving import FaultEvent, FaultPlan, InjectedKill
+
+RNG = np.random.default_rng(11)
+BASE = RNG.normal(size=(80, 8)).astype(np.float32)
+NEW_ROWS = RNG.normal(size=(6, 8)).astype(np.float32)
+DEL_IDS = [3, 17, 40, 81]          # 81: one of the freshly inserted rows
+
+# the canonical mutation sequence the kill matrix sweeps (op index = the
+# per-stage invocation index of DurableIndex._commit's kill hooks)
+OPS = [("insert", lambda d: d.insert(NEW_ROWS, k_candidates=16)),
+       ("delete", lambda d: d.delete(DEL_IDS)),
+       ("compact", lambda d: d.compact())]
+
+
+@pytest.fixture(scope="module")
+def ref(tmp_path_factory):
+    """The uninterrupted twin: same lineage with no kills."""
+    graph = build_l2_graph(BASE, m=4, k_construction=12)
+    d = DurableIndex.create(str(tmp_path_factory.mktemp("ref")), graph)
+    for _, fn in OPS:
+        fn(d)
+    return {"graph": graph, "final": d.index}
+
+
+def _assert_same_index(a, b):
+    np.testing.assert_array_equal(np.asarray(a.base), np.asarray(b.base))
+    np.testing.assert_array_equal(np.asarray(a.neighbors),
+                                  np.asarray(b.neighbors))
+    assert int(a.entry) == int(b.entry)
+    ta = None if a.tombstones is None else np.asarray(a.tombstones, bool)
+    tb = None if b.tombstones is None else np.asarray(b.tombstones, bool)
+    if ta is None or tb is None:       # None <=> nothing tombstoned
+        assert ta is None or not ta.any()
+        assert tb is None or not tb.any()
+    else:
+        np.testing.assert_array_equal(ta, tb)
+
+
+# ---------------------------------------------------------------------------
+# journal file damage tolerance
+# ---------------------------------------------------------------------------
+
+def _jl(*records) -> str:
+    return "\n".join(json.dumps(r) for r in records) + "\n"
+
+
+def test_journal_jsonl_round_trip(tmp_path):
+    j = MutationJournal(n_base=80)
+    j.record("insert", n=2, k_candidates=16, rows=NEW_ROWS[:2].tolist())
+    j.record("delete", ids=[1, 2])
+    j.record("compact", n_dropped=2)
+    save_journal(str(tmp_path), j)
+    j2 = load_journal(str(tmp_path))
+    assert j2.n_base == 80 and j2.ops == j.ops
+    assert j2.n_inserted == 2 and j2.n_deleted == 2
+
+
+def test_append_journal_is_incremental_and_needs_header(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        append_journal(str(tmp_path), {"op": "compact", "n_dropped": 0})
+    save_journal(str(tmp_path), MutationJournal(n_base=80))
+    append_journal(str(tmp_path), {"op": "delete", "ids": [5]})
+    append_journal(str(tmp_path), {"op": "compact", "n_dropped": 1})
+    j = load_journal(str(tmp_path))
+    assert j.ops == [{"op": "delete", "ids": [5]},
+                     {"op": "compact", "n_dropped": 1}]
+
+
+def test_legacy_whole_file_journal_still_loads(tmp_path):
+    legacy = {"n_base": 80, "ops": [{"op": "delete", "ids": [2]}]}
+    (tmp_path / "journal.json").write_text(json.dumps(legacy))
+    j = load_journal(str(tmp_path))
+    assert j.n_base == 80 and j.ops == legacy["ops"]
+
+
+def test_torn_final_line_truncates_with_warning(tmp_path):
+    good = {"op": "delete", "ids": [1]}
+    (tmp_path / "journal.json").write_text(
+        _jl({"n_base": 80}, good) + '{"op": "ins')      # kill mid-append
+    with pytest.warns(RuntimeWarning, match="torn/garbage"):
+        j = load_journal(str(tmp_path))
+    assert j.n_base == 80 and j.ops == [good]
+
+
+def test_garbage_ends_the_trustworthy_prefix(tmp_path):
+    good = {"op": "delete", "ids": [1]}
+    after = {"op": "compact", "n_dropped": 0}
+    (tmp_path / "journal.json").write_text(
+        _jl({"n_base": 80}, good) + "\x00\x7fgarbage\n" + _jl(after))
+    with pytest.warns(RuntimeWarning, match="2 torn/garbage"):
+        j = load_journal(str(tmp_path))
+    assert j.ops == [good]             # everything past the tear is dropped
+
+
+def test_empty_or_headerless_journal_is_unmutated(tmp_path):
+    (tmp_path / "journal.json").write_text("")
+    with pytest.warns(RuntimeWarning, match="no readable header"):
+        assert load_journal(str(tmp_path)) is None
+    (tmp_path / "journal.json").write_text("complete nonsense\n")
+    with pytest.warns(RuntimeWarning):
+        assert load_journal(str(tmp_path)) is None
+    assert load_journal(str(tmp_path / "nowhere")) is None
+
+
+# ---------------------------------------------------------------------------
+# op replay
+# ---------------------------------------------------------------------------
+
+def test_apply_op_rejects_unreplayable_records(ref):
+    with pytest.raises(ValueError, match="cannot be replayed"):
+        apply_op(ref["graph"], {"op": "insert", "n": 3})   # payload-less
+    with pytest.raises(ValueError, match="unknown journal op"):
+        apply_op(ref["graph"], {"op": "transmogrify"})
+
+
+def test_recover_legacy_dir_does_not_double_replay(tmp_path, ref):
+    # legacy flow: save AFTER mutating, no journal_applied watermark =>
+    # the journaled ops are already absorbed by the arrays — recovery must
+    # default to all-applied, not replay them a second time
+    from repro.graph.mutate import recover_index
+
+    j = MutationJournal(n_base=80)
+    g2 = insert_rows(ref["graph"], NEW_ROWS, k_candidates=16, journal=j)
+    save_index(str(tmp_path), g2)
+    save_journal(str(tmp_path), j)
+    rec, j2 = recover_index(str(tmp_path))
+    assert rec.n == g2.n               # a replay would have grown it again
+    _assert_same_index(rec, g2)
+    assert j2.ops == j.ops
+
+
+# ---------------------------------------------------------------------------
+# the kill matrix: die at every stage of every op, recover bit-exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stage", ["pre-journal", "post-journal"])
+@pytest.mark.parametrize("op_i", [0, 1, 2])
+def test_kill_mid_mutation_recovers_exactly(tmp_path, ref, stage, op_i):
+    plan = FaultPlan([FaultEvent("kill", site=f"mutate/{stage}",
+                                 start=op_i)])
+    d = DurableIndex.create(str(tmp_path), ref["graph"],
+                            kill_hook=plan.kill_hook())
+    with pytest.raises(InjectedKill):
+        for _, fn in OPS:
+            fn(d)
+    d2 = DurableIndex.open(str(tmp_path))
+    committed = len(d2.journal.ops)
+    # pre-journal death loses the op entirely; post-journal death loses
+    # nothing (the fsynced line replays on recovery)
+    assert committed == op_i + (1 if stage == "post-journal" else 0)
+    for _, fn in OPS[committed:]:      # redo what the crash lost
+        fn(d2)
+    _assert_same_index(d2.index, ref["final"])
+
+
+@pytest.mark.parametrize("stage", ["pre-save", "post-save"])
+def test_kill_during_checkpoint_keeps_a_durable_baseline(tmp_path, ref,
+                                                         stage):
+    # create() runs checkpoint #0, so start=1 targets the explicit
+    # checkpoint after the mutations
+    plan = FaultPlan([FaultEvent("kill", site=f"mutate/{stage}", start=1)])
+    d = DurableIndex.create(str(tmp_path), ref["graph"],
+                            kill_hook=plan.kill_hook())
+    for _, fn in OPS:
+        fn(d)
+    with pytest.raises(InjectedKill):
+        d.checkpoint()
+    d2 = DurableIndex.open(str(tmp_path))
+    _assert_same_index(d2.index, ref["final"])
+    if stage == "pre-save":
+        # baseline is still checkpoint #0: the whole journal replayed
+        assert len(d2.journal.ops) == len(OPS)
+        assert load_index(str(tmp_path)).n == ref["graph"].n
+    else:
+        # save landed before the kill: arrays absorb every op, watermark
+        # says so, and the on-disk index already IS the final state
+        _assert_same_index(load_index(str(tmp_path)), ref["final"])
+
+
+def test_checkpoint_then_reopen_round_trips(tmp_path, ref):
+    d = DurableIndex.create(str(tmp_path), ref["graph"])
+    for _, fn in OPS:
+        fn(d)
+    d.checkpoint()
+    d2 = DurableIndex.open(str(tmp_path))
+    assert len(d2.journal.ops) == len(OPS)
+    _assert_same_index(d2.index, ref["final"])
+    _assert_same_index(load_index(str(tmp_path)), ref["final"])
