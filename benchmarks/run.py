@@ -85,15 +85,19 @@ def provenance(timestamp: float) -> dict:
 
 def write_suite_json(suite: str, rows, ok: bool, quick: bool,
                      root: str = REPO_ROOT,
-                     timestamp: float | None = None) -> str:
+                     timestamp: float | None = None,
+                     extra_provenance: dict | None = None) -> str:
     path = os.path.join(root, f"BENCH_{suite}.json")
     timestamp = time.time() if timestamp is None else timestamp
+    prov = provenance(timestamp)
+    if extra_provenance:
+        prov.update(extra_provenance)
     payload = {
         "suite": suite,
         "ok": ok,
         "quick": quick,
         "unix_time": int(timestamp),
-        "provenance": provenance(timestamp),
+        "provenance": prov,
         "rows": [_parse_row(r) for r in rows],
     }
     with open(path, "w") as f:
@@ -145,6 +149,10 @@ def main() -> None:
                          "suite's rows against this prior BENCH json "
                          "(matched by suite name), print per-row speedup "
                          "factors, and flag rows that regressed >10%%")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the whole run "
+                         "into this directory (view with TensorBoard or "
+                         "Perfetto)")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -160,6 +168,12 @@ def main() -> None:
                             fig6_projection, fig7_begin, graph_build,
                             kernels_micro, residency, roofline, serving_load,
                             table2_breakdown)
+    from repro.obs import profile_trace
+
+    # Suites whose rows were produced with telemetry attached stamp that
+    # into their BENCH provenance, so trajectory diffs never compare a
+    # traced p50 against an untraced one unknowingly.
+    extra_prov = {"serving": {"tracing": True, "trace_sample": 16}}
 
     jobs = [
         ("fig4", lambda: fig4_recall_qps.run(
@@ -183,30 +197,34 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     regressions = []
-    for name, fn in jobs:
-        if only and name not in only:
-            continue
-        ok = True
-        try:
-            rows = list(fn())
-            for row in rows:
-                print(row, flush=True)
-        except Exception as e:  # noqa: BLE001
-            failures += 1
-            ok = False
-            rows = [f"{name},0.00,ERROR={e!r}"]
-            print(rows[0], flush=True)
-            traceback.print_exc(file=sys.stderr)
-        if not args.no_json:
-            write_suite_json(name, rows, ok, quick, timestamp=run_stamp)
-        if old_payload is not None and old_payload.get("suite") == name:
-            new_payload = {"rows": [_parse_row(r) for r in rows]}
-            lines, regressed = compare_payloads(old_payload, new_payload)
-            print(f"--- compare vs {args.compare} (suite={name}) ---",
-                  flush=True)
-            for line in lines:
-                print(line, flush=True)
-            regressions += regressed
+    with profile_trace(args.profile_dir):
+        for name, fn in jobs:
+            if only and name not in only:
+                continue
+            ok = True
+            try:
+                rows = list(fn())
+                for row in rows:
+                    print(row, flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                ok = False
+                rows = [f"{name},0.00,ERROR={e!r}"]
+                print(rows[0], flush=True)
+                traceback.print_exc(file=sys.stderr)
+            if not args.no_json:
+                write_suite_json(name, rows, ok, quick, timestamp=run_stamp,
+                                 extra_provenance=extra_prov.get(name))
+            if old_payload is not None and old_payload.get("suite") == name:
+                new_payload = {"rows": [_parse_row(r) for r in rows]}
+                lines, regressed = compare_payloads(old_payload, new_payload)
+                print(f"--- compare vs {args.compare} (suite={name}) ---",
+                      flush=True)
+                for line in lines:
+                    print(line, flush=True)
+                regressions += regressed
+    if args.profile_dir:
+        print(f"profiler trace -> {args.profile_dir}", flush=True)
     if regressions:
         print(f"REGRESSED ({len(regressions)}): {', '.join(regressions)}",
               flush=True)

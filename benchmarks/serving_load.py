@@ -35,6 +35,7 @@ from benchmarks.common import csv_row
 from repro.core import (EngineOptions, SearchConfig, build_engine,
                         mlp_measure)
 from repro.graph import build_l2_graph
+from repro.obs import Registry, Tracer
 from repro.serving import (ContinuousRuntime, Request, ServingMetrics,
                            latency_summary, poisson_arrivals)
 
@@ -109,15 +110,25 @@ def run_oneshot(engine, measure, base_j, nbrs_j, entry, stream, lanes: int
     return out
 
 
-def run_continuous(rt: ContinuousRuntime, stream,
-                   realtime: bool = True) -> dict:
+def run_continuous(rt: ContinuousRuntime, stream, realtime: bool = True,
+                   tracer=None, registry=None) -> dict:
     """One measured pass over a warmed runtime. The caller constructs (and
     ``warmup``s) the runtime ONCE and reuses it across repeats — a fresh
     runtime per repeat would recompile the jitted reset/tick pair every
-    time."""
+    time. ``tracer`` swaps per-request tracing in for this pass only (the
+    runtime is restored to its previous tracer afterwards); ``registry``
+    binds the fresh ServingMetrics for Prometheus exposition."""
     rt.pop_completions()
     rt.metrics = ServingMetrics(rt.n_lanes)
-    rt.run_stream(stream, realtime=realtime)
+    if registry is not None:
+        rt.bind_registry(registry)
+    prev = rt.tracer
+    if tracer is not None:
+        rt.tracer = tracer
+    try:
+        rt.run_stream(stream, realtime=realtime)
+    finally:
+        rt.tracer = prev
     return rt.metrics.summary()
 
 
@@ -127,7 +138,9 @@ def _fmt(s: dict) -> str:
 
 
 def _run_impl(quick: bool, n_items: int, dim: int, n_requests: int,
-              lanes: int, steps_per_tick: int, repeats: int = 3):
+              lanes: int, steps_per_tick: int, repeats: int = 3,
+              trace_sample: int = 16, trace_out: str = None,
+              metrics_out: str = None):
     if quick:
         n_items, n_requests, lanes = 6000, 128, 16
     base, graph, measure, cfg, engine = build_setup(n_items, dim, ef=48)
@@ -147,9 +160,9 @@ def _run_impl(quick: bool, n_items: int, dim: int, n_requests: int,
     one = max((run_oneshot(engine, measure, base_j, nbrs_j, graph.entry,
                            backlog, lanes) for _ in range(repeats)),
               key=lambda s: s["qps"])
-    cont = max((run_continuous(rt, backlog, realtime=False)
-                for _ in range(repeats)),
-               key=lambda s: s["qps"])
+    cont_runs = [run_continuous(rt, backlog, realtime=False)
+                 for _ in range(repeats)]
+    cont = max(cont_runs, key=lambda s: s["qps"])
     speedup = cont["qps"] / one["qps"]
     straggle = one["iters_max"] / one["iters_mean"]
     rows.append(csv_row(
@@ -167,6 +180,32 @@ def _run_impl(quick: bool, n_items: int, dim: int, n_requests: int,
         f"continuous_vs_oneshot={speedup:.2f}x"
         f";straggler_ratio={straggle:.1f}x"
         f";gate_continuous_ge_oneshot={speedup >= 1.0}"))
+
+    # 1b) telemetry overhead: the same backlog drain with per-request
+    #     tracing at 1/``trace_sample`` sampling (and metric exposition
+    #     bound, when requested). The observability tax must stay under
+    #     5% p50 vs tracing off — min-of-repeats on both sides, same
+    #     de-noising as the capacity comparison above.
+    tracer = Tracer(sample=trace_sample, capacity=8192)
+    registry = Registry() if metrics_out else None
+    traced_runs = [run_continuous(rt, backlog, realtime=False,
+                                  tracer=tracer, registry=registry)
+                   for _ in range(repeats)]
+    traced = max(traced_runs, key=lambda s: s["qps"])
+    base_p50 = min(s["p50_ms"] for s in cont_runs)
+    traced_p50 = min(s["p50_ms"] for s in traced_runs)
+    overhead = traced_p50 / base_p50 - 1.0
+    rows.append(csv_row(
+        f"serving_traced_backlog_s{trace_sample}",
+        1e6 / traced["qps"], _fmt(traced)
+        + f";trace_overhead_p50={overhead * 100:+.1f}%"
+        + f";spans={tracer.n_emitted}"
+        + f";gate_overhead_lt_5pct={overhead < 0.05}"))
+    if trace_out:
+        tracer.export_jsonl(trace_out)
+    if metrics_out:
+        with open(metrics_out, "w") as fh:
+            fh.write(registry.render_text())
 
     # 2) open-loop Poisson at ~80% of the measured oneshot capacity: the
     #    regime the ISSUE's 'equal offered load' QPS comparison lives in
@@ -189,6 +228,11 @@ def _run_impl(quick: bool, n_items: int, dim: int, n_requests: int,
         failures.append(
             f"continuous backlog QPS {cont['qps']:.1f} < oneshot "
             f"{one['qps']:.1f} ({speedup:.2f}x)")
+    if overhead >= 0.05:
+        failures.append(
+            f"tracing overhead {overhead * 100:.1f}% p50 at "
+            f"1/{trace_sample} sampling (traced {traced_p50:.1f}ms vs "
+            f"{base_p50:.1f}ms) >= 5% budget")
     return rows, failures
 
 
@@ -214,10 +258,21 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--lanes", type=int, default=32)
     ap.add_argument("--steps-per-tick", type=int, default=8)
+    ap.add_argument("--trace-sample", type=int, default=16,
+                    help="trace 1/N requests in the telemetry-overhead "
+                         "pass (metric used by the <5%% gate)")
+    ap.add_argument("--trace-out", default=None,
+                    help="export the traced pass's spans as JSONL")
+    ap.add_argument("--metrics-out", default=None,
+                    help="export Prometheus-text metrics from the traced "
+                         "pass")
     args = ap.parse_args()
     rows, failures = _run_impl(args.smoke, args.n_items, args.dim,
                                args.requests, args.lanes,
-                               args.steps_per_tick)
+                               args.steps_per_tick,
+                               trace_sample=args.trace_sample,
+                               trace_out=args.trace_out,
+                               metrics_out=args.metrics_out)
     print("name,us_per_call,derived")
     for row in rows:
         print(row, flush=True)

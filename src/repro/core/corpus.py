@@ -58,6 +58,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.obs.trace import NULL_TRACER
+
 CORPUS_DTYPES = ("float32", "bfloat16", "int8")
 RESIDENCY_KINDS = ("whole", "paged")
 
@@ -311,6 +313,12 @@ class _PageCache:
         self.read_hook: Optional[Callable[[int, int], None]] = None
         self._whole: Optional[np.ndarray] = None
         self._whole_scales: Optional[np.ndarray] = None
+        # telemetry (DESIGN.md §13): page_fault / fallback spans, emitted
+        # with site="pager" and no rid (a fault serves whichever lanes
+        # share the tick); NullTracer default = one attribute lookup on
+        # the hit path. NOTE gathers run inside jax.pure_callback — the
+        # tracer's deque append is thread-safe under the GIL.
+        self.tracer = NULL_TRACER
 
     def _read_block(self, lo: int, hi: int, pid: int) -> tuple:
         """One physical read with bounded exponential-backoff retries —
@@ -347,12 +355,20 @@ class _PageCache:
                 f"page read failed after {self.policy.max_retries} retries "
                 f"and the whole payload ({nbytes}B) exceeds "
                 f"fallback_bytes={limit}") from cause
+        tr = self.tracer
+        t0 = time.perf_counter() if tr.enabled else 0.0
         try:
             self._whole, self._whole_scales = self._read_block(0, self.n, -1)
         except OSError as err:
+            if tr.enabled:
+                tr.emit("fallback", t0, time.perf_counter(), site="pager",
+                        rows=self.n, failed=True)
             raise CorpusUnavailableError(
                 f"page read failed after {self.policy.max_retries} retries "
                 f"and the whole-payload fallback read failed too") from err
+        if tr.enabled:
+            tr.emit("fallback", t0, time.perf_counter(), site="pager",
+                    rows=self.n)
         self.stats.fallback = "whole"
         self._pages.clear()                 # page copies are redundant now
         self.stats.resident_bytes = nbytes
@@ -361,11 +377,25 @@ class _PageCache:
 
     def _fault(self, pid: int) -> None:
         s, e = pid * self.page_rows, min((pid + 1) * self.page_rows, self.n)
+        tr = self.tracer
+        t0 = time.perf_counter() if tr.enabled else 0.0
+        errs0 = self.stats.io_errors
         try:
             payload, scales = self._read_block(s, e, pid)
         except OSError as err:
+            if tr.enabled:
+                tr.emit("page_fault", t0, time.perf_counter(), site="pager",
+                        pid=int(pid), failed=True,
+                        io_errors=self.stats.io_errors - errs0)
             self._fallback_whole(err)
             return
+        if tr.enabled:
+            kw = {"pid": int(pid), "rows": int(e - s)}
+            n_err = self.stats.io_errors - errs0
+            if n_err:            # retry-absorbed errors, visible in traces
+                kw["io_errors"] = n_err
+            tr.emit("page_fault", t0, time.perf_counter(), site="pager",
+                    **kw)
         nbytes = payload.nbytes + (0 if scales is None else scales.nbytes)
         self._pages[pid] = (payload, scales, nbytes)
         self.stats.faults += 1
@@ -479,6 +509,54 @@ class PagedCorpusStore:
         """Install a fault-injection read hook (see ``_PageCache.read_hook``;
         typically ``FaultPlan.pager_hook()``). None uninstalls."""
         self.cache.read_hook = hook
+
+    def set_tracer(self, tracer) -> None:
+        """Route pager spans (page_fault / fallback, site="pager") into an
+        ``obs.Tracer``; pass ``NULL_TRACER`` to disable again."""
+        self.cache.tracer = tracer
+
+    def bind_registry(self, registry, shard: str = "0"):
+        """Adapter into an ``obs.Registry``: pager counters/gauges are
+        copied out of ``stats_snapshot()`` at exposition time — nothing
+        is added to the fault path."""
+        labels = {"shard": str(shard)}
+        c_hits = registry.counter("repro_pager_hits_total",
+                                  "page-cache hits", labelnames=("shard",))
+        c_faults = registry.counter("repro_pager_faults_total",
+                                    "page faults (physical page reads)",
+                                    labelnames=("shard",))
+        c_evic = registry.counter("repro_pager_evictions_total",
+                                  "LRU page evictions",
+                                  labelnames=("shard",))
+        c_retry = registry.counter("repro_pager_retries_total",
+                                   "physical reads re-attempted after "
+                                   "OSError", labelnames=("shard",))
+        c_ioerr = registry.counter("repro_pager_io_errors_total",
+                                   "OSErrors observed by the pager",
+                                   labelnames=("shard",))
+        g_res = registry.gauge("repro_pager_resident_bytes",
+                               "current page-cache footprint",
+                               labelnames=("shard",))
+        g_peak = registry.gauge("repro_pager_peak_resident_bytes",
+                                "page-cache footprint high-water mark",
+                                labelnames=("shard",))
+        g_fall = registry.gauge("repro_pager_degraded",
+                                "1 when degraded to whole residency",
+                                labelnames=("shard",))
+
+        def _collect():
+            st = self.stats_snapshot()
+            c_hits.labels(**labels).set_to(st.hits)
+            c_faults.labels(**labels).set_to(st.faults)
+            c_evic.labels(**labels).set_to(st.evictions)
+            c_retry.labels(**labels).set_to(st.retries)
+            c_ioerr.labels(**labels).set_to(st.io_errors)
+            g_res.labels(**labels).set(st.resident_bytes)
+            g_peak.labels(**labels).set(st.peak_resident_bytes)
+            g_fall.labels(**labels).set(1.0 if st.fallback else 0.0)
+
+        registry.register_collect(_collect)
+        return registry
 
     def take(self, ids: jax.Array, in_bounds: bool = False) -> jax.Array:
         """Page-fault-aware gather: same (..., D) float32 rows as the

@@ -566,81 +566,95 @@ class ExpansionEngine:
     #    stage from slices of it.
     def step(self, params, store: CorpusStore, neighbors, queries, qs_flat,
              state: EngineState) -> EngineState:
+        # jax.named_scope labels the HLO per stage (visible in --profile-dir
+        # captures and compiled dumps); trace-time metadata only — the
+        # emitted program and its numerics are bit-identical
         Q = queries.shape[0]
-        s, pop = self.pop(state)
+        with jax.named_scope("repro_pop"):
+            s, pop = self.pop(state)
 
-        nbr = neighbors[pop.fid]                       # (Q, B)
-        nbr_safe = jnp.maximum(nbr, 0)
-        valid = (nbr >= 0) & ~bit_test_rows(s.visited, nbr) \
-            & pop.active[:, None]
+            nbr = neighbors[pop.fid]                   # (Q, B)
+            nbr_safe = jnp.maximum(nbr, 0)
+            valid = (nbr >= 0) & ~bit_test_rows(s.visited, nbr) \
+                & pop.active[:, None]
 
         use_tile = self._use_tile_plan(store, neighbors.shape[1], Q)
-        if use_tile:
-            ids = jnp.concatenate([pop.fid[:, None], nbr_safe], axis=1)
-            tile = jax.lax.optimization_barrier(
-                store.take(ids, in_bounds=True))
-            x = tile[:, 0, :]                          # (Q, D) f32
-            nvecs = tile[:, 1:, :]                     # (Q, B, D)
-            if self.grad is not None:
+        with jax.named_scope("repro_grad"):
+            if use_tile:
+                ids = jnp.concatenate([pop.fid[:, None], nbr_safe], axis=1)
+                tile = jax.lax.optimization_barrier(
+                    store.take(ids, in_bounds=True))
+                x = tile[:, 0, :]                      # (Q, D) f32
+                nvecs = tile[:, 1:, :]                 # (Q, B, D)
+                if self.grad is not None:
+                    _, g = self.grad(params, x, queries)
+                    n_grad = s.n_grad + pop.active.astype(jnp.int32)
+                else:
+                    g, n_grad = None, s.n_grad
+            elif self.grad_fused is not None:
+                # the fused grad stage gathers (and dequantizes) the
+                # frontier rows in-kernel and hands them back for the rank
+                # stage — the (Q, D) block never stages through fp32 HBM
+                _, g, x = self.grad_fused(params, store, pop.fid, queries)
+                n_grad = s.n_grad + pop.active.astype(jnp.int32)
+            elif self.grad is not None:
+                x = store.take(pop.fid)                # (Q, D) f32
                 _, g = self.grad(params, x, queries)
                 n_grad = s.n_grad + pop.active.astype(jnp.int32)
             else:
+                x = store.take(pop.fid)                # (Q, D) f32
                 g, n_grad = None, s.n_grad
-        elif self.grad_fused is not None:
-            # the fused grad stage gathers (and dequantizes) the frontier
-            # rows in-kernel and hands them back for the rank stage — the
-            # (Q, D) block never stages through fp32 HBM
-            _, g, x = self.grad_fused(params, store, pop.fid, queries)
-            n_grad = s.n_grad + pop.active.astype(jnp.int32)
-        elif self.grad is not None:
-            x = store.take(pop.fid)                    # (Q, D) f32
-            _, g = self.grad(params, x, queries)
-            n_grad = s.n_grad + pop.active.astype(jnp.int32)
-        else:
-            x = store.take(pop.fid)                    # (Q, D) f32
-            g, n_grad = None, s.n_grad
 
-        if self.rank_fused is not None and not use_tile:
-            sel_idx, sel_mask = self.rank_fused(x, g, store, nbr_safe, valid)
-            nvecs = None
-        else:
-            if not use_tile:
-                nvecs = store.take(nbr_safe)           # (Q, B, D)
-            sel_idx, sel_mask = self.rank(x, g, nvecs, valid)     # (Q, C)
-        sel_ids = jnp.take_along_axis(nbr, sel_idx, axis=1)
+        with jax.named_scope("repro_rank"):
+            if self.rank_fused is not None and not use_tile:
+                sel_idx, sel_mask = self.rank_fused(x, g, store, nbr_safe,
+                                                    valid)
+                nvecs = None
+            else:
+                if not use_tile:
+                    nvecs = store.take(nbr_safe)       # (Q, B, D)
+                sel_idx, sel_mask = self.rank(x, g, nvecs, valid)  # (Q, C)
+            sel_ids = jnp.take_along_axis(nbr, sel_idx, axis=1)
 
         C = sel_idx.shape[1]
-        if self.measure_fused is not None and not use_tile:
-            flat_scores = self.measure_fused(
-                params, store,
-                jnp.maximum(sel_ids, 0).reshape(Q * C), qs_flat)
-        else:
-            # sel_idx comes from top-k over axis 1, so it's in-bounds by
-            # construction — the tile plan drops the out-of-bounds select
-            mode = "clip" if use_tile else None
-            sel_vecs = jnp.take_along_axis(nvecs, sel_idx[..., None], axis=1,
-                                           mode=mode)
-            flat_scores = self.measure(params, sel_vecs.reshape(Q * C, -1),
-                                       qs_flat)
-        scores = jnp.where(sel_mask, flat_scores.reshape(Q, C), -jnp.inf)
-        if store.tombstones is not None:
-            # streaming deletes: tombstoned candidates score -inf — the
-            # padded-row convention of the sharded merge — so they stay
-            # traversable (their edges still route) but never enter results
-            scores = jnp.where(bit_test_global(store.tombstones, sel_ids),
-                               -jnp.inf, scores)
+        with jax.named_scope("repro_measure"):
+            if self.measure_fused is not None and not use_tile:
+                flat_scores = self.measure_fused(
+                    params, store,
+                    jnp.maximum(sel_ids, 0).reshape(Q * C), qs_flat)
+            else:
+                # sel_idx comes from top-k over axis 1, so it's in-bounds
+                # by construction — the tile plan drops the out-of-bounds
+                # select
+                mode = "clip" if use_tile else None
+                sel_vecs = jnp.take_along_axis(nvecs, sel_idx[..., None],
+                                               axis=1, mode=mode)
+                flat_scores = self.measure(params,
+                                           sel_vecs.reshape(Q * C, -1),
+                                           qs_flat)
+            scores = jnp.where(sel_mask, flat_scores.reshape(Q, C),
+                               -jnp.inf)
+            if store.tombstones is not None:
+                # streaming deletes: tombstoned candidates score -inf —
+                # the padded-row convention of the sharded merge — so they
+                # stay traversable (their edges still route) but never
+                # enter results
+                scores = jnp.where(
+                    bit_test_global(store.tombstones, sel_ids),
+                    -jnp.inf, scores)
 
-        s = s._replace(
-            visited=bit_set_rows(s.visited, sel_ids, sel_mask),
-            n_grad=n_grad,
-            n_eval=s.n_eval + jnp.sum(sel_mask, axis=1).astype(jnp.int32),
-            n_iters=s.n_iters + pop.active.astype(jnp.int32))
-        s = self.insert(s, sel_ids, scores, sel_mask)
+        with jax.named_scope("repro_insert"):
+            s = s._replace(
+                visited=bit_set_rows(s.visited, sel_ids, sel_mask),
+                n_grad=n_grad,
+                n_eval=s.n_eval + jnp.sum(sel_mask, axis=1).astype(jnp.int32),
+                n_iters=s.n_iters + pop.active.astype(jnp.int32))
+            s = self.insert(s, sel_ids, scores, sel_mask)
 
-        exhausted = ~jnp.any(~s.pool_expanded & jnp.isfinite(s.pool_scores),
-                             axis=1)
-        done = state.done | exhausted | (s.n_iters >= s.iter_cap) \
-            | ~pop.active
+            exhausted = ~jnp.any(
+                ~s.pool_expanded & jnp.isfinite(s.pool_scores), axis=1)
+            done = state.done | exhausted | (s.n_iters >= s.iter_cap) \
+                | ~pop.active
         return s._replace(done=done)
 
     def _result(self, final: EngineState) -> SearchResult:
@@ -681,8 +695,10 @@ class ExpansionEngine:
         if iter_caps is None:
             iter_caps = jnp.full((queries.shape[0],), self.cfg.iters(),
                                  jnp.int32)
-        return self._run_jit(params, base, neighbors, queries, entries,
-                             jnp.asarray(iter_caps, jnp.int32))
+        from repro.obs.profile import annotate
+        with annotate("repro/search"):
+            return self._run_jit(params, base, neighbors, queries, entries,
+                                 jnp.asarray(iter_caps, jnp.int32))
 
     # -- host loop: same stage code, one Python call per iteration. By
     #    default each (init, step) runs through a cached jax.jit so the

@@ -46,6 +46,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import time
 import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -371,7 +372,8 @@ class DurableIndex:
                  journal: MutationJournal, corpus_dtype: str = "float32",
                  page_rows: int = 4096,
                  kill_hook: Optional[Callable[[str], None]] = None,
-                 extra_meta: Optional[dict] = None):
+                 extra_meta: Optional[dict] = None, tracer=None):
+        from repro.obs.trace import NULL_TRACER
         self.path = path
         self.index = index
         self.journal = journal
@@ -379,6 +381,10 @@ class DurableIndex:
         self.page_rows = page_rows
         self.kill_hook = kill_hook
         self.extra_meta = dict(extra_meta or {})
+        # telemetry (DESIGN.md §13): "commit" spans wrap apply+journal,
+        # "journal" the fsynced commit point, "checkpoint" the re-save —
+        # all site="mutate", no rid (mutations aren't requests)
+        self.tracer = NULL_TRACER if tracer is None else tracer
 
     @classmethod
     def create(cls, path: str, index: GraphIndex,
@@ -412,9 +418,16 @@ class DurableIndex:
             self.kill_hook(stage)
 
     def _commit(self, op: dict, apply_fn) -> GraphIndex:
+        tr = self.tracer
+        t0 = time.perf_counter() if tr.enabled else 0.0
         self._kill("pre-journal")       # die here => op fully lost (never
         new_index = apply_fn(self.index)  # journaled, never applied)
+        tj = time.perf_counter() if tr.enabled else 0.0
         append_journal(self.path, op)   # <- commit point
+        if tr.enabled:
+            now = time.perf_counter()
+            tr.emit("journal", tj, now, site="mutate", op=op["op"])
+            tr.emit("commit", t0, now, site="mutate", op=op["op"])
         self._kill("post-journal")      # die here => op replays on recovery
         self.index = new_index
         self.journal.ops.append(op)
@@ -445,6 +458,8 @@ class DurableIndex:
         the two leaves index and journal consistent (same op count)."""
         from repro.graph.io import save_index
 
+        tr = self.tracer
+        t0 = time.perf_counter() if tr.enabled else 0.0
         self._kill("pre-save")          # die here => previous checkpoint
         save_index(                     # survives, journal tail replays
             self.path, self.index, corpus_dtype=self.corpus_dtype,
@@ -452,5 +467,8 @@ class DurableIndex:
                         "journal_applied": len(self.journal.ops)},
             page_rows=self.page_rows)
         out = save_journal(self.path, self.journal)
+        if tr.enabled:
+            tr.emit("checkpoint", t0, time.perf_counter(), site="mutate",
+                    ops=len(self.journal.ops))
         self._kill("post-save")
         return out

@@ -47,6 +47,37 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 _DEFAULTS_PATH = pathlib.Path(__file__).with_name("tuning_defaults.json")
 _ENV_VAR = "REPRO_TUNING_CACHE"
 
+#: module-level tuning-cache accounting (process-lifetime totals). The
+#: cache itself stays file-backed and global-free; these counters exist so
+#: ``bind_registry`` can expose hit rates without touching lookup's path.
+CACHE_STATS = {"lookup_hits": 0, "lookup_misses": 0,
+               "sweeps": 0, "sweep_cache_hits": 0}
+
+
+def bind_registry(registry):
+    """Adapter into an ``obs.Registry``: autotune cache traffic as
+    counters, collected at exposition time from ``CACHE_STATS``."""
+    c_hit = registry.counter("repro_autotune_lookup_hits_total",
+                             "tile-config lookups answered from cache or "
+                             "shipped defaults")
+    c_miss = registry.counter("repro_autotune_lookup_misses_total",
+                              "tile-config lookups falling to the builtin "
+                              "default")
+    c_sweep = registry.counter("repro_autotune_sweeps_total",
+                               "measured tile sweeps actually run")
+    c_skip = registry.counter("repro_autotune_sweep_cache_hits_total",
+                              "requested sweeps skipped on a local cache "
+                              "hit")
+
+    def _collect():
+        c_hit.set_to(CACHE_STATS["lookup_hits"])
+        c_miss.set_to(CACHE_STATS["lookup_misses"])
+        c_sweep.set_to(CACHE_STATS["sweeps"])
+        c_skip.set_to(CACHE_STATS["sweep_cache_hits"])
+
+    registry.register_collect(_collect)
+    return registry
+
 #: kernels with a tunable entry (the engine-step plan plus the four trios)
 TUNABLE_KERNELS = (
     "engine_step", "neighbor_rank_fused", "deepfm_score_fused",
@@ -197,7 +228,9 @@ def lookup(kernel: str, q: int = 0, m: int = 0, d: int = 0,
                   shipped.get(wild)):
         cfg = _from_entry(entry)
         if cfg is not None:
+            CACHE_STATS["lookup_hits"] += 1
             return cfg
+    CACHE_STATS["lookup_misses"] += 1
     return None
 
 
@@ -261,7 +294,9 @@ def autotune(kernel: str, candidates: Sequence[TileConfig],
     if not force:
         cached = _from_entry(load_cache().get(key))
         if cached is not None:
+            CACHE_STATS["sweep_cache_hits"] += 1
             return cached
+    CACHE_STATS["sweeps"] += 1
     best, timings = sweep(candidates, bench)
     record(kernel, best, q=q, m=m, d=d, dtype=dtype, backend=backend,
            stats={"us": timings[f"{best.plan}:{best.bt}"] * 1e6,

@@ -38,6 +38,8 @@ from repro.core import (MEASURE_FAMILIES, EngineOptions, SearchConfig,
                         list_families, make_corpus_store,
                         make_family_measure, mlp_measure, recall,  # noqa: F401  (re-export compat)
                         search_legacy, search_measure)
+from repro.obs import (NULL_TRACER, Registry, Tracer, format_trace,
+                       profile_trace)
 from repro.graph import (GraphIndex, build_l2_graph, load_corpus_store,
                          load_index, load_index_meta, save_index)
 from repro.serving import (BATCH_BUCKETS, ContinuousRuntime, Request,  # noqa: F401  (re-export compat)
@@ -96,6 +98,18 @@ def serve_oneshot(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
     qps = args.batch * len(steady) / (sum(steady) / 1e3)
     lat = latency_summary(steady)
     iters = np.asarray(iters_all) if iters_all else np.asarray([0])
+    if args.metrics_json:
+        import json
+        summ = {"runtime": "oneshot", "qps": qps, **lat,
+                "evals_per_query": float(np.mean(evals)),
+                "iters_mean": float(iters.mean()),
+                "iters_max": float(iters.max()),
+                "recall": (float(first_recall)
+                           if first_recall is not None else None),
+                "n_batches": n_batches}
+        with open(args.metrics_json, "w") as f:
+            json.dump(summ, f, indent=1, sort_keys=True)
+        print(f"[serve] metrics json -> {args.metrics_json}")
     print(f"[serve] searcher={args.searcher} mode={args.mode} "
           f"measure={args.measure} "
           f"corpus_dtype={args.corpus_dtype} fused={options.fused} "
@@ -122,17 +136,27 @@ def serve_continuous(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
         fault_hook = fault_plan.tick_hook("tick")
         print(f"[serve] chaos: replaying {args.chaos} "
               f"(seed={fault_plan.seed}, {len(fault_plan.events)} event(s))")
+    tracer = (Tracer(sample=args.trace_sample)
+              if args.trace_sample else NULL_TRACER)
     runtime = ContinuousRuntime(engine, measure.params, corpus_arg, nbrs_j,
                                 n_lanes=args.lanes, query_dim=args.dim,
                                 entry=graph.entry,
                                 steps_per_tick=args.steps_per_tick,
                                 max_queue=args.max_queue,
-                                fault_hook=fault_hook)
+                                fault_hook=fault_hook, tracer=tracer)
     if fault_plan is not None and getattr(runtime.store, "is_paged", False):
         # page-read faults only make sense against a pager
         runtime.store.set_read_hook(fault_plan.pager_hook("pager"))
+    if tracer.enabled and getattr(runtime.store, "is_paged", False):
+        runtime.store.set_tracer(tracer)
     queries = rng.normal(size=(args.queries, args.dim)).astype(np.float32)
     runtime.warmup(queries[0])  # compile reset + tick off the clock
+    registry = None
+    if args.metrics_out:
+        registry = Registry()
+        runtime.bind_registry(registry)     # after warmup: see docstring
+        from repro.kernels import autotune
+        autotune.bind_registry(registry)
 
     arrivals = poisson_arrivals(args.queries, args.offered_qps, seed=1)
     stream = [Request(rid=i, query=queries[i], t_arrive=float(arrivals[i]),
@@ -140,6 +164,29 @@ def serve_continuous(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
               for i in range(args.queries)]
     completions = runtime.run_stream(stream,
                                      health_every_s=args.health_every)
+
+    def export_telemetry():
+        import json
+        if args.trace_out and tracer.enabled:
+            n = tracer.export_jsonl(args.trace_out)
+            print(f"[serve] traces -> {args.trace_out} ({n} spans, "
+                  f"1/{args.trace_sample} sampling)")
+            slow = max((c for c in completions
+                        if tracer.sampled(c.rid) and c.status == "ok"),
+                       key=lambda c: c.record.latency_ms, default=None)
+            if slow is not None:
+                print(f"[serve] slowest traced ok request:")
+                print(format_trace(tracer, slow.rid, sites=("pager",)))
+        if registry is not None:
+            with open(args.metrics_out, "w") as f:
+                f.write(registry.render_text())
+            print(f"[serve] metrics (prometheus text) -> "
+                  f"{args.metrics_out}")
+        if args.metrics_json:
+            with open(args.metrics_json, "w") as f:
+                json.dump(runtime.metrics.summary(), f, indent=1,
+                          sort_keys=True)
+            print(f"[serve] metrics json -> {args.metrics_json}")
 
     by_rid = {c.rid: c for c in completions}
     nr = min(16, args.queries)
@@ -152,6 +199,7 @@ def serve_continuous(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
               f"the recall window (degraded run)")
         print(runtime.format_health())
         print(runtime.metrics.report())
+        export_telemetry()
         return
     true_ids, _ = brute_force_topk(measure, base_j,
                                    jnp.asarray(queries[:nr]), args.k)
@@ -165,6 +213,7 @@ def serve_continuous(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
           f"recall@{args.k}={r:.3f}")
     print(runtime.format_health())
     print(runtime.metrics.report())
+    export_telemetry()
 
 
 def main() -> None:
@@ -210,6 +259,24 @@ def main() -> None:
                     metavar="SECONDS",
                     help="continuous runtime: print a [health] line at this "
                          "period while the stream drains")
+    ap.add_argument("--trace-sample", type=int, default=0, metavar="N",
+                    help="continuous runtime: trace every Nth request "
+                         "(rid %% N == 0) into per-request span trees "
+                         "(obs/trace.py, DESIGN.md §13); 0 = tracing off")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    metavar="TRACES.jsonl",
+                    help="export the trace ring buffer as JSONL after the "
+                         "stream drains (requires --trace-sample)")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    metavar="METRICS.prom",
+                    help="continuous runtime: write the obs.Registry in "
+                         "Prometheus text exposition format at exit")
+    ap.add_argument("--metrics-json", type=str, default=None, metavar="PATH",
+                    help="dump the final metrics summary() dict as JSON "
+                         "(machine-readable twin of the [serve] report)")
+    ap.add_argument("--profile-dir", type=str, default=None,
+                    help="capture a jax profiler trace of the whole serve "
+                         "run into this directory (TensorBoard/Perfetto)")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--alpha", type=float, default=1.01)
@@ -394,12 +461,15 @@ def main() -> None:
               "to the fused path; pass --fused or a non-fp32 "
               "--corpus-dtype)")
 
-    if args.runtime == "continuous":
-        serve_continuous(args, graph, measure, cfg, options, corpus_arg,
-                         nbrs_j, base_j, rng)
-    else:
-        serve_oneshot(args, graph, measure, cfg, options, corpus_arg,
-                      nbrs_j, base_j, rng)
+    with profile_trace(args.profile_dir):
+        if args.runtime == "continuous":
+            serve_continuous(args, graph, measure, cfg, options, corpus_arg,
+                             nbrs_j, base_j, rng)
+        else:
+            serve_oneshot(args, graph, measure, cfg, options, corpus_arg,
+                          nbrs_j, base_j, rng)
+    if args.profile_dir:
+        print(f"[serve] profiler trace -> {args.profile_dir}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,15 @@
+"""Unified telemetry: tracing, metric registry, profiling hooks.
+
+See DESIGN.md §13 for the span taxonomy and metric naming conventions.
+"""
+from repro.obs.profile import annotate, profile_trace
+from repro.obs.registry import DEFAULT_BUCKETS, Metric, Registry
+from repro.obs.trace import (NULL_TRACER, NullTracer, Span, Tracer,
+                             attribution, format_trace)
+
+__all__ = [
+    "annotate", "profile_trace",
+    "DEFAULT_BUCKETS", "Metric", "Registry",
+    "NULL_TRACER", "NullTracer", "Span", "Tracer",
+    "attribution", "format_trace",
+]

@@ -1,0 +1,52 @@
+"""Opt-in JAX profiler hooks.
+
+Two layers, both free when unused:
+
+- :func:`profile_trace` wraps ``jax.profiler.trace`` for a whole run
+  (``--profile-dir`` on serve.py / benchmarks.run); a ``None`` dir is a
+  no-op context.
+- :func:`annotate` names host-side stage boundaries with
+  ``jax.profiler.TraceAnnotation`` so device timelines line up with
+  the serving runtime's phases (``repro/tick``, ``repro/reset``,
+  ``repro/search``). Inside jitted code we use ``jax.named_scope``
+  instead (trace-time metadata, zero runtime cost) — see
+  core/engine.py.
+
+Both degrade to null contexts when the profiler is unavailable, so
+nothing here can take the serving path down.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+
+@contextlib.contextmanager
+def profile_trace(profile_dir: Optional[str]):
+    """Capture a jax profiler trace into ``profile_dir`` (viewable with
+    TensorBoard / Perfetto). ``None`` disables; a profiler start
+    failure degrades to a warning, never an exception."""
+    if not profile_dir:
+        yield
+        return
+    import jax
+    try:
+        cm = jax.profiler.trace(profile_dir)
+    except Exception as e:  # noqa: BLE001 - profiler backend optional
+        import warnings
+        warnings.warn(f"jax profiler unavailable ({e!r}); "
+                      "continuing without --profile-dir capture")
+        yield
+        return
+    with cm:
+        yield
+
+
+def annotate(name: str):
+    """Named host-span for the device timeline; null context if the
+    profiler annotation API is unavailable."""
+    try:
+        import jax
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:  # noqa: BLE001
+        return contextlib.nullcontext()

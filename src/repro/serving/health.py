@@ -97,5 +97,27 @@ class ShardHealthTracker:
     def n_opened(self) -> int:
         return sum(b.n_opened for b in self.breakers)
 
+    def bind_registry(self, registry):
+        """Adapter into an ``obs.Registry``: per-shard breaker state as a
+        coded gauge (0 healthy / 1 suspect / 2 half-open / 3 open) plus
+        the cumulative breaker-open count — collected at exposition time,
+        nothing on the serving path."""
+        code = {HEALTHY: 0, SUSPECT: 1, HALF_OPEN: 2, OPEN: 3}
+        g_state = registry.gauge(
+            "repro_health_shard_state",
+            "breaker state: 0 healthy, 1 suspect, 2 half-open, 3 open",
+            labelnames=("shard",))
+        c_opens = registry.counter(
+            "repro_health_breaker_opens_total",
+            "cumulative circuit-breaker open transitions")
+
+        def _collect():
+            for s, st in enumerate(self.states()):
+                g_state.labels(shard=str(s)).set(code[st])
+            c_opens.set_to(self.n_opened)
+
+        registry.register_collect(_collect)
+        return registry
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"ShardHealthTracker({self.states()!r})"

@@ -66,9 +66,63 @@ class ServingMetrics:
         self._lane_steps = 0
         self._queue_depth_last = 0
         self._queue_depth_max = 0
+        self._reg_live = None   # (requests, latency, queue_ms, evals,
+        #                          grads, iters) when bound to a Registry
+
+    def bind_registry(self, registry):
+        """Adapter into an ``obs.Registry`` (DESIGN.md §13): completed
+        requests / latency / engine counters update live at ``observe``
+        time; queue depth and occupancy are copied out at exposition via
+        a collect callback. The snapshot APIs (``summary``/``report``)
+        keep working unchanged — the registry is an additional view."""
+        self._reg_live = (
+            registry.counter("repro_serving_requests_total",
+                             "completed requests by final status",
+                             labelnames=("status",)),
+            registry.histogram("repro_serving_latency_ms",
+                               "end-to-end latency of answered "
+                               "(ok/partial) requests, ms"),
+            registry.histogram("repro_serving_queue_ms",
+                               "time-in-queue of answered requests, ms"),
+            registry.counter("repro_engine_evals_total",
+                             "measure forward evaluations over "
+                             "completed requests"),
+            registry.counter("repro_engine_grads_total",
+                             "gradient evaluations over completed requests"),
+            registry.counter("repro_engine_iters_total",
+                             "expansion iterations over completed requests"),
+        )
+        g_depth = registry.gauge("repro_serving_queue_depth",
+                                 "admission queue depth, last round")
+        g_depth_max = registry.gauge("repro_serving_queue_depth_max",
+                                     "admission queue depth high-water mark")
+        g_occ = registry.gauge("repro_serving_occupancy",
+                               "fraction of lane-steps carrying a live "
+                               "query")
+
+        def _collect():
+            g_depth.set(self._queue_depth_last)
+            g_depth_max.set(self._queue_depth_max)
+            g_occ.set(self.occupancy)
+
+        registry.register_collect(_collect)
+        return registry
 
     def observe(self, rec: RequestRecord) -> None:
         self.records.append(rec)
+        if self._reg_live is not None:
+            requests, latency, queue_ms, evals, grads, iters = self._reg_live
+            status = ("timeout" if rec.timed_out else
+                      "shed" if rec.shed else
+                      "failed" if rec.failed else
+                      "partial" if rec.partial else "ok")
+            requests.labels(status=status).inc()
+            if status in ("ok", "partial"):
+                latency.observe(rec.latency_ms)
+                queue_ms.observe(rec.queue_ms)
+            evals.inc(rec.n_eval)
+            grads.inc(rec.n_grad)
+            iters.inc(rec.n_iters)
 
     def observe_queue_depth(self, depth: int) -> None:
         """Admission-queue depth gauge, sampled once per serving round."""
@@ -102,6 +156,7 @@ class ServingMetrics:
                "n_shed": float(sum(r.shed for r in self.records)),
                "n_failed": float(sum(r.failed for r in self.records)),
                "n_partial": float(sum(r.partial for r in done)),
+               "queue_depth_last": float(self._queue_depth_last),
                "queue_depth_max": float(self._queue_depth_max),
                "occupancy": self.occupancy,
                "queue_p50_ms": percentile(queue, 50),
@@ -121,6 +176,14 @@ class ServingMetrics:
 
     def report(self, prefix: str = "[serve]") -> str:
         s = self.summary()
+        if not s["n_completed"]:
+            # zero completions (everything shed/failed/timed out): one
+            # clean line instead of a wall of nan-formatted percentiles
+            return (f"{prefix} completed=0 "
+                    f"timed_out={s['n_timed_out']:.0f} "
+                    f"shed={s['n_shed']:.0f} failed={s['n_failed']:.0f} "
+                    f"queue_depth_max={s['queue_depth_max']:.0f} "
+                    "— no completed requests, latency/QPS unavailable")
         straggle = (s["iters_max"] / s["iters_mean"]
                     if s["iters_mean"] else float("nan"))
         lines = [

@@ -42,6 +42,8 @@ import numpy as np
 
 from repro.core.corpus import as_corpus_store
 from repro.core.engine import ExpansionEngine, _freeze_done
+from repro.obs.profile import annotate
+from repro.obs.trace import NULL_TRACER
 from repro.serving.health import ShardHealthTracker
 from repro.serving.metrics import RequestRecord, ServingMetrics
 
@@ -102,7 +104,9 @@ class ContinuousRuntime:
                  now_fn: Callable[[], float] = time.perf_counter,
                  max_queue: Optional[int] = None,
                  fault_hook: Optional[Callable[[], float]] = None,
-                 shared_fns: Optional[tuple] = None):
+                 shared_fns: Optional[tuple] = None,
+                 tracer=NULL_TRACER, trace_site: str = "",
+                 trace_owner: bool = True):
         if n_lanes < 1:
             raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
         if steps_per_tick < 1:
@@ -125,6 +129,17 @@ class ContinuousRuntime:
         self.fault_hook = fault_hook
         self.tick_penalty_s = 0.0
         self._closing = False
+        # telemetry (DESIGN.md §13): spans go to the injected tracer; the
+        # NullTracer default keeps the disabled hot path at one attribute
+        # lookup per guard. ``trace_site`` labels this runtime's spans
+        # (the sharded runtime passes "shard:<s>"); ``trace_owner=False``
+        # means something above us (the sharded merge layer) owns the
+        # request root span's lifecycle — we only emit phase spans.
+        self.tracer = tracer
+        self.trace_site = trace_site
+        self._trace_owner = trace_owner
+        self._queue_spans: Dict[int, int] = {}
+        self._n_ticks = 0
 
         self.epoch = 0
         self._pending_index: Optional[tuple] = None
@@ -181,6 +196,13 @@ class ContinuousRuntime:
                budget_iters: Optional[int] = None) -> int:
         rid = rid if rid is not None else next(self._rid_gen)
         t = t_arrive if t_arrive is not None else self._now()
+        tr = self.tracer
+        if tr.enabled and tr.sampled(rid):
+            # idempotent: under the sharded fan-out the merge layer has
+            # already created this rid's root — we just parent to it
+            root = tr.root_for(rid, t0=t)
+            self._queue_spans[rid] = tr.begin(
+                "queue", t0=t, rid=rid, site=self.trace_site, parent=root)
         if self._closing or (self.max_queue is not None
                              and len(self.queue) >= self.max_queue):
             self._resolve_sentinel(rid, t, "shed")
@@ -204,6 +226,13 @@ class ContinuousRuntime:
                        rec, self.epoch, status=status)
         self.metrics.observe(rec)
         self.completions.append(c)
+        tr = self.tracer
+        if tr.enabled:
+            qs = self._queue_spans.pop(rid, None)
+            if qs is not None:
+                tr.end(qs, t1=now, status=status)
+            if self._trace_owner and tr.sampled(rid):
+                tr.finish_request(rid, t1=now, status=status)
         return c
 
     def complete_failed(self, rid: int,
@@ -281,6 +310,7 @@ class ContinuousRuntime:
         free = [l for l in range(self.n_lanes) if self._lane_req[l] is None]
         if not free or not self.queue:
             return dropped
+        tr = self.tracer
         mask = np.zeros((self.n_lanes,), bool)
         while free and self.queue:
             req = self.queue.popleft()
@@ -294,12 +324,23 @@ class ContinuousRuntime:
                 self.metrics.observe(rec)
                 c = Completion(req.rid, np.full((k,), -1, np.int32),
                                np.full((k,), -np.inf, np.float32),
-                               0, 0, 0, -1, rec, self.epoch)
+                               0, 0, 0, -1, rec, self.epoch,
+                               status="timeout")
                 self.completions.append(c)
                 dropped.append(c)
+                if tr.enabled:
+                    qs = self._queue_spans.pop(req.rid, None)
+                    if qs is not None:
+                        tr.end(qs, t1=now, status="timeout")
+                    if self._trace_owner and tr.sampled(req.rid):
+                        tr.finish_request(req.rid, t1=now, status="timeout")
                 continue
             lane = free.pop(0)
             mask[lane] = True
+            if tr.enabled:
+                qs = self._queue_spans.pop(req.rid, None)
+                if qs is not None:
+                    tr.end(qs, t1=now, lane=lane)
             self._lane_req[lane] = req
             self._lane_epoch[lane] = self.epoch
             self._admit_time[lane] = now
@@ -312,10 +353,11 @@ class ContinuousRuntime:
         if not mask.any():
             return dropped
         self._queries_j = jnp.asarray(self._queries_np)
-        self._state = self._reset_fn(
-            self.params, self.store, self._queries_j,
-            jnp.asarray(self._entries_np), self._state, jnp.asarray(mask),
-            jnp.asarray(self._caps_np))
+        with annotate("repro/reset"):
+            self._state = self._reset_fn(
+                self.params, self.store, self._queries_j,
+                jnp.asarray(self._entries_np), self._state,
+                jnp.asarray(mask), jnp.asarray(self._caps_np))
         return dropped
 
     def _tick(self) -> None:
@@ -328,8 +370,11 @@ class ContinuousRuntime:
             # (stall/slow tick) — the sharded runtime adds the penalty to
             # the measured tick time before its deadline check
             self.tick_penalty_s = float(self.fault_hook() or 0.0)
-        self._state = self._tick_fn(self.params, self.store, self.neighbors,
-                                    self._queries_j, self._state)
+        with annotate("repro/tick"):
+            self._state = self._tick_fn(self.params, self.store,
+                                        self.neighbors, self._queries_j,
+                                        self._state)
+        self._n_ticks += 1
         self.metrics.observe_occupancy(busy, self.n_lanes,
                                        self.steps_per_tick)
 
@@ -373,9 +418,48 @@ class ContinuousRuntime:
         once the previous epoch's lanes have all harvested."""
         self._maybe_swap_index()
         self.metrics.observe_queue_depth(len(self.queue))
-        dropped = self._admit(self._now())
+        tr = self.tracer
+        if not tr.enabled:
+            dropped = self._admit(self._now())
+            self._tick()
+            return dropped + self._harvest(self._now())
+        # traced round: the four shared timestamps tile the round so the
+        # per-request phase spans (admit/tick/harvest) union to the round's
+        # wall-clock — attribution coverage comes from this tiling. NOTE
+        # the tick dispatch is async: on-device compute drains at the
+        # harvest fetch's sync, so "harvest" carries the compute wait
+        # (documented in DESIGN.md §13).
+        t0 = self._now()
+        dropped = self._admit(t0)
+        t1 = self._now()
         self._tick()
-        return dropped + self._harvest(self._now())
+        t2 = self._now()
+        harvested = self._harvest(t2)
+        t3 = self._now()
+        self._emit_round_spans(t0, t1, t2, t3, harvested)
+        return dropped + harvested
+
+    def _emit_round_spans(self, t0: float, t1: float, t2: float, t3: float,
+                          harvested: List[Completion]) -> None:
+        tr = self.tracer
+        rids = [r.rid for r in self._lane_req
+                if r is not None and tr.sampled(r.rid)]
+        rids += [c.rid for c in harvested
+                 if c.lane >= 0 and tr.sampled(c.rid)]
+        site = self.trace_site
+        for rid in rids:
+            root = tr.root_for(rid)
+            if t1 > t0:
+                tr.emit("admit", t0, t1, rid=rid, site=site, parent=root)
+            if t2 > t1:
+                tr.emit("tick", t1, t2, rid=rid, site=site, parent=root,
+                        i=self._n_ticks, steps=self.steps_per_tick)
+            if t3 > t2:
+                tr.emit("harvest", t2, t3, rid=rid, site=site, parent=root)
+        if self._trace_owner:
+            for c in harvested:
+                if c.lane >= 0 and tr.sampled(c.rid):
+                    tr.finish_request(c.rid, t1=t3, status=c.status)
 
     def close(self) -> List[Completion]:
         """Graceful drain: stop admitting (late submits are shed), shed the
@@ -385,6 +469,10 @@ class ContinuousRuntime:
         out = self.shed_queue()
         while self.in_flight:
             out += self.step_once()
+        if self._trace_owner and self.tracer.enabled:
+            # anything still open (a span whose request never resolved)
+            # surfaces flagged open=True rather than vanishing
+            self.tracer.drain()
         return out
 
     def pop_completions(self) -> List[Completion]:
@@ -392,6 +480,15 @@ class ContinuousRuntime:
         return out
 
     # -- observability ------------------------------------------------------
+
+    def bind_registry(self, registry):
+        """Register this runtime's metric families (serving + pager) into
+        an ``obs.Registry``. Call AFTER ``warmup()`` — warmup replaces
+        ``self.metrics`` with a fresh object."""
+        self.metrics.bind_registry(registry)
+        if getattr(self.store, "is_paged", False):
+            self.store.bind_registry(registry, shard=self.trace_site or "0")
+        return registry
 
     def health_snapshot(self) -> dict:
         recs = self.metrics.records
@@ -496,12 +593,17 @@ class ShardedContinuousRuntime:
                  max_queue: Optional[int] = None,
                  tick_deadline_s: Optional[float] = None,
                  k_failures: int = 3, cooldown_rounds: int = 8,
-                 fault_plan=None):
+                 fault_plan=None, tracer=NULL_TRACER):
         self.engine = engine
         self.index = index
         self.max_queue = max_queue
         self.tick_deadline_s = tick_deadline_s
         self._closing = False
+        self.tracer = tracer
+        # merge-window open time per sampled rid: stamped when the FIRST
+        # shard part lands, so the "merge" span covers the straggler wait
+        # (slowest-shard gap) as well as the merge pass itself
+        self._merge_open: Dict[int, float] = {}
         self.health = ShardHealthTracker(index.n_shards,
                                          k_failures=k_failures,
                                          cooldown_rounds=cooldown_rounds)
@@ -518,7 +620,8 @@ class ShardedContinuousRuntime:
                 engine, params, index.base[s], index.neighbors[s], n_lanes,
                 query_dim, entry=int(index.entries[s]),
                 steps_per_tick=steps_per_tick, now_fn=now_fn,
-                fault_hook=hook, shared_fns=shared))
+                fault_hook=hook, shared_fns=shared,
+                tracer=tracer, trace_site=f"shard:{s}", trace_owner=False))
         self.metrics = ServingMetrics(n_lanes * index.n_shards)
         self.completions: List[Completion] = []
         self._partial: Dict[int, List[Completion]] = {}
@@ -564,6 +667,12 @@ class ShardedContinuousRuntime:
         rid = rid if rid is not None else next(self._rid_gen)
         now_fn = self.runtimes[0]._now
         t = t_arrive if t_arrive is not None else now_fn()
+        tr = self.tracer
+        traced = tr.enabled and tr.sampled(rid)
+        if traced:
+            # the merge layer owns the root's lifecycle; per-shard
+            # sub-runtimes parent their phase spans to it
+            tr.root_for(rid, t0=t)
         if self._closing or (self.max_queue is not None
                              and self.queued >= self.max_queue):
             # shed at the TOP level: per-shard sheds would desync rid
@@ -576,6 +685,10 @@ class ShardedContinuousRuntime:
                 rid, np.full((k,), -1, np.int32),
                 np.full((k,), -np.inf, np.float32), 0, 0, 0, -1, rec,
                 max(self._indices), status="shed"))
+            if traced:
+                tr.emit("queue", t, now, rid=rid,
+                        parent=tr.root_for(rid), status="shed")
+                tr.finish_request(rid, t1=now, status="shed")
             return rid
         for s, rt in enumerate(self.runtimes):
             if self.health.serving(s):
@@ -632,8 +745,13 @@ class ShardedContinuousRuntime:
 
     def _merge_ready(self) -> List[Completion]:
         S = len(self.runtimes)
+        tr = self.tracer
+        now_fn = self.runtimes[0]._now
         for s, rt in enumerate(self.runtimes):
             for c in rt.pop_completions():
+                if tr.enabled and c.rid not in self._merge_open \
+                        and tr.sampled(c.rid):
+                    self._merge_open[c.rid] = now_fn()
                 self._partial.setdefault(c.rid, [None] * S)[s] = c
         out = []
         k = self.engine.cfg.k
@@ -695,6 +813,12 @@ class ShardedContinuousRuntime:
             self.metrics.observe(rec)
             self.completions.append(c)
             out.append(c)
+            if tr.enabled and tr.sampled(rid):
+                now = now_fn()
+                tr.emit("merge", self._merge_open.pop(rid, now), now,
+                        rid=rid, parent=tr.root_for(rid), status=status,
+                        shards=len(live))
+                tr.finish_request(rid, t1=now, status=status)
         return out
 
     def pop_completions(self) -> List[Completion]:
@@ -714,9 +838,21 @@ class ShardedContinuousRuntime:
         while self.in_flight or self._partial \
                 or any(rt.completions for rt in self.runtimes):
             out += self.step_once()
+        if self.tracer.enabled:
+            self.tracer.drain()
         return out
 
     # -- observability ------------------------------------------------------
+
+    def bind_registry(self, registry):
+        """Register merged serving metrics, per-shard health, and any
+        paged shard stores into an ``obs.Registry``."""
+        self.metrics.bind_registry(registry)
+        self.health.bind_registry(registry)
+        for s, rt in enumerate(self.runtimes):
+            if getattr(rt.store, "is_paged", False):
+                rt.store.bind_registry(registry, shard=str(s))
+        return registry
 
     def health_snapshot(self) -> dict:
         recs = self.metrics.records
