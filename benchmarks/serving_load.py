@@ -34,10 +34,12 @@ import numpy as np
 from benchmarks.common import csv_row
 from repro.core import (EngineOptions, SearchConfig, build_engine,
                         mlp_measure)
+from repro.core.search import brute_force_topk
 from repro.graph import build_l2_graph
 from repro.obs import Registry, Tracer
 from repro.serving import (ContinuousRuntime, Request, ServingMetrics,
-                           latency_summary, poisson_arrivals)
+                           default_policy, latency_summary,
+                           poisson_arrivals)
 
 
 def build_setup(n_items: int, dim: int, ef: int, seed: int = 0):
@@ -62,6 +64,44 @@ def straggler_stream(n_requests: int, dim: int, arrivals: np.ndarray,
     return [Request(rid=i, query=queries[i], t_arrive=float(arrivals[i]),
                     budget_iters=cheap_iters if cheap[i] else None)
             for i in range(n_requests)]
+
+
+def deadline_stream(n_requests: int, dim: int, arrivals: np.ndarray,
+                    seed: int = 5):
+    """Deadline-tagged mix spanning the default SLA ladder's thresholds:
+    ~30% relaxed (0.40s -> premium), ~40% interactive (0.10s -> standard),
+    ~30% tight (0.03s -> economy). No explicit ``budget_iters`` — the
+    static arm runs everything at the full config budget; the tiered arm
+    lets the policy classify by deadline. Returns (requests, queries)."""
+    rng = np.random.default_rng(seed)
+    queries = rng.normal(size=(n_requests, dim)).astype(np.float32)
+    dls = np.asarray([0.40, 0.10, 0.03])[
+        rng.choice(3, size=n_requests, p=[0.3, 0.4, 0.3])]
+    reqs = [Request(rid=i, query=queries[i], t_arrive=float(arrivals[i]),
+                    deadline=float(dls[i])) for i in range(n_requests)]
+    return reqs, queries
+
+
+def recall_at_deadline(completions, stream, true_ids: np.ndarray) -> dict:
+    """Mean top-k recall where a response only counts if it landed inside
+    its request's deadline — answered-late, timed-out, and shed requests
+    all score 0 (the client stopped waiting). The quantity the SLA tiers
+    exist to maximize at fixed offered load."""
+    by_rid = {r.rid: r for r in stream}
+    k = true_ids.shape[1]
+    total, in_deadline = 0.0, 0
+    for c in completions:
+        rec = c.record
+        if rec.timed_out or rec.shed or rec.failed:
+            continue
+        dl = by_rid[c.rid].deadline
+        if dl is not None and (rec.t_done - rec.t_arrive) > dl:
+            continue
+        in_deadline += 1
+        got = {int(i) for i in c.ids if i >= 0}
+        total += len(got & set(map(int, true_ids[c.rid]))) / k
+    return {"recall_at_deadline": total / len(stream),
+            "in_deadline": in_deadline}
 
 
 def run_oneshot(engine, measure, base_j, nbrs_j, entry, stream, lanes: int
@@ -223,7 +263,72 @@ def _run_impl(quick: bool, n_items: int, dim: int, n_requests: int,
         1e6 / pcont["qps"], _fmt(pcont)
         + f";queue_p50={pcont['queue_p50_ms']:.1f}ms"
         + f";occupancy={pcont['occupancy']:.2f}"))
+
+    # 3) recall-at-deadline (DESIGN.md §14): the same deadline-tagged
+    #    Poisson stream at EQUAL offered QPS, served two ways — the static
+    #    config (every request at the full uniform budget) vs the adaptive
+    #    engine + default SLA tier ladder (deadline-classified iter caps +
+    #    angle taus, deadline-aware degrade). The offered rate sits above
+    #    what full-budget-everything can sustain, so the static arm queues
+    #    and blows deadlines; the tiered arm spends neural evals only
+    #    where the deadline affords them. Answers landing after their
+    #    deadline score 0 — quality the client never saw doesn't count.
+    dl_offered = 1.1 * one["qps"]
+    dl_arrivals = poisson_arrivals(n_requests, dl_offered, seed=4)
+    dl_stream, dl_queries = deadline_stream(n_requests, dim, dl_arrivals)
+    true_ids = np.asarray(brute_force_topk(
+        measure, base_j, jnp.asarray(dl_queries), cfg.k)[0])
+    # the tiered arm runs the adaptive policy end to end: the wider angle
+    # band at matched block width (the benchmarks/adaptive.py frontier
+    # winner — more useful insertions per hop at the same per-iter cost)
+    # plus the ladder's per-lane iter caps / taus for the cheap tiers
+    cfg_t = SearchConfig(k=cfg.k, ef=cfg.ef, mode=cfg.mode,
+                         budget=cfg.budget, alpha=1.3)
+    tiered_engine = build_engine(
+        measure, cfg_t, EngineOptions(adaptive="angle", c_max=cfg.budget))
+    tiered_rt = ContinuousRuntime(
+        tiered_engine, measure.params, base_j, nbrs_j, n_lanes=lanes,
+        query_dim=dim, entry=graph.entry, steps_per_tick=steps_per_tick,
+        sla_policy=default_policy(base_iters=cfg_t.iters()))
+    tiered_rt.warmup(dl_stream[0].query)
+
+    def recall_pass(runtime):
+        runtime.pop_completions()
+        runtime.metrics = ServingMetrics(runtime.n_lanes)
+        comps = runtime.run_stream(dl_stream, realtime=True)
+        return (recall_at_deadline(comps, dl_stream, true_ids),
+                runtime.metrics)
+
+    s_best, s_m = max((recall_pass(rt) for _ in range(repeats)),
+                      key=lambda x: x[0]["recall_at_deadline"])
+    t_best, t_m = max((recall_pass(tiered_rt) for _ in range(repeats)),
+                      key=lambda x: x[0]["recall_at_deadline"])
+    s_r, t_r = (s_best["recall_at_deadline"],
+                t_best["recall_at_deadline"])
+    tiers = t_m.sla_summary()
+    tier_info = ";".join(
+        f"{name}_n={t['n']:.0f}" for name, t in sorted(tiers.items()))
+    n_degraded = sum(t["n_degraded"] for t in tiers.values())
+    rows.append(csv_row(
+        f"serving_recall_deadline_static_{dl_offered:.0f}qps", 0.0,
+        f"recall_at_deadline={s_r:.3f}"
+        f";in_deadline={s_best['in_deadline']}/{n_requests}"
+        f";timed_out={s_m.summary()['n_timed_out']:.0f}"))
+    rows.append(csv_row(
+        f"serving_recall_deadline_tiered_{dl_offered:.0f}qps", 0.0,
+        f"recall_at_deadline={t_r:.3f}"
+        f";in_deadline={t_best['in_deadline']}/{n_requests}"
+        f";timed_out={t_m.summary()['n_timed_out']:.0f}"
+        f";degraded={n_degraded:.0f};{tier_info}"))
+    rows.append(csv_row(
+        "serving_recall_deadline_gate", 0.0,
+        f"tiered={t_r:.3f};static={s_r:.3f}"
+        f";gate_tiered_ge_static={t_r >= s_r}"))
     failures = []
+    if t_r < s_r:
+        failures.append(
+            f"tiered recall-at-deadline {t_r:.3f} < static {s_r:.3f} at "
+            f"{dl_offered:.0f} offered QPS")
     if speedup < 1.0:
         failures.append(
             f"continuous backlog QPS {cont['qps']:.1f} < oneshot "

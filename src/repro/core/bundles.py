@@ -106,11 +106,15 @@ def make_vmap_measure_stage(score_fn):
 
 def make_vmap_measure_fused_stage(score_fn):
     """Generic index-fused scorer: the gather-dequant fuses into the vmapped
-    measure under jit — no engine-level candidate block."""
-    def stage(params, store, idx, qs):
+    measure under jit — no engine-level candidate block. ``mask`` is the
+    adaptive engine's per-lane prefix mask (masked rows score -inf; the
+    dense jnp path computes them anyway — the wall-clock win on this path
+    comes from fewer insertions, hence fewer loop iterations)."""
+    def stage(params, store, idx, qs, mask=None):
         vecs = store.take(idx)
-        return jax.vmap(
+        out = jax.vmap(
             lambda x, q: score_fn(params, x, q))(vecs, qs).astype(jnp.float32)
+        return out if mask is None else jnp.where(mask, out, -jnp.inf)
     return stage
 
 
@@ -198,12 +202,12 @@ def _deepfm_score_stage(meta, options):
 def _deepfm_score_fused_stage(meta, options):
     fm_dim = int(meta[1])
 
-    def stage(params, store, idx, qs):
+    def stage(params, store, idx, qs, mask=None):
         return deepfm_score_fused(
             store, idx, qs, params["mlp"], fm_dim=fm_dim,
             use_pallas=use_pallas_impl(options.measure_impl),
             interpret=options.interpret,
-            tile=getattr(options, "tile", None))
+            tile=getattr(options, "tile", None), mask=mask)
     return stage
 
 
@@ -240,12 +244,12 @@ def _mlp_score_stage(meta, options):
 
 
 def _mlp_score_fused_stage(meta, options):
-    def stage(params, store, idx, qs):
+    def stage(params, store, idx, qs, mask=None):
         return mlp_score_fused(
             store, idx, qs, params,
             use_pallas=use_pallas_impl(options.measure_impl),
             interpret=options.interpret,
-            tile=getattr(options, "tile", None))
+            tile=getattr(options, "tile", None), mask=mask)
     return stage
 
 

@@ -127,6 +127,26 @@ class EngineOptions:
                   'tile' | 'rowwise' plan, ':<bt>' rows-per-grid-step, or
                   'plan:<bt>'); None resolves the autotune cache / shipped
                   defaults per shape at trace time
+    adaptive:     'off' | 'angle' — angle-based adaptive candidate-set
+                  sizing (the paper's § adaptive |C|): the rank stage sizes
+                  each hop's candidate set by angle geometry (the α·θ band
+                  plus an absolute per-lane cutoff ``angle_tau``) instead
+                  of top-``budget`` truncation. Realized as a static
+                  ``c_max`` block plus a per-lane prefix mask fed to the
+                  measure stage — shapes stay fixed, tile/autotune plans
+                  still apply, and 'off' is bit-identical to the
+                  pre-adaptive engine. Requires mode='guitar' and
+                  rank_by='angle'.
+    c_max:        adaptive block width (the static C the dynamic |C| is
+                  masked inside); 0 falls back to cfg.budget. Inert when
+                  adaptive='off'.
+    angle_tau:    default absolute angle cutoff (radians) applied on top
+                  of the α·θ band; candidates whose gradient/offset angle
+                  exceeds it are masked. <= 0 disables the absolute cutoff
+                  (band-only sizing). Per-lane overrides flow through
+                  ``search(..., taus=)`` / ``reset_lanes(..., taus=)`` —
+                  the serving SLA tiers' C policy. Inert when
+                  adaptive='off'.
     """
     rank_impl: str = "auto"
     measure_impl: str = "auto"
@@ -136,6 +156,9 @@ class EngineOptions:
     corpus_dtype: str = "float32"
     grad_impl: str = "auto"
     tile: Optional[str] = None
+    adaptive: str = "off"
+    c_max: int = 0
+    angle_tau: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -153,6 +176,9 @@ class EngineState(NamedTuple):
     done: jax.Array           # (Q,) bool
     iter_cap: jax.Array       # (Q,) i32 per-lane expansion budget (SLA
     #                           tiers / anytime search; cfg.iters() default)
+    angle_tau: jax.Array      # (Q,) f32 per-lane adaptive angle cutoff
+    #                           (radians; <= 0 disables — carried but unread
+    #                           when EngineOptions.adaptive='off')
 
 
 class PopOut(NamedTuple):
@@ -283,23 +309,48 @@ def default_pop_stage(state: EngineState) -> Tuple[EngineState, PopOut]:
 _use_pallas = use_pallas_impl
 
 
-def _select_top_c(key, in_range, valid, cfg: SearchConfig):
+def _select_top_c(key, in_range, valid, cfg: SearchConfig,
+                  c_max: Optional[int] = None, tau=None):
     """Static top-C over ranking keys + the adaptive α·θ mask — the part of
-    the rank stage shared by the pre-gathered and index-fused variants."""
-    C = min(cfg.budget, key.shape[1])
+    the rank stage shared by the pre-gathered and index-fused variants.
+
+    Adaptive sizing (``c_max``/``tau`` set): the block widens to ``c_max``
+    and the mask adds a per-lane absolute cutoff ``key <= tau`` (tau <= 0
+    disables it). ``top_k`` orders the block ascending by key, and band,
+    cutoff, and validity are all monotone in the sorted key, so the
+    per-lane mask is a PREFIX of the block — the dynamic |C| is a count,
+    which is what lets the fused measure kernels skip whole tail tiles
+    without any shape change (the mask-not-reshape contract)."""
+    C = min(c_max if c_max else cfg.budget, key.shape[1])
     neg_key = jnp.where(jnp.isfinite(key), -key, -jnp.inf)
     _, sel_idx = jax.lax.top_k(neg_key, C)
     base_mask = in_range if cfg.adaptive else valid
     sel_mask = jnp.take_along_axis(base_mask, sel_idx, axis=1)
+    if tau is not None:
+        tau = tau[:, None]
+        sel_key = jnp.take_along_axis(key, sel_idx, axis=1)
+        sel_mask = sel_mask & ((tau <= 0) | (sel_key <= tau))
     return sel_idx, sel_mask
+
+
+def _adaptive_c_max(cfg: SearchConfig, options) -> Optional[int]:
+    """The static adaptive block width, or None when adaptive is off."""
+    if getattr(options, "adaptive", "off") != "angle":
+        return None
+    return options.c_max if options.c_max else cfg.budget
 
 
 def make_guitar_rank_stage(cfg: SearchConfig,
                            options: EngineOptions = EngineOptions()
                            ) -> RankStage:
     """Eq. 3 (angle) / Eq. 4 (projection) + static top-C + adaptive α·θ mask.
-    Backed by the Pallas ``neighbor_rank`` kernel or its jnp ref."""
-    def stage(x, grad, nvecs, valid):
+    Backed by the Pallas ``neighbor_rank`` kernel or its jnp ref. The
+    optional trailing ``tau`` ((Q,) f32) is passed by the engine only when
+    ``EngineOptions.adaptive='angle'`` — 4-arg callers (and custom stage
+    doubles) are untouched."""
+    c_max = _adaptive_c_max(cfg, options)
+
+    def stage(x, grad, nvecs, valid, tau=None):
         if _use_pallas(options.rank_impl):
             key, in_range = neighbor_rank(
                 x, grad, nvecs, valid, alpha=cfg.alpha, rank_by=cfg.rank_by,
@@ -307,7 +358,7 @@ def make_guitar_rank_stage(cfg: SearchConfig,
         else:
             key, in_range = neighbor_rank_ref(
                 x, grad, nvecs, valid, alpha=cfg.alpha, rank_by=cfg.rank_by)
-        return _select_top_c(key, in_range, valid, cfg)
+        return _select_top_c(key, in_range, valid, cfg, c_max, tau)
     return stage
 
 
@@ -316,12 +367,14 @@ def make_guitar_rank_fused_stage(cfg: SearchConfig,
                                  ) -> FusedRankStage:
     """Index-fused Eq. 3/4: ranking keys straight off the resident corpus
     via the ``neighbor_rank_fused`` kernel (or its gather-fused jnp ref)."""
-    def stage(x, grad, store, idx, valid):
+    c_max = _adaptive_c_max(cfg, options)
+
+    def stage(x, grad, store, idx, valid, tau=None):
         key, in_range = neighbor_rank_fused(
             x, grad, store, idx, valid, alpha=cfg.alpha, rank_by=cfg.rank_by,
             use_pallas=_use_pallas(options.rank_impl),
             interpret=options.interpret, tile=options.tile)
-        return _select_top_c(key, in_range, valid, cfg)
+        return _select_top_c(key, in_range, valid, cfg, c_max, tau)
     return stage
 
 
@@ -430,18 +483,25 @@ class ExpansionEngine:
     grad_fused: Optional[FusedGradStage] = None
     tile: Optional[str] = None      # EngineOptions.tile override spec
     pallas_fused: bool = False      # fused stages routed to Pallas kernels
+    adaptive: str = "off"           # EngineOptions.adaptive policy
+    c_max: int = 0                  # adaptive block width (0 -> cfg.budget)
+    angle_tau: float = 0.0          # default per-lane cutoff (<= 0 = band
+    #                                 only); search(taus=) overrides per lane
 
     # -- candidates per expansion (static; fixes the flattened batch shape)
     def n_candidates(self, max_degree: int) -> int:
         if self.grad is None:
             return max_degree
-        return min(self.cfg.budget, max_degree)
+        c = self.cfg.budget
+        if self.adaptive == "angle" and self.c_max:
+            c = self.c_max
+        return min(c, max_degree)
 
     # -- state init: seed pools with the entry points (one measure call).
     #    iter_caps: optional (Q,) per-lane expansion budgets (defaults to
     #    cfg.iters() — the pre-existing uniform cap).
     def init_state(self, params, store: CorpusStore, neighbors, queries,
-                   entries, iter_caps=None) -> EngineState:
+                   entries, iter_caps=None, taus=None) -> EngineState:
         Q = queries.shape[0]
         N = store.n
         ef = self.cfg.ef
@@ -477,9 +537,13 @@ class ExpansionEngine:
             iter_caps = jnp.full((Q,), self.cfg.iters(), jnp.int32)
         else:
             iter_caps = jnp.asarray(iter_caps, jnp.int32)
+        if taus is None:
+            taus = jnp.full((Q,), self.angle_tau, jnp.float32)
+        else:
+            taus = jnp.asarray(taus, jnp.float32)
         return EngineState(pool_scores, pool_ids, pool_expanded, visited,
                            zeros + 1, zeros, zeros,
-                           jnp.zeros((Q,), jnp.bool_), iter_caps)
+                           jnp.zeros((Q,), jnp.bool_), iter_caps, taus)
 
     # -- lane-scoped lifecycle: re-initialize a subset of lanes in place.
     #    The continuous-batching runtime (serving/runtime.py) treats the Q
@@ -492,14 +556,15 @@ class ExpansionEngine:
     #    so they cost no measure evaluations and stay frozen.
     def reset_lanes(self, params, store: CorpusStore, queries, entries,
                     state: EngineState, mask: jax.Array,
-                    iter_caps=None) -> EngineState:
-        """queries/entries (and optional per-lane ``iter_caps``): full
-        (Q, Dq)/(Q,) arrays with the NEW values already merged into the
-        masked rows; mask: (Q,) bool — True lanes are re-initialized, False
-        lanes keep ``state``. Lane-for-lane equivalent to ``init_state`` on
-        the masked rows (the parity the serving tests pin)."""
+                    iter_caps=None, taus=None) -> EngineState:
+        """queries/entries (and optional per-lane ``iter_caps`` /
+        adaptive ``taus``): full (Q, Dq)/(Q,) arrays with the NEW values
+        already merged into the masked rows; mask: (Q,) bool — True lanes
+        are re-initialized, False lanes keep ``state``. Lane-for-lane
+        equivalent to ``init_state`` on the masked rows (the parity the
+        serving tests pin)."""
         fresh = self.init_state(params, store, None, queries, entries,
-                                iter_caps)
+                                iter_caps, taus)
 
         def pick(n, o):
             m = mask.reshape((-1,) + (1,) * (n.ndim - 1))
@@ -524,7 +589,8 @@ class ExpansionEngine:
             pool_expanded=jnp.ones((n_lanes, ef), jnp.bool_),
             visited=jnp.zeros((n_lanes, nwords), jnp.uint32),
             n_eval=zeros, n_grad=zeros, n_iters=zeros,
-            done=jnp.ones((n_lanes,), jnp.bool_), iter_cap=zeros)
+            done=jnp.ones((n_lanes,), jnp.bool_), iter_cap=zeros,
+            angle_tau=jnp.zeros((n_lanes,), jnp.float32))
 
     # -- does this step run the fused tile plan? Static per trace: the
     #    plan comes from the autotune cache (or the EngineOptions.tile
@@ -606,22 +672,33 @@ class ExpansionEngine:
                 g, n_grad = None, s.n_grad
 
         with jax.named_scope("repro_rank"):
+            # per-lane adaptive cutoff: the trailing tau arg exists ONLY on
+            # the adaptive path, so adaptive='off' emits the identical call
+            # graph (and keeps 4/5-arg custom stage doubles working)
+            targs = (state.angle_tau,) if self.adaptive == "angle" else ()
             if self.rank_fused is not None and not use_tile:
                 sel_idx, sel_mask = self.rank_fused(x, g, store, nbr_safe,
-                                                    valid)
+                                                    valid, *targs)
                 nvecs = None
             else:
                 if not use_tile:
                     nvecs = store.take(nbr_safe)       # (Q, B, D)
-                sel_idx, sel_mask = self.rank(x, g, nvecs, valid)  # (Q, C)
+                sel_idx, sel_mask = self.rank(x, g, nvecs, valid,
+                                              *targs)   # (Q, C)
             sel_ids = jnp.take_along_axis(nbr, sel_idx, axis=1)
 
         C = sel_idx.shape[1]
         with jax.named_scope("repro_measure"):
             if self.measure_fused is not None and not use_tile:
+                # adaptive: the per-lane prefix mask rides into the fused
+                # kernel so fully-masked candidate tiles skip their score
+                # math via the kernels' tail-masking grid (masked rows come
+                # back -inf either way; the where below is then idempotent)
+                mkw = ({"mask": sel_mask.reshape(Q * C)}
+                       if self.adaptive == "angle" else {})
                 flat_scores = self.measure_fused(
                     params, store,
-                    jnp.maximum(sel_ids, 0).reshape(Q * C), qs_flat)
+                    jnp.maximum(sel_ids, 0).reshape(Q * C), qs_flat, **mkw)
             else:
                 # sel_idx comes from top-k over axis 1, so it's in-bounds
                 # by construction — the tile plan drops the out-of-bounds
@@ -667,10 +744,10 @@ class ExpansionEngine:
     # -- jitted whole-search path (serving / benchmarks)
     @functools.cached_property
     def _run_jit(self):
-        def run(params, base, neighbors, queries, entries, iter_caps):
+        def run(params, base, neighbors, queries, entries, iter_caps, taus):
             store = as_corpus_store(base, self.corpus_dtype)
             state = self.init_state(params, store, neighbors, queries,
-                                    entries, iter_caps)
+                                    entries, iter_caps, taus)
             C = self.n_candidates(neighbors.shape[1])
             qs_flat = jnp.repeat(queries, C, axis=0)
 
@@ -685,20 +762,25 @@ class ExpansionEngine:
         return jax.jit(run)
 
     def search(self, params, base, neighbors, queries, entries,
-               iter_caps=None) -> SearchResult:
+               iter_caps=None, taus=None) -> SearchResult:
         """base: (N, D) array or a pre-built ``CorpusStore`` (the serving
         path quantizes once up front; a raw array is converted — one fused
         pass — per call); neighbors: (N, B) int32 -1-padded; queries:
         (Q, Dq); entries: (Q,) int32; iter_caps: optional (Q,) per-query
         expansion budgets (anytime/SLA-tier search — defaults to the
-        uniform cfg cap). Returns SearchResult with (Q, ...) leaves."""
+        uniform cfg cap); taus: optional (Q,) per-query adaptive angle
+        cutoffs (adaptive='angle' only — defaults to the engine's
+        ``angle_tau``). Returns SearchResult with (Q, ...) leaves."""
         if iter_caps is None:
             iter_caps = jnp.full((queries.shape[0],), self.cfg.iters(),
                                  jnp.int32)
+        if taus is None:
+            taus = jnp.full((queries.shape[0],), self.angle_tau, jnp.float32)
         from repro.obs.profile import annotate
         with annotate("repro/search"):
             return self._run_jit(params, base, neighbors, queries, entries,
-                                 jnp.asarray(iter_caps, jnp.int32))
+                                 jnp.asarray(iter_caps, jnp.int32),
+                                 jnp.asarray(taus, jnp.float32))
 
     # -- host loop: same stage code, one Python call per iteration. By
     #    default each (init, step) runs through a cached jax.jit so the
@@ -710,9 +792,10 @@ class ExpansionEngine:
     #    invariants; jitted stages would only record at trace time.
     @functools.cached_property
     def _debug_jits(self):
-        def init(params, store, neighbors, queries, entries, iter_caps):
+        def init(params, store, neighbors, queries, entries, iter_caps,
+                 taus):
             return self.init_state(params, store, neighbors, queries,
-                                   entries, iter_caps)
+                                   entries, iter_caps, taus)
 
         def one(params, store, neighbors, queries, qs_flat, state):
             s2 = self.step(params, store, neighbors, queries, qs_flat, state)
@@ -722,7 +805,7 @@ class ExpansionEngine:
     def search_debug(self, params, base, neighbors, queries, entries,
                      max_steps: Optional[int] = None,
                      on_step: Optional[Callable[[int, EngineState], None]]
-                     = None, iter_caps=None,
+                     = None, iter_caps=None, taus=None,
                      jit_steps: bool = True) -> SearchResult:
         entries = jnp.asarray(entries, jnp.int32)
         store = as_corpus_store(base, self.corpus_dtype)
@@ -731,13 +814,17 @@ class ExpansionEngine:
             caps = jnp.full((queries.shape[0],), self.cfg.iters(),
                             jnp.int32) if iter_caps is None \
                 else jnp.asarray(iter_caps, jnp.int32)
-            state = init_fn(params, store, neighbors, queries, entries, caps)
+            ts = jnp.full((queries.shape[0],), self.angle_tau,
+                          jnp.float32) if taus is None \
+                else jnp.asarray(taus, jnp.float32)
+            state = init_fn(params, store, neighbors, queries, entries,
+                            caps, ts)
         else:
             def step_fn(params, store, neighbors, queries, qs_flat, s):
                 s2 = self.step(params, store, neighbors, queries, qs_flat, s)
                 return _freeze_done(s.done, s2, s)
             state = self.init_state(params, store, neighbors, queries,
-                                    entries, iter_caps)
+                                    entries, iter_caps, taus)
         C = self.n_candidates(neighbors.shape[1])
         qs_flat = jnp.repeat(queries, C, axis=0)
         if max_steps is not None:
@@ -767,6 +854,18 @@ def _build(score_fn, meta, cfg: SearchConfig,
     """Assemble an engine. Measure→stage selection flows exclusively
     through the ``MeasureKernelBundle`` registry (``resolve_stages``) —
     this builder contains no measure-name or meta-tuple conditionals."""
+    if options.adaptive not in ("off", "angle"):
+        raise ValueError(f"EngineOptions.adaptive must be 'off' or 'angle', "
+                         f"got {options.adaptive!r}")
+    if options.adaptive == "angle":
+        # the adaptive cutoff is an ANGLE (radians between the query
+        # gradient and each neighbor offset) — it has no meaning for
+        # projection keys or the no-grad sl2g mode
+        if cfg.mode != "guitar" or cfg.rank_by != "angle":
+            raise ValueError(
+                "EngineOptions(adaptive='angle') requires SearchConfig("
+                f"mode='guitar', rank_by='angle'); got mode={cfg.mode!r}, "
+                f"rank_by={cfg.rank_by!r}")
     stages = resolve_stages(score_fn, meta, options)
     if cfg.mode == "guitar":
         grad, grad_fused = stages.grad, stages.grad_fused
@@ -791,7 +890,10 @@ def _build(score_fn, meta, cfg: SearchConfig,
                            corpus_dtype=options.corpus_dtype,
                            grad_fused=grad_fused,
                            tile=options.tile,
-                           pallas_fused=pallas_fused)
+                           pallas_fused=pallas_fused,
+                           adaptive=options.adaptive,
+                           c_max=options.c_max,
+                           angle_tau=options.angle_tau)
 
 
 @functools.lru_cache(maxsize=128)

@@ -195,8 +195,8 @@ def shard_stores(index: ShardedIndex, corpus_dtype: str = "float32",
 def sharded_search_stores(measure: Measure, stores: List[Any],
                           index: ShardedIndex, queries: np.ndarray,
                           cfg: SearchConfig,
-                          options: EngineOptions = EngineOptions()
-                          ) -> SearchResult:
+                          options: EngineOptions = EngineOptions(),
+                          iter_caps=None, taus=None) -> SearchResult:
     """Sharded search against pre-built per-shard stores — the path paged
     residency takes (a host pager cannot cross a ``shard_map`` boundary, so
     the per-shard searches run as ordinary jitted calls and the merge runs
@@ -204,7 +204,9 @@ def sharded_search_stores(measure: Measure, stores: List[Any],
     global-id remap with padded rows -> -1, ``merge_topk``, counters
     summed (n_eval/n_grad) and maxed (n_iters) over shards — bit-identical
     merged results to ``sharded_search_host`` when the stores hold the
-    same payload."""
+    same payload. ``iter_caps`` (Q,) per-lane iteration budgets and
+    ``taus`` (Q,) per-lane adaptive angle cutoffs broadcast to every shard
+    (a query's SLA tier applies to all of its partition searches)."""
     engine = build_engine_from_fn(measure.score_fn, cfg, options,
                                   meta=tuple(m) if (
                                       m := getattr(measure, "meta", None))
@@ -219,7 +221,7 @@ def sharded_search_stores(measure: Measure, stores: List[Any],
         entries = jnp.full((Q,), int(index.entries[s]), jnp.int32)
         res = engine.search(measure.params, store,
                             jnp.asarray(index.neighbors[s]), queries,
-                            entries)
+                            entries, iter_caps=iter_caps, taus=taus)
         gids = jnp.asarray(index.global_ids[s])
         per_ids.append(jnp.where(res.ids >= 0,
                                  gids[jnp.maximum(res.ids, 0)], -1))

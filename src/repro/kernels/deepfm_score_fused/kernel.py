@@ -47,26 +47,53 @@ def _score_tile(rows, q, w0_ref, b0_ref, w1_ref, b1_ref, w2_ref, b2_ref, *,
 
 
 def _kernel(idx_ref, *refs, fm_dim: int, deep_dim: int, bt: int,
-            quant: bool, q_shared: bool):
+            quant: bool, q_shared: bool, masked: bool):
+    refs = list(refs)
+    data_ref = refs.pop(0)
+    scales_ref = refs.pop(0) if quant else None
+    mask_ref = refs.pop(0) if masked else None
+    q_ref, w0, b0, w1, b1, w2, b2, out_ref = refs[:8]
     if quant:
-        (data_ref, scales_ref, q_ref, w0, b0, w1, b1, w2, b2,
-         out_ref, vmem, svmem, dsem, ssem) = refs
+        vmem, svmem, dsem, ssem = refs[8:]
     else:
-        (data_ref, q_ref, w0, b0, w1, b1, w2, b2,
-         out_ref, vmem, dsem) = refs
+        vmem, dsem = refs[8:]
     t = pl.program_id(0)
+    # the double-buffer schedule runs UNCONDITIONALLY — step t issues step
+    # t+1's row copies, so skipping it inside a masked tile would starve
+    # the next tile's gather
     gathers = [RowGather(idx_ref, data_ref, vmem, dsem, bt)]
     if quant:
         gathers.append(RowGather(idx_ref, scales_ref, svmem, ssem, bt))
     slot = schedule_double_buffer(t, gathers)
-    rows = rows_f32(vmem[slot])                           # (bt, D)
-    if quant:
-        rows = rows * svmem[slot]                         # (bt, 1) scales
-    q = q_ref[...]
-    if q_shared:
-        q = jnp.broadcast_to(q, (bt, q.shape[-1]))
-    out_ref[...] = _score_tile(rows, q, w0, b0, w1, b1, w2, b2,
-                               fm_dim=fm_dim, deep_dim=deep_dim)
+
+    def _scores():
+        rows = rows_f32(vmem[slot])                       # (bt, D)
+        if quant:
+            rows = rows * svmem[slot]                     # (bt, 1) scales
+        q = q_ref[...]
+        if q_shared:
+            q = jnp.broadcast_to(q, (bt, q.shape[-1]))
+        return _score_tile(rows, q, w0, b0, w1, b1, w2, b2,
+                           fm_dim=fm_dim, deep_dim=deep_dim)
+
+    if not masked:
+        out_ref[...] = _scores()
+    else:
+        # adaptive prefix mask: per-lane dynamic |C| arrives as a (bt,)
+        # mask tile on the same grid as the tail padding; a fully-masked
+        # tile skips the FM + MLP entirely (the DMA already ran — the
+        # pipeline stays sound) and writes the -inf sentinel the engine's
+        # insert stage treats as absent
+        m = mask_ref[...] != 0
+        any_live = jnp.any(m)
+
+        @pl.when(any_live)
+        def _():
+            out_ref[...] = jnp.where(m, _scores(), -jnp.inf)
+
+        @pl.when(~any_live)
+        def _():
+            out_ref[...] = jnp.full((bt,), -jnp.inf, jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("fm_dim", "deep_dim",
@@ -75,15 +102,19 @@ def deepfm_score_fused_pallas(data, scales, idx, query, w0, b0, w1, b1,
                               w2, b2, *, fm_dim: int = 8, deep_dim: int = 32,
                               q_shared: bool = False,
                               interpret: bool = False,
-                              bt: int = 8) -> jax.Array:
+                              bt: int = 8, mask=None) -> jax.Array:
     """data: (N, D) resident corpus (f32/bf16/int8); scales: (N, 1) f32 for
     int8 else None; idx: (M,) int32 (pre-clamped >= 0); query: (M, D) rows,
     or (1, D) shared across candidates when ``q_shared`` (the kernel
     broadcasts — no (M, D) query copy is ever built); bt: candidate rows
-    per grid step (autotuned; M is padded up to a multiple)."""
+    per grid step (autotuned; M is padded up to a multiple); mask: optional
+    (M,) bool — masked rows score -inf and all-masked ``bt`` tiles skip
+    their compute (the mask pads with False onto the same grid tail as
+    ``idx``)."""
     M = idx.shape[0]
     D = data.shape[1]
     quant = scales is not None
+    masked = mask is not None
     bt = max(1, min(int(bt), M))
     mp = -(-M // bt) * bt
     idx = jnp.pad(idx, (0, mp - M))
@@ -103,6 +134,10 @@ def deepfm_score_fused_pallas(data, scales, idx, query, w0, b0, w1, b1,
     scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
     if quant:
         scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
+    if masked:
+        # int32 0/1 tiles (bool HBM tensors don't lay out portably on TPU)
+        in_specs.append(pl.BlockSpec((bt,), lambda t, idx_ref: (t,)))
+        args.append(jnp.pad(mask.astype(jnp.int32), (0, mp - M)))
     in_specs += [
         q_spec,
         full(*w0.shape), full(*b0.shape),
@@ -119,7 +154,7 @@ def deepfm_score_fused_pallas(data, scales, idx, query, w0, b0, w1, b1,
     )
     out = pl.pallas_call(
         functools.partial(_kernel, fm_dim=fm_dim, deep_dim=deep_dim, bt=bt,
-                          quant=quant, q_shared=q_shared),
+                          quant=quant, q_shared=q_shared, masked=masked),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
         interpret=interpret,

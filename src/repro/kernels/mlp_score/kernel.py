@@ -73,33 +73,52 @@ def mlp_score_pallas(cand: jax.Array, query: jax.Array, *wb,
 
 
 def _kernel_fused(idx_ref, *refs, n_layers: int, bt: int, quant: bool,
-                  q_shared: bool):
+                  q_shared: bool, masked: bool):
     """Wide-block fused scorer: ``bt`` candidate rows per grid step, DMAed
     into a double-buffered VMEM tile (``kernels/dma.py``) so the next
-    tile's gather overlaps this tile's matmuls."""
+    tile's gather overlaps this tile's matmuls. ``masked``: an adaptive
+    (bt,) prefix-mask tile rides along — masked rows score -inf, and an
+    all-masked tile skips the matmuls entirely (the DMA schedule still
+    runs; step t prefetches step t+1's rows)."""
+    refs = list(refs)
+    data_ref = refs.pop(0)
+    scales_ref = refs.pop(0) if quant else None
+    mask_ref = refs.pop(0) if masked else None
+    q_ref = refs[0]
+    wb_refs = refs[1: 1 + 2 * n_layers]
     if quant:
-        data_ref, scales_ref, rest = refs[0], refs[1], refs[2:]
-        q_ref = rest[0]
-        wb_refs = rest[1: 1 + 2 * n_layers]
-        out_ref, vmem, svmem, dsem, ssem = rest[1 + 2 * n_layers:]
+        out_ref, vmem, svmem, dsem, ssem = refs[1 + 2 * n_layers:]
     else:
-        data_ref, rest = refs[0], refs[1:]
-        q_ref = rest[0]
-        wb_refs = rest[1: 1 + 2 * n_layers]
-        out_ref, vmem, dsem = rest[1 + 2 * n_layers:]
+        out_ref, vmem, dsem = refs[1 + 2 * n_layers:]
     t = pl.program_id(0)
     gathers = [RowGather(idx_ref, data_ref, vmem, dsem, bt)]
     if quant:
         gathers.append(RowGather(idx_ref, scales_ref, svmem, ssem, bt))
     slot = schedule_double_buffer(t, gathers)
-    rows = rows_f32(vmem[slot])                           # (bt, Dx)
-    if quant:
-        rows = rows * svmem[slot]
-    q = q_ref[...]
-    if q_shared:
-        q = jnp.broadcast_to(q, (bt, q.shape[-1]))
-    h = jnp.concatenate([rows, q], axis=-1)
-    out_ref[...] = _forward(h, wb_refs, n_layers)
+
+    def _scores():
+        rows = rows_f32(vmem[slot])                       # (bt, Dx)
+        if quant:
+            rows = rows * svmem[slot]
+        q = q_ref[...]
+        if q_shared:
+            q = jnp.broadcast_to(q, (bt, q.shape[-1]))
+        h = jnp.concatenate([rows, q], axis=-1)
+        return _forward(h, wb_refs, n_layers)
+
+    if not masked:
+        out_ref[...] = _scores()
+    else:
+        m = mask_ref[...] != 0
+        any_live = jnp.any(m)
+
+        @pl.when(any_live)
+        def _():
+            out_ref[...] = jnp.where(m, _scores(), -jnp.inf)
+
+        @pl.when(~any_live)
+        def _():
+            out_ref[...] = jnp.full((bt,), -jnp.inf, jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("n_layers", "q_shared",
@@ -107,14 +126,16 @@ def _kernel_fused(idx_ref, *refs, n_layers: int, bt: int, quant: bool,
 def mlp_score_fused_pallas(data, scales, idx, query, *wb, n_layers: int,
                            q_shared: bool = False,
                            interpret: bool = False,
-                           bt: int = 8) -> jax.Array:
+                           bt: int = 8, mask=None) -> jax.Array:
     """data: (N, Dx) resident corpus; scales: (N, 1) f32 for int8 else None;
     idx: (M,) int32 (pre-clamped >= 0); query: (M, Dq) rows or (1, Dq)
     shared; bt: candidate rows per grid step (autotuned; M is padded up to
-    a multiple). Returns (M,) f32."""
+    a multiple); mask: optional (M,) bool — masked rows score -inf and
+    all-masked ``bt`` tiles skip their matmuls. Returns (M,) f32."""
     M = idx.shape[0]
     D = data.shape[1]
     quant = scales is not None
+    masked = mask is not None
     bt = max(1, min(int(bt), M))
     mp = -(-M // bt) * bt
     idx = jnp.pad(idx, (0, mp - M))
@@ -134,6 +155,10 @@ def mlp_score_fused_pallas(data, scales, idx, query, *wb, n_layers: int,
     scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
     if quant:
         scratch.append(pltpu.SemaphoreType.DMA((2, bt)))
+    if masked:
+        # int32 0/1 tiles (bool HBM tensors don't lay out portably on TPU)
+        in_specs.append(pl.BlockSpec((bt,), lambda t, idx_ref: (t,)))
+        args.append(jnp.pad(mask.astype(jnp.int32), (0, mp - M)))
     in_specs += [q_spec]
     in_specs += [full(*a.shape) for a in wb]
     args += [query, *wb]
@@ -146,7 +171,7 @@ def mlp_score_fused_pallas(data, scales, idx, query, *wb, n_layers: int,
     )
     out = pl.pallas_call(
         functools.partial(_kernel_fused, n_layers=n_layers, bt=bt,
-                          quant=quant, q_shared=q_shared),
+                          quant=quant, q_shared=q_shared, masked=masked),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
         interpret=interpret,

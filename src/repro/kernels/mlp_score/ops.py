@@ -62,17 +62,25 @@ def mlp_score(cand: jax.Array, query: jax.Array, mlp_params: dict,
 def mlp_score_fused(store: CorpusStore, idx: jax.Array, query: jax.Array,
                     mlp_params: dict, use_pallas: bool = True,
                     interpret: bool | None = None,
-                    tile: str | None = None) -> jax.Array:
+                    tile: str | None = None,
+                    mask: jax.Array | None = None) -> jax.Array:
     """store: resident corpus; idx: (M,) int32 candidate ids (may contain -1
     padding — clamped here; mask scores at the call site); query: (M, Dq)
     rows or a single (Dq,) vector; tile: optional override spec for the
-    autotuned rows-per-grid-step (e.g. ``":16"``). Returns (M,) f32."""
+    autotuned rows-per-grid-step (e.g. ``":16"``); mask: optional (M,) bool
+    — the adaptive engine's per-lane prefix mask: masked rows return -inf,
+    and the Pallas grid skips the matmuls for tiles whose ``bt`` rows are
+    ALL masked. Returns (M,) f32."""
     from repro.kernels import autotune
 
     idx = jnp.maximum(idx, 0).astype(jnp.int32)
     Ws, bs = _wb(mlp_params)
     if not use_pallas:
-        return mlp_score_fused_ref(store, idx, query, Ws, bs)
+        out = mlp_score_fused_ref(store, idx, query, Ws, bs)
+        # jnp ref is dense — masked rows are computed then overwritten
+        # (XLA:CPU has no tile-skip to win; the adaptive speedup on this
+        # path comes from fewer loop iterations)
+        return out if mask is None else jnp.where(mask, out, -jnp.inf)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     cfg = autotune.resolve(
@@ -83,4 +91,4 @@ def mlp_score_fused(store: CorpusStore, idx: jax.Array, query: jax.Array,
     return mlp_score_fused_pallas(
         store.data, store.scales, idx, q_arg.astype(jnp.float32),
         *_flat(Ws, bs), n_layers=len(Ws), q_shared=q_shared,
-        interpret=interpret, bt=cfg.bt)
+        interpret=interpret, bt=cfg.bt, mask=mask)

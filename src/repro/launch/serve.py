@@ -44,7 +44,7 @@ from repro.graph import (GraphIndex, build_l2_graph, load_corpus_store,
                          load_index, load_index_meta, save_index)
 from repro.serving import (BATCH_BUCKETS, ContinuousRuntime, Request,  # noqa: F401  (re-export compat)
                            bucket_pad, bucket_size, latency_summary,
-                           poisson_arrivals)
+                           load_policy, poisson_arrivals)
 
 
 def serve_oneshot(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
@@ -123,11 +123,38 @@ def serve_oneshot(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
           f"iters mean={iters.mean():.0f} max={iters.max()}")
 
 
+def _parse_sla_mix(spec: str, policy) -> list:
+    """'premium:0.2,standard:0.5,economy:0.3' -> tier-name list of 100
+    slots (request i takes slot i % 100) — a deterministic traffic mix."""
+    names = {c.name for c in policy.classes}
+    slots = []
+    for part in spec.split(","):
+        name, _, frac = part.partition(":")
+        name = name.strip()
+        if name not in names:
+            raise SystemExit(f"--sla-mix tier {name!r} not in policy "
+                             f"(have {sorted(names)})")
+        slots += [name] * max(1, round(float(frac or 1) * 100))
+    return slots[:100] or [policy.classes[0].name]
+
+
 def serve_continuous(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
                      base_j, rng) -> None:
     """Open-loop continuous batching: Poisson arrivals at --offered-qps
     into the lane-recycling runtime; per-request SLA metrics out."""
     engine = build_engine(measure, cfg, options)
+    sla_policy = None
+    if args.sla != "off":
+        sla_policy = load_policy(args.sla)
+        print("[serve] SLA tiers (richest first; each tier overrides the "
+              "request's iter_cap + angle_tau, corpus_dtype is advisory):")
+        for line in sla_policy.table():
+            print(f"[serve]   {line}")
+        if options.adaptive == "off" \
+                and any(c.angle_tau > 0 for c in sla_policy.classes):
+            print("[serve] note: tiers carry angle_tau cutoffs but "
+                  "--adaptive is off — taus are inert; pass "
+                  "--adaptive angle to let tiers shrink |C|")
     fault_plan = None
     fault_hook = None
     if args.chaos:
@@ -143,7 +170,8 @@ def serve_continuous(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
                                 entry=graph.entry,
                                 steps_per_tick=args.steps_per_tick,
                                 max_queue=args.max_queue,
-                                fault_hook=fault_hook, tracer=tracer)
+                                fault_hook=fault_hook, tracer=tracer,
+                                sla_policy=sla_policy)
     if fault_plan is not None and getattr(runtime.store, "is_paged", False):
         # page-read faults only make sense against a pager
         runtime.store.set_read_hook(fault_plan.pager_hook("pager"))
@@ -159,8 +187,11 @@ def serve_continuous(args, graph, measure, cfg, options, corpus_arg, nbrs_j,
         autotune.bind_registry(registry)
 
     arrivals = poisson_arrivals(args.queries, args.offered_qps, seed=1)
+    mix = (_parse_sla_mix(args.sla_mix, sla_policy)
+           if sla_policy is not None and args.sla_mix else None)
     stream = [Request(rid=i, query=queries[i], t_arrive=float(arrivals[i]),
-                      deadline=args.deadline)
+                      deadline=args.deadline,
+                      sla=mix[i % len(mix)] if mix else None)
               for i in range(args.queries)]
     completions = runtime.run_stream(stream,
                                      health_every_s=args.health_every)
@@ -249,7 +280,41 @@ def main() -> None:
                     help="continuous runtime: bounded admission queue — "
                          "submits beyond this depth are load-shed "
                          "(status='shed') instead of queueing unboundedly "
-                         "(DESIGN.md §12)")
+                         "(DESIGN.md §12); with --sla, this depth DEGRADES "
+                         "(floor-tier admission) and 2x this depth sheds")
+    ap.add_argument("--sla", type=str, default="off",
+                    metavar="off|default|POLICY.json",
+                    help="continuous runtime: SLA-tiered serving "
+                         "(DESIGN.md §14). Each tier overrides, per "
+                         "request: iter_cap (the per-lane expansion budget "
+                         "that --budget/engine cfg otherwise fixes) and "
+                         "angle_tau (the adaptive cutoff — only active "
+                         "under --adaptive angle, inert otherwise); a "
+                         "tier's corpus_dtype is ADVISORY (residency is "
+                         "fixed at startup by --corpus-dtype; a conflict "
+                         "warns, never fails). Requests classify by "
+                         "deadline (or --sla-mix); under queue pressure "
+                         "tiers degrade before anything is shed. 'default' "
+                         "= the stock premium/standard/economy ladder; a "
+                         "JSON path loads a custom ladder (serving/sla.py)")
+    ap.add_argument("--sla-mix", type=str, default=None,
+                    metavar="TIER:FRAC,...",
+                    help="with --sla: pin requests to explicit tiers in "
+                         "this proportion (e.g. 'premium:0.2,standard:0.5,"
+                         "economy:0.3') instead of deadline classification")
+    ap.add_argument("--adaptive", choices=["off", "angle"], default="off",
+                    help="angle-based adaptive candidate-set sizing "
+                         "(paper's adaptive |C|): the rank stage keeps the "
+                         "alpha*theta band + per-lane tau cutoff as a mask "
+                         "over a static c-max block — fewer neural evals "
+                         "where the angle spectrum says they buy nothing. "
+                         "'off' is bit-identical to the non-adaptive engine")
+    ap.add_argument("--c-max", type=int, default=0,
+                    help="adaptive: static candidate block width (0 = "
+                         "--budget); the per-lane mask selects a prefix")
+    ap.add_argument("--angle-tau", type=float, default=0.0,
+                    help="adaptive: absolute angle cutoff in radians "
+                         "(<=0 disables; SLA tiers override per request)")
     ap.add_argument("--chaos", type=str, default=None, metavar="PLAN.json",
                     help="continuous runtime: replay a FaultPlan "
                          "(serving/faults.py) — tick faults at site 'tick', "
@@ -327,6 +392,9 @@ def main() -> None:
             print(f"  {fam}: {', '.join(have)}{servable}")
         print("unregistered families fall back to the generic "
               "vmap/jax.grad stages")
+        print("adaptive |C| (--adaptive angle) masks the score_fused "
+              "stage: families with a fused scorer skip fully-masked "
+              "tiles in-kernel; generic fallbacks mask densely")
         return
 
     fused = args.fused or args.corpus_dtype != "float32"
@@ -411,7 +479,28 @@ def main() -> None:
     cfg = SearchConfig(k=args.k, ef=args.ef, mode=args.mode,
                        budget=args.budget, alpha=args.alpha)
     options = EngineOptions(fused=fused, corpus_dtype=args.corpus_dtype,
-                            tile=args.tile)
+                            tile=args.tile, adaptive=args.adaptive,
+                            c_max=args.c_max, angle_tau=args.angle_tau)
+    if args.sla != "off":
+        import sys
+        if args.runtime != "continuous":
+            raise SystemExit("--sla needs --runtime continuous (tiers are "
+                             "admission policy on the lane scheduler)")
+        policy = load_policy(args.sla)
+        explicit_dtype = any(a.startswith("--corpus-dtype")
+                             for a in sys.argv[1:])
+        conflicting = [c for c in policy.classes
+                       if c.corpus_dtype != args.corpus_dtype]
+        if explicit_dtype and conflicting:
+            # warn, never fail: residency is a store-level property fixed
+            # here at startup — a tier's corpus_dtype is the fleet
+            # recommendation, not a per-request switch
+            names = ", ".join(f"{c.name}({c.corpus_dtype})"
+                              for c in conflicting)
+            print(f"[serve] WARNING: --corpus-dtype={args.corpus_dtype} "
+                  f"conflicts with the residency recommended by tier(s) "
+                  f"{names}; every tier serves {args.corpus_dtype} — "
+                  f"tiers still apply their iter_cap/angle_tau knobs")
 
     base_j = jnp.asarray(base)
     nbrs_j = jnp.asarray(graph.neighbors)

@@ -14,3 +14,7 @@ from repro.serving.runtime import (  # noqa: F401
     Completion, ContinuousRuntime, Request, ShardedContinuousRuntime,
     poisson_arrivals,
 )
+from repro.serving.sla import (  # noqa: F401
+    SLAClass, SLAPolicy, default_policy, load_policy, policy_from_spec,
+    resolve_tier,
+)

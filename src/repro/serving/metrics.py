@@ -46,6 +46,8 @@ class RequestRecord:
     shed: bool = False      # load-shed at admission (queue full / draining)
     failed: bool = False    # every fault domain that held it failed
     partial: bool = False   # merged over surviving shards only
+    sla: str = ""           # resolved SLA tier name ("" = untiered)
+    degraded: bool = False  # admitted below its resolved tier (pressure)
 
     @property
     def latency_ms(self) -> float:
@@ -68,6 +70,8 @@ class ServingMetrics:
         self._queue_depth_max = 0
         self._reg_live = None   # (requests, latency, queue_ms, evals,
         #                          grads, iters) when bound to a Registry
+        self._reg_sla = None    # (latency{sla}, evals{sla}, degraded{sla},
+        #                          requests{sla,status}) when bound
 
     def bind_registry(self, registry):
         """Adapter into an ``obs.Registry`` (DESIGN.md §13): completed
@@ -92,6 +96,23 @@ class ServingMetrics:
             registry.counter("repro_engine_iters_total",
                              "expansion iterations over completed requests"),
         )
+        # per-SLA-tier families (DESIGN.md §14): labeled by resolved tier
+        # name; untiered requests ("" sla) stay out of these — the unlabeled
+        # families above remain the all-traffic view
+        self._reg_sla = (
+            registry.histogram("repro_serving_sla_latency_ms",
+                               "end-to-end latency of answered requests "
+                               "by SLA tier, ms", labelnames=("sla",)),
+            registry.counter("repro_serving_sla_evals_total",
+                             "measure evaluations by SLA tier",
+                             labelnames=("sla",)),
+            registry.counter("repro_serving_sla_degraded_total",
+                             "requests admitted below their resolved tier",
+                             labelnames=("sla",)),
+            registry.counter("repro_serving_sla_requests_total",
+                             "completed requests by SLA tier and final "
+                             "status", labelnames=("sla", "status")),
+        )
         g_depth = registry.gauge("repro_serving_queue_depth",
                                  "admission queue depth, last round")
         g_depth_max = registry.gauge("repro_serving_queue_depth_max",
@@ -110,12 +131,12 @@ class ServingMetrics:
 
     def observe(self, rec: RequestRecord) -> None:
         self.records.append(rec)
+        status = ("timeout" if rec.timed_out else
+                  "shed" if rec.shed else
+                  "failed" if rec.failed else
+                  "partial" if rec.partial else "ok")
         if self._reg_live is not None:
             requests, latency, queue_ms, evals, grads, iters = self._reg_live
-            status = ("timeout" if rec.timed_out else
-                      "shed" if rec.shed else
-                      "failed" if rec.failed else
-                      "partial" if rec.partial else "ok")
             requests.labels(status=status).inc()
             if status in ("ok", "partial"):
                 latency.observe(rec.latency_ms)
@@ -123,6 +144,14 @@ class ServingMetrics:
             evals.inc(rec.n_eval)
             grads.inc(rec.n_grad)
             iters.inc(rec.n_iters)
+        if self._reg_sla is not None and rec.sla:
+            s_lat, s_evals, s_degraded, s_requests = self._reg_sla
+            s_requests.labels(sla=rec.sla, status=status).inc()
+            if status in ("ok", "partial"):
+                s_lat.labels(sla=rec.sla).observe(rec.latency_ms)
+            s_evals.labels(sla=rec.sla).inc(rec.n_eval)
+            if rec.degraded:
+                s_degraded.labels(sla=rec.sla).inc()
 
     def observe_queue_depth(self, depth: int) -> None:
         """Admission-queue depth gauge, sampled once per serving round."""
@@ -174,6 +203,35 @@ class ServingMetrics:
             out["qps"] = float("nan")
         return out
 
+    def sla_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-SLA-tier breakdown (snapshot API, DESIGN.md §14): tier name
+        -> {n, n_degraded, n_timed_out, n_shed, p50/p95/p99_ms,
+        evals_per_query, iters_mean}. Only tiered requests appear; an
+        empty dict means the stream ran without an SLA policy."""
+        tiers: Dict[str, List[RequestRecord]] = {}
+        for r in self.records:
+            if r.sla:
+                tiers.setdefault(r.sla, []).append(r)
+        out: Dict[str, Dict[str, float]] = {}
+        for name, recs in tiers.items():
+            done = [r for r in recs
+                    if not (r.timed_out or r.shed or r.failed)]
+            lat = [r.latency_ms for r in done]
+            evals = np.asarray([r.n_eval for r in done], np.float64)
+            iters = np.asarray([r.n_iters for r in done], np.float64)
+            d = {"n": float(len(recs)),
+                 "n_completed": float(len(done)),
+                 "n_degraded": float(sum(r.degraded for r in recs)),
+                 "n_timed_out": float(sum(r.timed_out for r in recs)),
+                 "n_shed": float(sum(r.shed for r in recs)),
+                 "evals_per_query": (float(evals.mean()) if done
+                                     else float("nan")),
+                 "iters_mean": (float(iters.mean()) if done
+                                else float("nan"))}
+            d.update(latency_summary(lat))
+            out[name] = d
+        return out
+
     def report(self, prefix: str = "[serve]") -> str:
         s = self.summary()
         if not s["n_completed"]:
@@ -201,4 +259,12 @@ class ServingMetrics:
             f"iters mean={s['iters_mean']:.0f} max={s['iters_max']:.0f} "
             f"(straggler ratio {straggle:.1f}x)",
         ]
+        for name, t in self.sla_summary().items():
+            lines.append(
+                f"{prefix} sla={name} n={t['n']:.0f} "
+                f"degraded={t['n_degraded']:.0f} "
+                f"timed_out={t['n_timed_out']:.0f} "
+                f"p50={t['p50_ms']:.1f}ms p95={t['p95_ms']:.1f}ms "
+                f"p99={t['p99_ms']:.1f}ms "
+                f"evals/query={t['evals_per_query']:.0f}")
         return "\n".join(lines)

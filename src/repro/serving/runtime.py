@@ -46,6 +46,7 @@ from repro.obs.profile import annotate
 from repro.obs.trace import NULL_TRACER
 from repro.serving.health import ShardHealthTracker
 from repro.serving.metrics import RequestRecord, ServingMetrics
+from repro.serving.sla import SLAPolicy, resolve_tier
 
 
 @dataclasses.dataclass
@@ -55,13 +56,21 @@ class Request:
     timestamp (direct ``submit``); ``deadline`` is seconds of queueing the
     request tolerates before it is dropped as timed out; ``budget_iters``
     caps this request's expansions (SLA tier / anytime search — None means
-    the engine config's uniform cap)."""
+    the engine config's uniform cap); ``sla`` names an explicit tier when
+    the runtime has an ``SLAPolicy`` (None = classify by deadline);
+    ``angle_tau`` overrides the adaptive angle cutoff for this request
+    (adaptive engines only — None = the tier's / engine's value);
+    ``degraded`` records that pressure admitted it below its resolved
+    tier (set by the runtime, not the caller)."""
     rid: int
     query: np.ndarray
     t_arrive: float = 0.0
     entry: Optional[int] = None
     deadline: Optional[float] = None
     budget_iters: Optional[int] = None
+    sla: Optional[str] = None
+    angle_tau: Optional[float] = None
+    degraded: bool = False
 
 
 @dataclasses.dataclass
@@ -106,7 +115,8 @@ class ContinuousRuntime:
                  fault_hook: Optional[Callable[[], float]] = None,
                  shared_fns: Optional[tuple] = None,
                  tracer=NULL_TRACER, trace_site: str = "",
-                 trace_owner: bool = True):
+                 trace_owner: bool = True,
+                 sla_policy: Optional[SLAPolicy] = None):
         if n_lanes < 1:
             raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
         if steps_per_tick < 1:
@@ -122,8 +132,18 @@ class ContinuousRuntime:
         self._now = now_fn
         # bounded admission: beyond max_queue queued requests, submits are
         # load-shed (immediate status="shed" completion) instead of growing
-        # the queue without bound; None = unbounded (previous behavior)
+        # the queue without bound; None = unbounded (previous behavior).
+        # With an SLA policy the ladder degrades BEFORE it sheds: at
+        # max_queue a tiered request is admitted at the policy floor
+        # (smaller cap / tighter tau — cheaper, drains the queue faster)
+        # and only past 2x max_queue is it shed outright.
         self.max_queue = max_queue
+        self.sla_policy = sla_policy
+        # EMA of observed service time (admit -> done), the deadline-aware
+        # admission estimate: a request whose remaining deadline is under
+        # the EMA is degraded one tier at admit instead of being left to
+        # time out
+        self._ema_service_s = 0.0
         # chaos surface (serving/faults.py): consulted once per busy tick;
         # returns extra reported tick-seconds or raises InjectedFault
         self.fault_hook = fault_hook
@@ -150,6 +170,7 @@ class ContinuousRuntime:
         self._queries_np = np.zeros((n_lanes, query_dim), np.float32)
         self._entries_np = np.full((n_lanes,), entry, np.int32)
         self._caps_np = np.full((n_lanes,), engine.cfg.iters(), np.int32)
+        self._taus_np = np.full((n_lanes,), engine.angle_tau, np.float32)
         self._queries_j = jnp.asarray(self._queries_np)
         self._state = engine.idle_state(n_lanes, self.store.n)
         self.completions: List[Completion] = []
@@ -167,9 +188,9 @@ class ContinuousRuntime:
         eng = engine
         spt = steps_per_tick
 
-        def reset(params, store, queries, entries, state, mask, caps):
+        def reset(params, store, queries, entries, state, mask, caps, taus):
             return eng.reset_lanes(params, store, queries, entries, state,
-                                   mask, caps)
+                                   mask, caps, taus)
 
         def tick(params, store, neighbors, queries, state):
             C = eng.n_candidates(neighbors.shape[1])
@@ -193,7 +214,9 @@ class ContinuousRuntime:
     def submit(self, query: np.ndarray, rid: Optional[int] = None,
                entry: Optional[int] = None, deadline: Optional[float] = None,
                t_arrive: Optional[float] = None,
-               budget_iters: Optional[int] = None) -> int:
+               budget_iters: Optional[int] = None,
+               sla: Optional[str] = None,
+               angle_tau: Optional[float] = None) -> int:
         rid = rid if rid is not None else next(self._rid_gen)
         t = t_arrive if t_arrive is not None else self._now()
         tr = self.tracer
@@ -203,23 +226,44 @@ class ContinuousRuntime:
             root = tr.root_for(rid, t0=t)
             self._queue_spans[rid] = tr.begin(
                 "queue", t0=t, rid=rid, site=self.trace_site, parent=root)
-        if self._closing or (self.max_queue is not None
-                             and len(self.queue) >= self.max_queue):
-            self._resolve_sentinel(rid, t, "shed")
+        tier = resolve_tier(self.sla_policy, sla, deadline)
+        degraded = False
+        pressured = (self.max_queue is not None
+                     and len(self.queue) >= self.max_queue)
+        if self._closing or (pressured and (
+                tier is None
+                or len(self.queue) >= 2 * self.max_queue)):
+            self._resolve_sentinel(rid, t, "shed",
+                                   sla=tier.name if tier else "")
             return rid
+        eff = tier
+        if pressured:
+            # degrade-before-shed: admit at the policy floor instead of
+            # dropping; the record keeps the ORIGINAL tier name so
+            # per-tier degrade counts mean "tier-X traffic that was
+            # degraded", with ``degraded`` carrying the outcome
+            eff = self.sla_policy.floor()
+            degraded = eff.name != tier.name
+        if eff is not None:
+            if budget_iters is None:
+                budget_iters = eff.iter_cap
+            if angle_tau is None:
+                angle_tau = eff.angle_tau
         self.queue.append(Request(rid, np.asarray(query, np.float32), t,
-                                  entry, deadline, budget_iters))
+                                  entry, deadline, budget_iters,
+                                  sla=tier.name if tier else sla,
+                                  angle_tau=angle_tau, degraded=degraded))
         return rid
 
     def _resolve_sentinel(self, rid: int, t_arrive: float,
-                          status: str) -> Completion:
+                          status: str, sla: str = "") -> Completion:
         """Resolve a request WITHOUT searching (shed / failed): the rid
         completes exactly once with ids -1 / scores -inf, flagged by
         ``status`` — downstream consumers never hang on it."""
         now = self._now()
         rec = RequestRecord(rid, t_arrive, now, now,
                             shed=(status == "shed"),
-                            failed=(status == "failed"))
+                            failed=(status == "failed"), sla=sla)
         k = self.engine.cfg.k
         c = Completion(rid, np.full((k,), -1, np.int32),
                        np.full((k,), -np.inf, np.float32), 0, 0, 0, -1,
@@ -247,7 +291,8 @@ class ContinuousRuntime:
         out = []
         while self.queue:
             req = self.queue.popleft()
-            out.append(self._resolve_sentinel(req.rid, req.t_arrive, "shed"))
+            out.append(self._resolve_sentinel(req.rid, req.t_arrive, "shed",
+                                              sla=req.sla or ""))
         return out
 
     def fail_all(self) -> List[Completion]:
@@ -320,7 +365,8 @@ class ContinuousRuntime:
                 # resolve exactly once
                 k = self.engine.cfg.k
                 rec = RequestRecord(req.rid, req.t_arrive, now, now,
-                                    timed_out=True)
+                                    timed_out=True, sla=req.sla or "",
+                                    degraded=req.degraded)
                 self.metrics.observe(rec)
                 c = Completion(req.rid, np.full((k,), -1, np.int32),
                                np.full((k,), -np.inf, np.float32),
@@ -335,6 +381,22 @@ class ContinuousRuntime:
                     if self._trace_owner and tr.sampled(req.rid):
                         tr.finish_request(req.rid, t1=now, status="timeout")
                 continue
+            cap, tau = req.budget_iters, req.angle_tau
+            if (self.sla_policy is not None and req.sla
+                    and req.deadline is not None
+                    and self._ema_service_s > 0.0
+                    and req.deadline - (now - req.t_arrive)
+                    < self._ema_service_s):
+                # deadline-aware degrade: the remaining budget is under
+                # the typical service time at this tier — drop one rung
+                # (cheaper knobs finish sooner) rather than admitting
+                # work that will blow its deadline anyway
+                down = self.sla_policy.degrade(self.sla_policy.get(req.sla))
+                if down is not None:
+                    cap = (down.iter_cap if down.iter_cap is not None
+                           else cap)
+                    tau = down.angle_tau
+                    req.degraded = True
             lane = free.pop(0)
             mask[lane] = True
             if tr.enabled:
@@ -347,9 +409,10 @@ class ContinuousRuntime:
             self._queries_np[lane] = req.query
             self._entries_np[lane] = (req.entry if req.entry is not None
                                       else self.default_entry)
-            self._caps_np[lane] = (req.budget_iters
-                                   if req.budget_iters is not None
+            self._caps_np[lane] = (cap if cap is not None
                                    else self.engine.cfg.iters())
+            self._taus_np[lane] = (tau if tau is not None
+                                   else self.engine.angle_tau)
         if not mask.any():
             return dropped
         self._queries_j = jnp.asarray(self._queries_np)
@@ -357,7 +420,8 @@ class ContinuousRuntime:
             self._state = self._reset_fn(
                 self.params, self.store, self._queries_j,
                 jnp.asarray(self._entries_np), self._state,
-                jnp.asarray(mask), jnp.asarray(self._caps_np))
+                jnp.asarray(mask), jnp.asarray(self._caps_np),
+                jnp.asarray(self._taus_np))
         return dropped
 
     def _tick(self) -> None:
@@ -397,10 +461,15 @@ class ContinuousRuntime:
         out = []
         for lane in ready:
             req = self._lane_req[lane]
+            service = now - self._admit_time[lane]
+            self._ema_service_s = (service if self._ema_service_s == 0.0
+                                   else 0.9 * self._ema_service_s
+                                   + 0.1 * service)
             rec = RequestRecord(req.rid, req.t_arrive,
                                 self._admit_time[lane], now,
                                 int(n_eval[lane]), int(n_grad[lane]),
-                                int(n_iters[lane]))
+                                int(n_iters[lane]), sla=req.sla or "",
+                                degraded=req.degraded)
             c = Completion(req.rid, ids[lane].copy(), scores[lane].copy(),
                            int(n_eval[lane]), int(n_grad[lane]),
                            int(n_iters[lane]), lane, rec,
@@ -556,7 +625,8 @@ class ContinuousRuntime:
                             deadline=r.deadline,
                             t_arrive=(t0 + r.t_arrive) if realtime
                             else self._now(),
-                            budget_iters=r.budget_iters)
+                            budget_iters=r.budget_iters, sla=r.sla,
+                            angle_tau=r.angle_tau)
             if realtime and not self.queue and not self.in_flight and pending:
                 dt = pending[0].t_arrive - (self._now() - t0)
                 if dt > 0:
@@ -593,10 +663,17 @@ class ShardedContinuousRuntime:
                  max_queue: Optional[int] = None,
                  tick_deadline_s: Optional[float] = None,
                  k_failures: int = 3, cooldown_rounds: int = 8,
-                 fault_plan=None, tracer=NULL_TRACER):
+                 fault_plan=None, tracer=NULL_TRACER,
+                 sla_policy: Optional[SLAPolicy] = None):
         self.engine = engine
         self.index = index
         self.max_queue = max_queue
+        # tier resolution happens HERE, once per rid: shards receive the
+        # resolved concrete knobs (cap/tau), never the policy — per-shard
+        # classification could disagree (admit clocks differ) and a rid
+        # must run the same tier on every partition
+        self.sla_policy = sla_policy
+        self._sla_info: Dict[int, tuple] = {}
         self.tick_deadline_s = tick_deadline_s
         self._closing = False
         self.tracer = tracer
@@ -659,7 +736,9 @@ class ShardedContinuousRuntime:
     def submit(self, query: np.ndarray, rid: Optional[int] = None,
                deadline: Optional[float] = None,
                t_arrive: Optional[float] = None,
-               budget_iters: Optional[int] = None) -> int:
+               budget_iters: Optional[int] = None,
+               sla: Optional[str] = None,
+               angle_tau: Optional[float] = None) -> int:
         """No per-request ``entry`` here (unlike the single-partition
         runtime): entry ids are partition-LOCAL rows, so one global value
         cannot mean anything across shards — each shard searches from its
@@ -673,12 +752,17 @@ class ShardedContinuousRuntime:
             # the merge layer owns the root's lifecycle; per-shard
             # sub-runtimes parent their phase spans to it
             tr.root_for(rid, t0=t)
-        if self._closing or (self.max_queue is not None
-                             and self.queued >= self.max_queue):
+        tier = resolve_tier(self.sla_policy, sla, deadline)
+        degraded = False
+        pressured = (self.max_queue is not None
+                     and self.queued >= self.max_queue)
+        if self._closing or (pressured and (
+                tier is None or self.queued >= 2 * self.max_queue)):
             # shed at the TOP level: per-shard sheds would desync rid
             # resolution across the fan-out
             now = now_fn()
-            rec = RequestRecord(rid, t, now, now, shed=True)
+            rec = RequestRecord(rid, t, now, now, shed=True,
+                                sla=tier.name if tier else "")
             k = self.engine.cfg.k
             self.metrics.observe(rec)
             self.completions.append(Completion(
@@ -690,10 +774,23 @@ class ShardedContinuousRuntime:
                         parent=tr.root_for(rid), status="shed")
                 tr.finish_request(rid, t1=now, status="shed")
             return rid
+        eff = tier
+        if pressured:
+            # degrade-before-shed (same ladder as the single runtime)
+            eff = self.sla_policy.floor()
+            degraded = eff.name != tier.name
+        if eff is not None:
+            if budget_iters is None:
+                budget_iters = eff.iter_cap
+            if angle_tau is None:
+                angle_tau = eff.angle_tau
+            self._sla_info[rid] = (tier.name, degraded)
         for s, rt in enumerate(self.runtimes):
             if self.health.serving(s):
                 rt.submit(query, rid=rid, deadline=deadline, t_arrive=t,
-                          budget_iters=budget_iters)
+                          budget_iters=budget_iters,
+                          sla=tier.name if tier else None,
+                          angle_tau=angle_tau)
             else:
                 # breaker open: synthesize this shard's part as failed up
                 # front so the rid's merge window is never missing a slot
@@ -796,6 +893,9 @@ class ShardedContinuousRuntime:
                 status = "partial" if n_failed else "ok"
             live_p = [p for _, p in live]
             src = live_p if live_p else parts
+            sla_name, degraded = self._sla_info.pop(rid, ("", False))
+            # a per-shard deadline degrade counts at the merged level too
+            degraded = degraded or any(p.record.degraded for p in parts)
             rec = RequestRecord(
                 rid, min(p.record.t_arrive for p in parts),
                 max(p.record.t_admit for p in src),
@@ -805,7 +905,8 @@ class ShardedContinuousRuntime:
                 max((p.n_iters for p in live_p), default=0),
                 timed_out=(status == "timeout"), shed=(status == "shed"),
                 failed=(status == "failed"),
-                partial=(status == "partial"))
+                partial=(status == "partial"),
+                sla=sla_name, degraded=degraded)
             c = Completion(rid, ids, scores,
                            rec.n_eval, rec.n_grad, rec.n_iters, -1, rec,
                            max(p.epoch for p in parts), status=status,
@@ -899,7 +1000,8 @@ class ShardedContinuousRuntime:
                 self.submit(r.query, rid=r.rid, deadline=r.deadline,
                             t_arrive=(t0 + r.t_arrive) if realtime
                             else now_fn(),
-                            budget_iters=r.budget_iters)
+                            budget_iters=r.budget_iters, sla=r.sla,
+                            angle_tau=r.angle_tau)
             if realtime and not self.queued and not self.in_flight \
                     and not self._partial and pending:
                 dt = pending[0].t_arrive - (now_fn() - t0)

@@ -1,0 +1,372 @@
+"""Adaptive candidate-set sizing + SLA tier tests (DESIGN.md §14).
+
+Pins the adaptive contract: ``adaptive='off'`` is bit-identical to the
+pre-adaptive engine even with the knobs set (single, sharded, continuous);
+the per-lane mask is a PREFIX of the ``c_max`` block (mask-not-reshape);
+fused and unfused adaptive paths agree at fp32; budget exhaustion
+mid-adaptation (per-lane ``iter_caps`` × per-lane ``taus``) keeps the pool
+monotone and reproduces a fresh search at the same effective budget —
+through the continuous runtime, single and sharded. Plus the SLA policy
+ladder unit behavior, degrade-before-shed admission, and the per-tier
+metrics surfaces.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EngineOptions, SearchConfig, build_engine,
+                        make_family_measure)
+from repro.core.engine import _select_top_c
+from repro.core.sharded import (build_sharded_index, shard_stores,
+                                sharded_search_stores)
+from repro.graph import build_l2_graph
+from repro.obs import Registry
+from repro.serving import (ContinuousRuntime, Request, RequestRecord,
+                           ServingMetrics, ShardedContinuousRuntime,
+                           SLAClass, SLAPolicy, default_policy, load_policy,
+                           policy_from_spec, resolve_tier)
+
+DIM = 16
+
+
+@pytest.fixture(scope="module")
+def system():
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(600, DIM)).astype(np.float32)
+    queries = rng.normal(size=(12, DIM)).astype(np.float32)
+    graph = build_l2_graph(base, m=8, k_construction=24)
+    return dict(base=base, queries=queries, graph=graph)
+
+
+def _measure(family):
+    return make_family_measure(family, jax.random.PRNGKey(0), DIM)
+
+
+def _jarrs(s):
+    Q = s["queries"].shape[0]
+    return (jnp.asarray(s["base"]), jnp.asarray(s["graph"].neighbors),
+            jnp.asarray(s["queries"]),
+            jnp.full((Q,), s["graph"].entry, jnp.int32))
+
+
+CFG = SearchConfig(k=5, ef=24, mode="guitar", budget=6, alpha=1.2)
+
+
+def _res_np(res):
+    return tuple(np.asarray(x) for x in
+                 (res.ids, res.scores, res.n_eval, res.n_grad, res.n_iters))
+
+
+def _assert_same(ra, rb):
+    for a, b in zip(_res_np(ra), _res_np(rb)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# adaptive='off' inertness — the acceptance-criteria pin
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["deepfm", "mlp"])
+@pytest.mark.parametrize("fused", [False, True])
+def test_adaptive_off_knobs_inert(system, family, fused):
+    """adaptive='off' with c_max/angle_tau set (and per-lane taus passed)
+    is bit-identical — ids AND scores AND counters — to the plain engine:
+    the knobs must be dead weight unless adaptive='angle'."""
+    m = _measure(family)
+    base_j, nbrs_j, queries_j, entries = _jarrs(system)
+    plain = build_engine(m, CFG, EngineOptions(fused=fused))
+    knobs = build_engine(m, CFG, EngineOptions(fused=fused, adaptive="off",
+                                               c_max=12, angle_tau=1.4))
+    r_plain = plain.search(m.params, base_j, nbrs_j, queries_j, entries)
+    r_knobs = knobs.search(m.params, base_j, nbrs_j, queries_j, entries,
+                           taus=jnp.full((queries_j.shape[0],), 1.4,
+                                         jnp.float32))
+    _assert_same(r_plain, r_knobs)
+
+
+def test_adaptive_neutral_config_matches_off(system):
+    """adaptive='angle' with c_max == budget and tau disabled selects the
+    same candidates as 'off' (the band mask is unchanged), so results
+    match bit-for-bit on the unfused path — the masked call graph alters
+    nothing when the mask is all-live."""
+    m = _measure("mlp")
+    base_j, nbrs_j, queries_j, entries = _jarrs(system)
+    off = build_engine(m, CFG, EngineOptions())
+    on = build_engine(m, CFG, EngineOptions(adaptive="angle",
+                                            c_max=CFG.budget,
+                                            angle_tau=0.0))
+    _assert_same(off.search(m.params, base_j, nbrs_j, queries_j, entries),
+                 on.search(m.params, base_j, nbrs_j, queries_j, entries))
+
+
+@pytest.mark.parametrize("family", ["deepfm", "mlp"])
+def test_adaptive_fused_unfused_parity(system, family):
+    """Fused (in-kernel tile-skipping) and unfused adaptive paths agree at
+    fp32: identical ids, scores within float-reassociation tolerance."""
+    m = _measure(family)
+    base_j, nbrs_j, queries_j, entries = _jarrs(system)
+    opts = dict(adaptive="angle", c_max=10, angle_tau=1.55)
+    r_u = build_engine(m, CFG, EngineOptions(fused=False, **opts)).search(
+        m.params, base_j, nbrs_j, queries_j, entries)
+    r_f = build_engine(m, CFG, EngineOptions(fused=True, **opts)).search(
+        m.params, base_j, nbrs_j, queries_j, entries)
+    np.testing.assert_array_equal(np.asarray(r_u.ids), np.asarray(r_f.ids))
+    np.testing.assert_allclose(np.asarray(r_u.scores),
+                               np.asarray(r_f.scores), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(r_u.n_iters),
+                                  np.asarray(r_f.n_iters))
+
+
+# ---------------------------------------------------------------------------
+# the mask-not-reshape contract
+# ---------------------------------------------------------------------------
+
+def test_adaptive_mask_is_prefix_of_block():
+    """Band, tau cutoff, and validity are all monotone in the sorted angle
+    key, so the selected mask can never go dead-then-live along the block —
+    the property that lets fused kernels skip whole tail tiles."""
+    rng = np.random.default_rng(2)
+    key = rng.uniform(0.1, 3.0, size=(16, 24)).astype(np.float32)
+    key[rng.random((16, 24)) < 0.2] = np.inf          # invalid neighbors
+    theta = key.min(axis=1)
+    in_range = jnp.asarray(key <= 1.4 * theta[:, None] + 1e-6)
+    valid = jnp.asarray(np.isfinite(key))
+    tau = jnp.asarray(rng.uniform(0.5, 2.5, size=(16,)).astype(np.float32))
+    _, mask = _select_top_c(jnp.asarray(key), in_range, valid, CFG,
+                            c_max=12, tau=tau)
+    mask = np.asarray(mask)
+    assert mask.shape[1] == 12
+    assert (mask[:, 1:] <= mask[:, :-1]).all(), "mask is not a prefix"
+
+
+def test_adaptive_tau_shrinks_effective_c(system):
+    """A tighter tau strictly reduces effective evals and never returns a
+    result a wider tau's pool ordering contradicts (scores still sorted)."""
+    m = _measure("mlp")
+    base_j, nbrs_j, queries_j, entries = _jarrs(system)
+    opts = EngineOptions(adaptive="angle", c_max=12)
+    eng = build_engine(m, CFG, opts)
+    Q = queries_j.shape[0]
+    loose = eng.search(m.params, base_j, nbrs_j, queries_j, entries,
+                       taus=jnp.full((Q,), 0.0, jnp.float32))
+    tight = eng.search(m.params, base_j, nbrs_j, queries_j, entries,
+                       taus=jnp.full((Q,), 1.3, jnp.float32))
+    assert np.asarray(tight.n_eval).sum() < np.asarray(loose.n_eval).sum()
+    for res in (loose, tight):
+        sc = np.asarray(res.scores)
+        with np.errstate(invalid="ignore"):
+            d = np.diff(sc, axis=1)
+        fin = np.isfinite(sc[:, 1:]) & np.isfinite(sc[:, :-1])
+        assert (d[fin] <= 1e-6).all(), "top-k not sorted"
+        # -inf padding (tau-starved pools) only ever trails real hits
+        assert (np.isfinite(sc[:, :-1]) | ~np.isfinite(sc[:, 1:])).all()
+
+
+# ---------------------------------------------------------------------------
+# adaptive × per-lane iter_caps: budget exhaustion mid-adaptation
+# ---------------------------------------------------------------------------
+
+def _mixed_caps_taus(Q, full_cap):
+    caps = np.asarray([2 + (i % 3) * 5 if i % 2 else full_cap
+                       for i in range(Q)], np.int32)
+    taus = np.asarray([0.0 if i % 3 == 0 else 1.4 + 0.2 * (i % 2)
+                       for i in range(Q)], np.float32)
+    return caps, taus
+
+
+def test_adaptive_caps_monotone_pool(system):
+    """Budget exhaustion mid-adaptation: each debug step's pool is
+    elementwise no worse than the previous one (insertion only improves a
+    desc-sorted pool), including lanes frozen by their iter cap."""
+    m = _measure("mlp")
+    base_j, nbrs_j, queries_j, entries = _jarrs(system)
+    eng = build_engine(m, CFG, EngineOptions(adaptive="angle", c_max=10,
+                                             angle_tau=1.5))
+    Q = queries_j.shape[0]
+    caps, taus = _mixed_caps_taus(Q, CFG.iters())
+    pools = []
+    res = eng.search_debug(m.params, base_j, nbrs_j, queries_j, entries,
+                           iter_caps=jnp.asarray(caps),
+                           taus=jnp.asarray(taus),
+                           on_step=lambda i, s: pools.append(
+                               np.asarray(s.pool_scores)))
+    assert len(pools) > 2
+    for prev, cur in zip(pools, pools[1:]):
+        assert (cur >= prev - 1e-7).all() | np.isneginf(prev).any(), \
+            "pool state regressed across a step"
+        # -inf slots may fill; filled slots never get worse
+        filled = np.isfinite(prev)
+        assert (cur[filled] >= prev[filled] - 1e-7).all()
+    assert (np.asarray(res.n_iters) <= caps).all()
+
+
+def test_adaptive_caps_continuous_bit_identical(system):
+    """Tiered budgets through the continuous runtime == a fresh one-shot
+    search at the same effective (cap, tau) — per query, bit-identical ids
+    AND scores, with lane recycling mid-adaptation."""
+    m = _measure("mlp")
+    s = system
+    base_j, nbrs_j, queries_j, entries = _jarrs(s)
+    eng = build_engine(m, CFG, EngineOptions(adaptive="angle", c_max=10,
+                                             angle_tau=1.5))
+    Q = queries_j.shape[0]
+    caps, taus = _mixed_caps_taus(Q, CFG.iters())
+    ref = eng.search(m.params, base_j, nbrs_j, queries_j, entries,
+                     iter_caps=jnp.asarray(caps), taus=jnp.asarray(taus))
+    rt = ContinuousRuntime(eng, m.params, s["base"], s["graph"].neighbors,
+                           n_lanes=4, query_dim=DIM,
+                           entry=s["graph"].entry, steps_per_tick=3)
+    order = np.random.default_rng(7).permutation(Q)
+    stream = [Request(rid=int(i), query=s["queries"][i],
+                      budget_iters=int(caps[i]), angle_tau=float(taus[i]))
+              for i in order]
+    comps = rt.run_stream(stream, realtime=False)
+    by = {c.rid: c for c in comps}
+    ids_ref, sc_ref = np.asarray(ref.ids), np.asarray(ref.scores)
+    for i in range(Q):
+        np.testing.assert_array_equal(by[i].ids, ids_ref[i])
+        np.testing.assert_array_equal(by[i].scores, sc_ref[i])
+        assert by[i].n_iters == int(ref.n_iters[i])
+
+
+def test_adaptive_caps_sharded_bit_identical(system):
+    """Same pin, sharded: the sharded continuous runtime under per-request
+    (cap, tau) == sharded_search_stores with the same per-lane arrays
+    broadcast to every shard."""
+    m = _measure("mlp")
+    s = system
+    idx = build_sharded_index(s["base"], n_shards=2, m=8, k_construction=24)
+    opts = EngineOptions(adaptive="angle", c_max=10, angle_tau=1.5)
+    eng = build_engine(m, CFG, opts)
+    Q = s["queries"].shape[0]
+    caps, taus = _mixed_caps_taus(Q, CFG.iters())
+    ref = sharded_search_stores(m, shard_stores(idx), idx, s["queries"],
+                                CFG, options=opts,
+                                iter_caps=jnp.asarray(caps),
+                                taus=jnp.asarray(taus))
+    rt = ShardedContinuousRuntime(eng, m.params, idx, n_lanes=3,
+                                  query_dim=DIM, steps_per_tick=2)
+    stream = [Request(rid=i, query=s["queries"][i],
+                      budget_iters=int(caps[i]), angle_tau=float(taus[i]))
+              for i in range(Q)]
+    comps = rt.run_stream(stream, realtime=False)
+    by = {c.rid: c for c in comps}
+    for i in range(Q):
+        np.testing.assert_array_equal(by[i].ids, np.asarray(ref.ids)[i])
+        np.testing.assert_array_equal(by[i].scores,
+                                      np.asarray(ref.scores)[i])
+
+
+# ---------------------------------------------------------------------------
+# SLA policy ladder
+# ---------------------------------------------------------------------------
+
+def test_sla_policy_classify_degrade_floor():
+    p = default_policy()
+    assert [c.name for c in p.classes] == ["premium", "standard", "economy"]
+    assert p.classify(None).name == "premium"
+    assert p.classify(0.3).name == "premium"
+    assert p.classify(0.1).name == "standard"
+    assert p.classify(0.01).name == "economy"
+    assert p.degrade(p.get("premium")).name == "standard"
+    assert p.degrade(p.get("standard")).name == "economy"
+    assert p.degrade(p.get("economy")) is None
+    assert p.floor().name == "economy"
+    assert load_policy("default").classes == p.classes
+    # resolution: explicit tier name wins over deadline classification
+    assert resolve_tier(p, "economy", 10.0).name == "economy"
+    assert resolve_tier(p, None, 0.1).name == "standard"
+    assert resolve_tier(None, "economy", 0.1) is None
+
+
+def test_sla_policy_spec_validation():
+    spec = [{"name": "gold", "min_deadline_s": 0.1, "iter_cap": 32},
+            {"name": "bronze", "angle_tau": 1.5}]
+    p = policy_from_spec(spec)
+    assert p.get("gold").iter_cap == 32
+    assert p.get("bronze").angle_tau == 1.5
+    with pytest.raises(ValueError, match="unknown SLA tier keys"):
+        policy_from_spec([{"name": "x", "iters": 3}])
+    with pytest.raises(ValueError, match="duplicate"):
+        SLAPolicy((SLAClass("a"), SLAClass("a")))
+    with pytest.raises(ValueError):
+        SLAPolicy(())
+
+
+def test_degrade_before_shed(system):
+    """Queue pressure between max_queue and 2x max_queue admits at the
+    floor tier (degraded, not dropped); only past 2x is a request shed —
+    and the records carry the ORIGINAL resolved tier name throughout."""
+    m = _measure("mlp")
+    s = system
+    eng = build_engine(m, CFG, EngineOptions(adaptive="angle"))
+    rt = ContinuousRuntime(eng, m.params, s["base"], s["graph"].neighbors,
+                           n_lanes=2, query_dim=DIM,
+                           entry=s["graph"].entry, steps_per_tick=2,
+                           max_queue=2, sla_policy=default_policy())
+    rt.warmup(s["queries"][0])
+    for i in range(6):
+        rt.submit(s["queries"][i], rid=i)   # no deadline -> premium
+    comps = []
+    while rt.queue or rt.in_flight:
+        comps += rt.step_once()
+    comps += rt.pop_completions()
+    by = {c.rid: c for c in comps}
+    assert len(by) == 6
+    shed = [i for i in range(6) if by[i].record.shed]
+    degraded = [i for i in range(6) if by[i].record.degraded]
+    assert shed == [4, 5]
+    assert degraded == [2, 3]
+    assert all(by[i].record.sla == "premium" for i in range(6))
+    tiers = rt.metrics.sla_summary()
+    assert tiers["premium"]["n"] == 6
+    assert tiers["premium"]["n_degraded"] == 2
+    assert tiers["premium"]["n_shed"] == 2
+
+
+# ---------------------------------------------------------------------------
+# per-tier metrics surfaces
+# ---------------------------------------------------------------------------
+
+def _rec(rid, sla, lat_s=0.01, **kw):
+    return RequestRecord(rid, 0.0, 0.001, lat_s, n_eval=40, n_iters=8,
+                         sla=sla, **kw)
+
+
+def test_metrics_sla_summary_and_exposition():
+    mts = ServingMetrics(4)
+    reg = Registry()
+    mts.bind_registry(reg)
+    mts.observe(_rec(0, "premium"))
+    mts.observe(_rec(1, "premium", degraded=True))
+    mts.observe(_rec(2, "economy", lat_s=0.002))
+    mts.observe(RequestRecord(3, 0.0, 0.1, 0.1, timed_out=True,
+                              sla="economy"))
+    mts.observe(_rec(4, ""))            # untiered stays out of sla views
+    t = mts.sla_summary()
+    assert set(t) == {"premium", "economy"}
+    assert t["premium"]["n"] == 2 and t["premium"]["n_degraded"] == 1
+    assert t["economy"]["n_timed_out"] == 1
+    assert t["premium"]["evals_per_query"] == 40.0
+    text = reg.render_text()
+    assert 'repro_serving_sla_latency_ms' in text
+    assert 'sla="premium"' in text
+    assert 'repro_serving_sla_degraded_total{sla="premium"} 1' in text
+    assert ('repro_serving_sla_requests_total{sla="economy",'
+            'status="timeout"} 1') in text
+    # per-tier lines surface in the human report too
+    rep = mts.report()
+    assert "sla=premium" in rep and "degraded=1" in rep
+
+
+def test_serve_sla_mix_parser():
+    from repro.launch.serve import _parse_sla_mix
+    p = default_policy()
+    mix = _parse_sla_mix("premium:0.3,standard:0.4,economy:0.3", p)
+    assert len(mix) == 100
+    assert mix.count("premium") == 30 and mix.count("economy") == 30
+    with pytest.raises(SystemExit, match="not in policy"):
+        _parse_sla_mix("gold:1.0", p)
